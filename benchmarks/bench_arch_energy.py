@@ -1,0 +1,31 @@
+"""Beyond-paper: the paper's energy axis applied to the 10 assigned LM
+architectures — J/token under each hardware domain for 4-bit VMM execution
+at the relaxed error budget (the Fig. 11 regime), via the energy meter."""
+import time
+
+import repro.configs as cfgs
+from repro.models import matmul_shapes
+from repro.tdsim import energy_meter, solve_td_policy
+
+SIGMA = 2.0
+
+
+def run() -> list[str]:
+    rows = []
+    t0 = time.perf_counter()
+    pol = solve_td_policy(4, 4, 576, sigma_max=SIGMA)
+    for name in cfgs.ARCH_NAMES:
+        cfg = cfgs.get(name).model
+        shapes = matmul_shapes(cfg)
+        reports = energy_meter.compare_domains(shapes, pol, sigma_max=SIGMA)
+        best = min(reports, key=lambda d: reports[d].total_energy_per_token)
+        rows.append(
+            f"arch_energy,{name},"
+            + ",".join(f"{d}_J_per_tok={r.total_energy_per_token:.3e}"
+                       for d, r in reports.items())
+            + f",macs_per_tok={reports['td'].total_macs_per_token:.3e},"
+            f"winner={best}")
+    us = (time.perf_counter() - t0) * 1e6 / len(cfgs.ARCH_NAMES)
+    rows.append(f"arch_energy,us_per_call={us:.0f},"
+                f"derived=archs={len(cfgs.ARCH_NAMES)}")
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 3c: eta_ESNR of the three delay elements across supply voltage."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cells, constants as C
+
+
+def run() -> list[str]:
+    rows = []
+    vdds = np.linspace(C.VDD_MIN + 0.05, C.VDD_NOM, 9)
+    t0 = time.perf_counter()
+    for v in vdds:
+        vals = {n: float(cells.eta_esnr_vs_vdd(n, jnp.asarray(float(v))))
+                for n in C.DELAY_CELLS}
+        best = max(vals, key=vals.get)
+        rows.append(
+            f"fig3c_eta_esnr,vdd={v:.2f},"
+            + ",".join(f"{k}={x:.4e}" for k, x in vals.items())
+            + f",best={best}")
+    us = (time.perf_counter() - t0) * 1e6 / len(vdds)
+    rows.append(f"fig3c_eta_esnr,us_per_call={us:.1f},"
+                f"derived=tristate_best_everywhere="
+                f"{all('best=tristate' in r for r in rows)}")
+    return rows

@@ -1,0 +1,51 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints
+the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck.  Cells not yet dry-run are reported as pending."""
+import glob
+import json
+import os
+import time
+
+import repro.configs as cfgs
+
+ART_DIR = os.environ.get("REPRO_DRYRUN_ART", "artifacts/dryrun")
+
+
+def run() -> list[str]:
+    rows = []
+    t0 = time.perf_counter()
+    found = {}
+    for path in glob.glob(os.path.join(ART_DIR, "*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        key = (d.get("arch"), d.get("shape"), d.get("mesh"),
+               d.get("td_mode", "precise"))
+        found[key] = d
+    n = 0
+    for arch, shape, skip in cfgs.cells(include_skips=True):
+        if skip:
+            rows.append(f"roofline,{arch},{shape},16x16,"
+                        f"SKIP=long-context-needs-subquadratic")
+            continue
+        d = found.get((arch, shape, "16x16", "precise"))
+        if d is None:
+            rows.append(f"roofline,{arch},{shape},16x16,pending")
+            continue
+        if not d.get("ok"):
+            rows.append(f"roofline,{arch},{shape},16x16,"
+                        f"FAILED={d.get('error', '?')[:80]}")
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"roofline,{arch},{shape},{d['mesh']},"
+            f"compute_s={r['compute_s']:.4f},memory_s={r['memory_s']:.4f},"
+            f"collective_s={r['collective_s']:.4f},"
+            f"dominant={r['dominant']},step_s={r['step_s']:.4f},"
+            f"mfu={r['mfu']:.4f},"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f}")
+        n += 1
+    us = (time.perf_counter() - t0) * 1e6 / max(n, 1)
+    rows.append(f"roofline,us_per_call={us:.0f},derived=cells_present={n}")
+    return rows

@@ -1,0 +1,33 @@
+"""Fig. 7: hybrid vs SAR TDC energy for the ResNet18 decompositions
+(chain length 576/M=8, 288/M=16, 144/M=32) across bit widths."""
+import time
+
+from repro.core import tdc
+
+
+def run() -> list[str]:
+    rows = []
+    t0 = time.perf_counter()
+    n = 0
+    crossover_ok = True
+    for bits in (1, 2, 4, 8):
+        for chain_n, m in ((144, 32), (288, 16), (576, 8)):
+            e_h = tdc.tdc_energy_per_vmm(chain_n, bits, 1, m=m,
+                                         arch="hybrid")
+            e_s = tdc.tdc_energy_per_vmm(chain_n, bits, 1, m=m, arch="sar")
+            rows.append(f"fig7_tdc,B={bits},N={chain_n},M={m},"
+                        f"hybrid_J={e_h:.3e},sar_J={e_s:.3e},"
+                        f"winner={'hybrid' if e_h < e_s else 'sar'}")
+            n += 1
+    # paper claims: SAR wins at B=1 (baseline chain), hybrid wins B>=2
+    e_h1 = tdc.tdc_energy_per_vmm(576, 1, 1, m=8, arch="hybrid")
+    e_s1 = tdc.tdc_energy_per_vmm(576, 1, 1, m=8, arch="sar")
+    for b in (2, 4, 8):
+        if tdc.tdc_energy_per_vmm(576, b, 1, m=8, arch="hybrid") >= \
+                tdc.tdc_energy_per_vmm(576, b, 1, m=8, arch="sar"):
+            crossover_ok = False
+    us = (time.perf_counter() - t0) * 1e6 / n
+    rows.append(f"fig7_tdc,us_per_call={us:.1f},"
+                f"derived=sar_wins_b1={e_s1 < e_h1},"
+                f"hybrid_wins_b2plus={crossover_ok}")
+    return rows

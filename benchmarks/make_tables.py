@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_tables
+"""
+import glob
+import json
+import os
+
+import repro.configs as cfgs
+
+ART = os.environ.get("REPRO_DRYRUN_ART", "artifacts/dryrun")
+
+
+def load(mesh_tag: str, suffix: str = "") -> dict:
+    out = {}
+    for p in glob.glob(os.path.join(ART, f"*__{mesh_tag}{suffix}.json")):
+        d = json.load(open(p))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def roofline_table() -> str:
+    single = load("16x16")
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | step_s | MFU | useful |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for arch, shape, skip in cfgs.cells(include_skips=True):
+        if skip:
+            lines.append(f"| {arch} | {shape} | — | — | — | SKIP "
+                         f"(full-attention arch, needs sub-quadratic) | — | — | — |")
+            continue
+        d = single.get((arch, shape))
+        if d is None or not d.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAILED/pending |  |  |  |  |  |  |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.5f} | "
+            f"{r['dominant']} | {r['step_s']:.4f} | {r['mfu']:.4f} | "
+            f"{r['useful_flops_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def multipod_table() -> str:
+    multi = load("2x16x16", "__scan")
+    multi.update(load("2x16x16"))
+    lines = ["| arch | shape | compile | chips | collectives | "
+             "memory (args+temp per chip) |",
+             "|---|---|---|---|---|---|"]
+    for arch, shape, skip in cfgs.cells(include_skips=False):
+        d = multi.get((arch, shape))
+        if d is None:
+            lines.append(f"| {arch} | {shape} | pending |  |  |  |")
+            continue
+        if not d.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAILED |  |  | "
+                         f"{d.get('error','')[:60]} |")
+            continue
+        cnt = sum(d["collectives"]["counts"].values())
+        mem = d.get("memory_analysis", "")
+        import re
+        m = re.search(r"argument_size_in_bytes=(\d+)", mem)
+        t = re.search(r"temp_size_in_bytes=(\d+)", mem)
+        args_gb = int(m.group(1)) / 1e9 if m else 0
+        temp_gb = int(t.group(1)) / 1e9 if t else 0
+        lines.append(f"| {arch} | {shape} | OK ({d['t_compile_s']:.0f}s) | "
+                     f"{d['chips']} | {cnt} | "
+                     f"{args_gb:.2f} + {temp_gb:.2f} GB |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run roofline — single pod 16x16 (256 chips)\n")
+    print(roofline_table())
+    print("\n## Multi-pod dry-run — 2x16x16 (512 chips)\n")
+    print(multipod_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Design-space explorer: winner-region map over (N, B) for a given error
+budget + the noise-tolerance -> energy feedback loop on the paper's CNN.
+
+    PYTHONPATH=src python examples/hw_design_explorer.py [--sigma 2.0]
+"""
+import argparse
+
+from repro.core import design_space as ds
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sigma", type=float, default=None,
+                    help="error budget in output LSB (default: exact)")
+    ap.add_argument("--metric", default="e_mac",
+                    choices=["e_mac", "throughput", "area_per_mac"])
+    args = ap.parse_args()
+    sigma = ds.sigma_exact() if args.sigma is None else args.sigma
+
+    ns = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
+    bs = (1, 2, 4, 8)
+    tag = {"td": "T", "analog": "A", "digital": "D"}
+
+    print(f"winner map, metric={args.metric}, sigma_max={sigma:.3f} "
+          f"(T=time-domain A=analog D=digital)")
+    print("        " + " ".join(f"B={b}" for b in bs))
+    for n in ns:
+        row = []
+        for b in bs:
+            w = ds.best_domain(n, b, sigma, metric=args.metric)
+            row.append(f"  {tag[w.domain]}")
+        print(f"N={n:5d}" + " ".join(row))
+
+    print("\nper-point detail at the paper baseline N=576:")
+    for b in bs:
+        for d in ds.DOMAINS:
+            p = ds.evaluate(d, 576, b, sigma)
+            print(f"  B={b} {d:8s} {p.e_mac*1e15:9.2f} fJ/MAC  "
+                  f"R={p.redundancy:4d}  thr={p.throughput:.2e}  "
+                  f"area={p.area_per_mac*1e12:.2f} um^2")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Serving example: batched prefill + greedy decode on a quantized model,
+with per-token latency stats and the paper's J/token energy accounting.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch qwen3-8b]
+"""
+import argparse
+
+import repro.configs as cfgs
+from repro.configs.base import TDExecCfg
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    arch = cfgs.get_smoke(args.arch).replace(
+        td=TDExecCfg(mode="td", bits_a=4, bits_w=4, n_chain=64,
+                     sigma_max=2.0))
+    run(arch, args.batch, args.prompt_len, args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver (deliverable b): train a ~100M-param granite-family LM
+with LSQ-4bit QAT + TD noise injection for a few hundred steps on synthetic
+data, with checkpoints and fault-tolerant resume.
+
+    PYTHONPATH=src python examples/train_qat_lm.py [--steps 300] [--small]
+
+--small shrinks to ~2M params so the example finishes in ~a minute on this
+single-core CPU container; the default ~100M config is sized for a real
+host.  Same code path either way (the full configs lower via the dry-run).
+"""
+import argparse
+
+from repro.configs.base import (ArchConfig, ModelCfg, ShapeCfg, TDExecCfg,
+                                TrainCfg)
+from repro.launch import ft
+from repro.launch.train import run
+
+
+def make_arch(small: bool) -> ArchConfig:
+    if small:
+        model = ModelCfg(name="granite-2m-qat", n_layers=2, d_model=128,
+                         n_heads=4, n_kv_heads=2, d_ff=384, vocab=2048)
+    else:
+        # ~100M params, llama/granite-style
+        model = ModelCfg(name="granite-100m-qat", n_layers=12, d_model=768,
+                         n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32768)
+    return ArchConfig(
+        model=model,
+        train=TrainCfg(lr=1e-3, warmup=20, total_steps=400,
+                       n_microbatches=1, remat="none"),
+        td=TDExecCfg(mode="td", bits_a=4, bits_w=4,
+                     n_chain=min(576, model.d_model), sigma_max=2.0),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/qat_lm_ckpt")
+    args = ap.parse_args()
+
+    arch = make_arch(args.small)
+    shape = ShapeCfg("example", seq_len=128 if args.small else 512,
+                     global_batch=8, kind="train")
+
+    print(f"[example] arch={arch.model.name} td={arch.td.mode} "
+          f"bits={arch.td.bits_a}x{arch.td.bits_w} "
+          f"n_chain={arch.td.n_chain}")
+
+    def session():
+        return run(arch, shape, steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=100, log_every=20)
+
+    _, losses = ft.run_with_retries(session)
+    k = max(1, len(losses) // 10)
+    first, last = (sum(losses[:k]) / k), (sum(losses[-k:]) / k)
+    print(f"[example] loss {first:.3f} -> {last:.3f} "
+          f"({'DECREASED' if last < first else 'no decrease'}) over "
+          f"{len(losses)} steps with TD-noise QAT")
+
+
+if __name__ == "__main__":
+    main()

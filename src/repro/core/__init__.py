@@ -1,0 +1,18 @@
+"""Core: the paper's quantitative three-domain VMM framework.
+
+Modules
+-------
+constants        synthesized-but-anchored 22nm FD-SOI calibration tables
+cells            delay elements, eta_ESNR (Eq. 1), TD-MAC cell (Fig. 4)
+chain            chain error statistics (Eq. 2-6) + redundancy solver
+tdc              SAR + hybrid TDC (Eq. 8-10), L_osc optimizer
+analog           charge-domain model (Eq. 11-13)
+digital          adder-tree reference
+design_space     the Figs. 9/11/12 comparison engine
+noise_tolerance  Fig. 10 sigma_array_max search
+"""
+from repro.core import (analog, cells, chain, constants, design_space,
+                        digital, noise_tolerance, tdc)
+
+__all__ = ["analog", "cells", "chain", "constants", "design_space",
+           "digital", "noise_tolerance", "tdc"]

@@ -1,0 +1,197 @@
+"""Delay-element and TD-MAC cell models (paper Section II, Figs. 3-4).
+
+Implements:
+  * alpha-power-law voltage scaling of delay / energy / mismatch,
+  * eta_ESNR = SNR_cell / sqrt(E_op)  (Eq. 1) -- the cascade-invariant metric,
+  * the baseline 1xB TD-MAC cell of Fig. 4a: INL table, per-input-pair delay
+    variance, and per-MAC energy, all as functions of (B, R, input stats).
+
+Everything is pure jnp and vmap-able over design grids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+
+
+# ---------------------------------------------------------------------------
+# Voltage scaling of a delay element (alpha-power law)
+# ---------------------------------------------------------------------------
+def delay_at_vdd(delay_nom: jnp.ndarray, vdd: jnp.ndarray) -> jnp.ndarray:
+    """Stage delay at supply `vdd` given nominal delay at VDD_NOM.
+
+    t(V) ~ V / (V - Vth)^alpha  (alpha-power law).
+    """
+    num = vdd / (vdd - C.VTH_EFF) ** C.ALPHA_SAT
+    den = C.VDD_NOM / (C.VDD_NOM - C.VTH_EFF) ** C.ALPHA_SAT
+    return delay_nom * num / den
+
+
+def energy_at_vdd(energy_nom: jnp.ndarray, vdd: jnp.ndarray) -> jnp.ndarray:
+    """Dynamic switching energy ~ C * V^2."""
+    return energy_nom * (vdd / C.VDD_NOM) ** 2
+
+
+def sig_rel_at_vdd(sig_rel_nom: jnp.ndarray, vdd: jnp.ndarray) -> jnp.ndarray:
+    """Relative delay mismatch grows as Vdd approaches Vth (RDF on Vth):
+    sigma_t/t ~ 1/(V - Vth)."""
+    return sig_rel_nom * (C.VDD_NOM - C.VTH_EFF) / (vdd - C.VTH_EFF)
+
+
+def snr_cell(sig_rel: jnp.ndarray) -> jnp.ndarray:
+    """SNR of a single delay stage: nominal delay over delay sigma."""
+    return 1.0 / sig_rel
+
+
+def eta_esnr(sig_rel: jnp.ndarray, energy: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1: eta_ESNR = SNR_cell / sqrt(E_op).
+
+    Cascade-invariant: R cells give sqrt(R) SNR at R energy, so eta is
+    independent of cascade length R.  Units: 1/sqrt(J).
+    """
+    return snr_cell(sig_rel) / jnp.sqrt(energy)
+
+
+def eta_esnr_vs_vdd(cell_name: str, vdd: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 3c: eta_ESNR of a library delay element across supply voltage."""
+    spec = C.DELAY_CELLS[cell_name]
+    sig = sig_rel_at_vdd(jnp.asarray(spec.sig_rel), vdd)
+    e = energy_at_vdd(jnp.asarray(spec.energy), vdd)
+    return eta_esnr(sig, e)
+
+
+# ---------------------------------------------------------------------------
+# Baseline 1xB TD-MAC cell (Fig. 4a)
+#
+# The cell realizes delay = x * w delay-steps for a 1-bit activation x and a
+# B-bit weight w.  Bit i of the weight selects between:
+#   * TD-AND cascade of R * 2^i unit cells  (if x=1 and w_i=1), or
+#   * a single TD-NAND bypass               (otherwise).
+# One delay step == R cascaded unit cells, so in *step* units the fixed
+# TD-NAND/TD-AND path discrepancy shrinks as 1/R while random per-cell
+# mismatch averages as 1/sqrt(R) per step.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TDMacParams:
+    bits: int            # B, weight bit width
+    redundancy: float    # R, unit cells per delay step (>= 1)
+    vdd: float = C.VDD_NOM
+
+
+def _weight_values(bits: int) -> jnp.ndarray:
+    return jnp.arange(2 ** bits)
+
+
+def _bit_planes(bits: int) -> jnp.ndarray:
+    """(2^B, B) matrix: row w holds the bits of w."""
+    w = _weight_values(bits)
+    return ((w[:, None] >> jnp.arange(bits)[None, :]) & 1).astype(jnp.float32)
+
+
+def inl_table(bits: int, redundancy: float) -> jnp.ndarray:
+    """INL(x, w) of the TD-MAC cell in delay-step units, shape (2, 2^B).
+
+    Source of nonlinearity: each *bypassed* subcell adds the fixed
+    TD-NAND-vs-TD-AND discrepancy, each *active* cascade of length 2^i has a
+    small systematic residue that grows with its length (finite slew
+    stacking).  The mean over inputs is calibrated away (paper: "the weight
+    is known a priori, allowing for a calibration"), so the table is returned
+    mean-free under a uniform input distribution -- VHM below re-weights it
+    by the actual input distribution.  Scales as 1/R (Eq. 6).
+    """
+    planes = _bit_planes(bits)                        # (2^B, B)
+    pow2 = 2.0 ** jnp.arange(bits)                    # (B,)
+    n_bypass = (1.0 - planes).sum(-1)                 # bypassed subcells | x=1
+    # systematic residue of active cascades: sub-linear stack-up ~ sqrt(len)
+    active_residue = (planes * jnp.sqrt(pow2)[None, :]).sum(-1)
+    raw_x1 = C.DELTA_NAND_STEPS * (n_bypass - n_bypass.mean()) \
+        + 0.35 * C.DELTA_NAND_STEPS * (active_residue - active_residue.mean())
+    # x = 0: every subcell bypasses; deviation is the same for all w, and the
+    # common mode is calibrated, so INL(0, w) = const offset ~ 0 after cal.
+    raw_x0 = jnp.zeros_like(raw_x1)
+    table = jnp.stack([raw_x0, raw_x1], axis=0)       # (2, 2^B)
+    # calibrate: remove global mean (uniform); per-R scaling of Eq. 6
+    table = table - table.mean()
+    return table / redundancy
+
+
+def cell_delay_variance(bits: int, redundancy: float,
+                        vdd: float = C.VDD_NOM) -> jnp.ndarray:
+    """Var(err_cell | x, w) in delay-step^2 units, shape (2, 2^B).
+
+    Active path of bit i contributes R * 2^i unit cells, each with relative
+    sigma SIG_U_REL -> variance (in steps^2) 2^i * sig_u^2 / R.
+    Bypass contributes a single TD-NAND: (sig_nand / R)^2.
+    """
+    sig_u = sig_rel_at_vdd(jnp.asarray(C.SIG_U_REL), jnp.asarray(vdd))
+    sig_n = sig_rel_at_vdd(jnp.asarray(C.SIG_NAND_REL), jnp.asarray(vdd))
+    planes = _bit_planes(bits)                        # (2^B, B)
+    pow2 = 2.0 ** jnp.arange(bits)
+    var_active = (planes * pow2[None, :]).sum(-1) * sig_u ** 2 / redundancy
+    n_byp = (1.0 - planes).sum(-1)
+    var_bypass = n_byp * (sig_n / redundancy) ** 2
+    var_x1 = var_active + var_bypass
+    var_x0 = bits * (sig_n / redundancy) ** 2
+    return jnp.stack([jnp.full_like(var_x1, var_x0), var_x1], axis=0)
+
+
+def input_distribution(bits: int,
+                       p_x_one: float = C.P_X_ONE,
+                       w_bit_sparsity: float = C.W_BIT_SPARSITY
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(P(x), P(w)) for x in {0,1} and w in [0, 2^B): independent weight bits
+    that are one with prob (1 - sparsity)."""
+    p_x = jnp.array([1.0 - p_x_one, p_x_one])
+    planes = _bit_planes(bits)                        # (2^B, B)
+    p_one = 1.0 - w_bit_sparsity
+    p_w = jnp.prod(planes * p_one + (1 - planes) * (1 - p_one), axis=-1)
+    return p_x, p_w
+
+
+def cell_energy_per_mac(bits: int, redundancy: float,
+                        vdd: float = C.VDD_NOM,
+                        p_x_one: float = C.P_X_ONE,
+                        w_bit_sparsity: float = C.W_BIT_SPARSITY
+                        ) -> jnp.ndarray:
+    """E_cell of Eq. 7: expected energy of one 1xB TD MAC-OP.
+
+    The transition edge always propagates through every subcell: through the
+    TD-AND cascade (R * 2^i cells) when x & w_i, else through the TD-NAND.
+    """
+    e_and = energy_at_vdd(jnp.asarray(C.E_TD_AND), jnp.asarray(vdd))
+    e_nand = energy_at_vdd(jnp.asarray(C.E_TD_NAND), jnp.asarray(vdd))
+    p_act = p_x_one * (1.0 - w_bit_sparsity)          # P(bit i active)
+    pow2 = 2.0 ** jnp.arange(bits)
+    e_bit = p_act * redundancy * pow2 * e_and + (1 - p_act) * e_nand
+    return e_bit.sum() * (1.0 + C.LEAKAGE_FRACTION)
+
+
+def tdmac_area(bits: int, redundancy: float) -> jnp.ndarray:
+    """Eq. 14: A = (9*B + 7*R*sum_{i=0..B} 2^i) * CPP * H_cell.
+
+    (The paper's sum runs to B inclusive: 2^{B+1} - 1.)
+    """
+    n_pitch = 9.0 * bits + 7.0 * redundancy * (2.0 ** (bits + 1) - 1.0)
+    return n_pitch * C.AREA_PER_PITCH
+
+
+# Expected delay of one MAC in *unit-cell* delays (for throughput): the edge
+# traverses active cascades (R*2^i cells) or bypasses (1 cell each).
+def cell_mean_delay_units(bits: int, redundancy: float,
+                          p_x_one: float = C.P_X_ONE,
+                          w_bit_sparsity: float = C.W_BIT_SPARSITY
+                          ) -> jnp.ndarray:
+    p_act = p_x_one * (1.0 - w_bit_sparsity)
+    pow2 = 2.0 ** jnp.arange(bits)
+    d_bit = p_act * redundancy * pow2 + (1 - p_act) * 1.0
+    return d_bit.sum()
+
+
+def cell_max_delay_units(bits: int, redundancy: float) -> jnp.ndarray:
+    """Worst-case (x=1, w=all-ones) delay in unit cells."""
+    return redundancy * (2.0 ** bits - 1.0) + 0.0

@@ -1,0 +1,141 @@
+"""Compute-chain error statistics (paper Section III, Eq. 2-6) + R solver.
+
+The chain of N TD-MAC cells accumulates per-cell errors.  With input
+statistics P(x), P(w):
+
+  mu_err,cell      = sum_{i,j} INL(i,j) P(x=i) P(w=j)                 (Eq. 2)
+  sigma^2_err,cell = E[Var(err|x,w)]  (EVPV)  +  Var(INL)  (VHM)      (Eq. 3)
+  mu_err,chain     = N mu_err,cell                                    (Eq. 4)
+  sigma^2_chain    = N (EVPV + VHM)                                   (Eq. 5)
+  mu ~ 1/R,  EVPV ~ 1/R,  VHM ~ 1/R^2                                 (Eq. 6)
+
+The paper calibrates the mean to zero ([7]) and requires
+SIGMA_CONFIDENCE * sigma_chain <= err_max.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells
+from repro.core import constants as C
+
+
+@dataclasses.dataclass(frozen=True)
+class CellStats:
+    mu: jnp.ndarray        # Eq. 2, delay steps
+    evpv: jnp.ndarray      # Eq. 3 first term, steps^2
+    vhm: jnp.ndarray       # Eq. 3 second term, steps^2
+
+    @property
+    def var(self) -> jnp.ndarray:
+        return self.evpv + self.vhm
+
+
+@functools.lru_cache(maxsize=65536)
+def cell_stats(bits: int, redundancy: float, vdd: float = C.VDD_NOM,
+               p_x_one: float = C.P_X_ONE,
+               w_bit_sparsity: float = C.W_BIT_SPARSITY) -> CellStats:
+    """Combine the input-dependent cell statistics with the input statistics
+    via the laws of total expectation / total variance (Eq. 2-3).
+
+    Memoized on the (hashable scalar) arguments — the R/q solvers call this
+    in tight loops over a small set of (B, R) points.
+    """
+    p_x, p_w = cells.input_distribution(bits, p_x_one, w_bit_sparsity)
+    pxw = p_x[:, None] * p_w[None, :]                      # (2, 2^B)
+    inl = cells.inl_table(bits, redundancy)                # (2, 2^B)
+    var = cells.cell_delay_variance(bits, redundancy, vdd) # (2, 2^B)
+    mu = (inl * pxw).sum()
+    evpv = (var * pxw).sum()
+    # VHM = Var(INL) under pxw = E[INL^2] - (E[INL])^2
+    vhm = (inl ** 2 * pxw).sum() - mu ** 2
+    # store plain floats: cached values must not pin device buffers
+    return CellStats(mu=float(mu), evpv=float(evpv), vhm=float(vhm))
+
+
+def chain_stats(n: jnp.ndarray, st: CellStats) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 4-5: (mu_chain, sigma_chain) for chain length n."""
+    mu = n * st.mu
+    sigma = jnp.sqrt(n * (st.evpv + st.vhm))
+    return mu, sigma
+
+
+def chain_sigma(n: jnp.ndarray, bits: int, redundancy: jnp.ndarray,
+                vdd: float = C.VDD_NOM,
+                p_x_one: float = C.P_X_ONE,
+                w_bit_sparsity: float = C.W_BIT_SPARSITY) -> jnp.ndarray:
+    """sigma_err,chain in delay steps, vectorized over (n, redundancy)."""
+    def _one(r):
+        st = cell_stats(bits, r, vdd, p_x_one, w_bit_sparsity)
+        return st.evpv + st.vhm
+    var_cell = _one(redundancy) if jnp.ndim(redundancy) == 0 else jax.vmap(_one)(redundancy)
+    return jnp.sqrt(n * var_cell)
+
+
+def solve_redundancy(n: float, bits: int,
+                     sigma_max: float,
+                     vdd: float = C.VDD_NOM,
+                     r_max: int = 4096,
+                     p_x_one: float = C.P_X_ONE,
+                     w_bit_sparsity: float = C.W_BIT_SPARSITY) -> int:
+    """Smallest integer R with sigma_chain(N, B, R) <= sigma_max.
+
+    Closed form: with EVPV = a/R and VHM = b/R^2 (Eq. 6),
+      N (a/R + b/R^2) <= s^2   <=>   R >= (N a + sqrt(N^2 a^2 + 4 s^2 N b)) / (2 s^2)
+    then refined to the exact integer (the bypass-variance term deviates
+    slightly from pure 1/R scaling).
+    """
+    st1 = cell_stats(bits, 1.0, vdd, p_x_one, w_bit_sparsity)
+    a = float(st1.evpv)     # ~ 1/R
+    b = float(st1.vhm)      # ~ 1/R^2
+    s2 = float(sigma_max) ** 2
+    if n * (a + b) <= s2:
+        return 1
+    r_guess = (n * a + (n * n * a * a + 4.0 * s2 * n * b) ** 0.5) / (2.0 * s2)
+    r = max(1, int(r_guess))
+    # integer refinement (model is monotone decreasing in R)
+    while r > 1:
+        st = cell_stats(bits, float(r - 1), vdd, p_x_one, w_bit_sparsity)
+        if n * float(st.var) <= s2:
+            r -= 1
+        else:
+            break
+    while r < r_max:
+        st = cell_stats(bits, float(r), vdd, p_x_one, w_bit_sparsity)
+        if n * float(st.var) <= s2:
+            break
+        r += 1
+    return r
+
+
+def sigma_max_exact() -> float:
+    """Exact regime: SIGMA_CONFIDENCE * sigma <= ERR_EXACT_MAX (rounding kills
+    everything below half an LSB)."""
+    return C.ERR_EXACT_MAX / C.SIGMA_CONFIDENCE
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo reference for the law-of-total-variance model (used by tests
+# and by the fidelity benchmark -- this is the "simulation" the analytic
+# formulas are validated against).
+# ---------------------------------------------------------------------------
+def simulate_chain_errors(key: jax.Array, n: int, bits: int,
+                          redundancy: float, n_mc: int,
+                          vdd: float = C.VDD_NOM,
+                          p_x_one: float = C.P_X_ONE,
+                          w_bit_sparsity: float = C.W_BIT_SPARSITY
+                          ) -> jnp.ndarray:
+    """Draw n_mc chain error samples: random (x, w) per cell from the input
+    distribution, cell error = INL(x,w) + N(0, Var(x,w))."""
+    kx, kw, ke = jax.random.split(key, 3)
+    p_x, p_w = cells.input_distribution(bits, p_x_one, w_bit_sparsity)
+    xs = jax.random.bernoulli(kx, p_x[1], (n_mc, n)).astype(jnp.int32)
+    ws = jax.random.categorical(kw, jnp.log(p_w + 1e-30), shape=(n_mc, n))
+    inl = cells.inl_table(bits, redundancy)[xs, ws]
+    var = cells.cell_delay_variance(bits, redundancy, vdd)[xs, ws]
+    noise = jax.random.normal(ke, (n_mc, n)) * jnp.sqrt(var)
+    return (inl + noise).sum(-1)

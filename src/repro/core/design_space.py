@@ -1,0 +1,193 @@
+"""Three-domain design-space comparison engine (paper Figs. 9, 11, 12).
+
+For a VMM of chain length N, input width B, M parallel chains and an output
+error budget sigma_max (in output-LSB units), evaluates energy/MAC,
+throughput and area/MAC for:
+
+  * "td"      -- time domain  (Eq. 7: E_cell + E_TDC/N, R from Eq. 5/6)
+  * "analog"  -- charge domain (Eq. 11-13)
+  * "digital" -- adder tree (exact by construction; sigma_max ignored)
+
+The *exact* regime is sigma_max = ERR_EXACT_MAX / SIGMA_CONFIDENCE (Fig. 9),
+the *relaxed* regime uses sigma_array_max from noise-tolerance analysis of a
+quantized network (Fig. 10 -> Fig. 11).
+
+All evaluation is host-side scalar python/numpy (design search), backed by
+jnp cell models; grids are evaluated via plain loops into numpy arrays --
+these are O(100) point grids, not hot paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import numpy as np
+
+from repro.core import analog, cells, chain, digital, tdc
+from repro.core import constants as C
+
+Domain = Literal["td", "analog", "digital"]
+DOMAINS: tuple[Domain, ...] = ("td", "analog", "digital")
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    domain: str
+    n: int                  # chain length
+    bits: int               # input (weight) bit width B
+    m: int                  # parallel chains
+    sigma_max: float        # error budget, output-LSB units
+    e_mac: float            # J / MAC-OP
+    throughput: float       # MAC / s
+    area_per_mac: float     # m^2 / MAC
+    redundancy: int         # R (1 for digital)
+    aux: dict
+
+
+def tdc_coarsening_candidates(sigma_max: float) -> list[tuple[int, float]]:
+    """TD analogue of the ADC ENOB relaxation (paper Section IV applies it to
+    the analog ADC; the same error-budget argument applies to the TDC).
+
+    Counting in units of q delay steps adds ~(q^2 - 1)/12 quantization
+    variance and divides the TDC range (and thus counter/oscillator energy)
+    by q.  Returns the feasible (q, remaining_chain_sigma) pairs; the caller
+    jointly optimizes q against the redundancy R it forces.  In the exact
+    regime (sigma_max = 1/6) only q = 1 is feasible (no-op).
+    """
+    out = []
+    q = 1
+    while (q * q - 1) / 12.0 < sigma_max * sigma_max * 0.999:
+        sigma_chain = math.sqrt(max(sigma_max ** 2 - (q * q - 1) / 12.0, 1e-12))
+        out.append((q, sigma_chain))
+        q += 1
+    return out or [(1, sigma_max)]
+
+
+def evaluate_td(n: int, bits: int, sigma_max: float, m: int = C.M_DEFAULT,
+                vdd: float = C.VDD_NOM, clip_range: bool = True,
+                tdc_arch: str = "hybrid", relax_tdc: bool = True) -> DesignPoint:
+    cands = (tdc_coarsening_candidates(sigma_max) if relax_tdc
+             else [(1, sigma_max)])
+    best = None
+    for q, sigma_chain in cands:
+        p = _evaluate_td_at(n, bits, sigma_max, sigma_chain, q, m, vdd,
+                            clip_range, tdc_arch)
+        if best is None or p.e_mac < best.e_mac:
+            best = p
+    return best
+
+
+def _evaluate_td_at(n: int, bits: int, sigma_max: float, sigma_chain: float,
+                    q: int, m: int, vdd: float, clip_range: bool,
+                    tdc_arch: str) -> DesignPoint:
+    r = chain.solve_redundancy(n, bits, sigma_chain, vdd)
+    e_cell = float(cells.cell_energy_per_mac(bits, r, vdd))
+    # TDC sees the range in coarse LSBs of q delay steps each
+    steps = tdc.effective_range_steps(n, bits, clip_range)
+    units = steps * r / q
+    if tdc_arch == "hybrid":
+        l_osc = tdc.optimal_l_osc(units, m, vdd)
+        e_tdc = tdc.hybrid_tdc_energy(units, l_osc, m, vdd)
+        t_tdc = tdc.hybrid_tdc_latency(units, l_osc, vdd)
+        a_tdc = tdc.hybrid_tdc_area(units, max(1, l_osc), m)
+    else:
+        l_osc = 0
+        b_tdc = tdc.range_bits(steps / q)
+        e_tdc = tdc.sar_tdc_energy(b_tdc, m, vdd)
+        t_tdc = tdc.sar_tdc_latency(b_tdc, vdd)
+        a_tdc = tdc.sar_tdc_area(b_tdc)
+    e_mac = e_cell + e_tdc / n                                   # Eq. 7
+    # latency: the edge traverses the chain (value in unit delays + bypass
+    # transit) then converts; M chains run in parallel.
+    tau = float(cells.delay_at_vdd(np.asarray(C.TAU_UNIT), np.asarray(vdd)))
+    t_chain = (steps * r + n * bits) * tau
+    throughput = n * m / (t_chain + t_tdc)
+    a_cell = float(cells.tdmac_area(bits, r))
+    area = a_cell + a_tdc / n
+    return DesignPoint("td", n, bits, m, sigma_max, e_mac, throughput, area,
+                       r, {"e_cell": e_cell, "e_tdc": e_tdc, "l_osc": l_osc,
+                           "latency": t_chain + t_tdc, "tdc_lsb_q": q,
+                           "sigma_chain_budget": sigma_chain})
+
+
+def evaluate_analog(n: int, bits: int, sigma_max: float,
+                    m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM,
+                    clip_range: bool = True) -> DesignPoint:
+    res = analog.analog_energy_per_mac(n, bits, sigma_max, m, vdd, clip_range)
+    thr = analog.analog_throughput(n, bits, sigma_max, m, clip_range)
+    area = analog.analog_area(n, bits, sigma_max, m, clip_range)
+    return DesignPoint("analog", n, bits, m, sigma_max, res["e_mac"], thr,
+                       area, res["r"], {"enob": res["enob"],
+                                        "e_adc": res["e_adc"],
+                                        "e_cap": res["e_cap"]})
+
+
+def evaluate_digital(n: int, bits: int, sigma_max: float = 0.0,
+                     m: int = C.M_DEFAULT,
+                     vdd: float = C.VDD_NOM) -> DesignPoint:
+    e = digital.digital_energy_per_mac(n, bits, vdd)
+    thr = digital.digital_throughput(n, bits, m)
+    area = digital.digital_area(n, bits)
+    return DesignPoint("digital", n, bits, m, sigma_max, e, thr, area, 1, {})
+
+
+_EVAL = {"td": evaluate_td, "analog": evaluate_analog,
+         "digital": evaluate_digital}
+
+
+def evaluate(domain: Domain, n: int, bits: int, sigma_max: float,
+             m: int = C.M_DEFAULT, **kw) -> DesignPoint:
+    if domain == "digital":
+        kw.pop("clip_range", None)
+        kw.pop("tdc_arch", None)
+    return _EVAL[domain](n, bits, sigma_max, m, **kw)
+
+
+def sigma_exact() -> float:
+    return chain.sigma_max_exact()
+
+
+def sweep(domains=DOMAINS,
+          ns=(16, 32, 64, 128, 256, 576, 1024, 2048, 4096),
+          bit_widths=(1, 2, 4, 8),
+          sigma_max: float | None = None,
+          m: int = C.M_DEFAULT, **kw) -> list[DesignPoint]:
+    """Full (domain x N x B) grid at a single error budget.
+    sigma_max=None means the exact regime of Fig. 9."""
+    s = sigma_exact() if sigma_max is None else sigma_max
+    out = []
+    for d in domains:
+        for n in ns:
+            for b in bit_widths:
+                out.append(evaluate(d, n, b, s, m, **kw))
+    return out
+
+
+def best_domain(n: int, bits: int, sigma_max: float,
+                m: int = C.M_DEFAULT,
+                metric: str = "e_mac") -> DesignPoint:
+    """Winner (minimum e_mac / area, maximum throughput) at one point."""
+    pts = [evaluate(d, n, bits, sigma_max, m) for d in DOMAINS]
+    if metric == "throughput":
+        return max(pts, key=lambda p: p.throughput)
+    return min(pts, key=lambda p: getattr(p, metric))
+
+
+def td_vdd_optimized(n: int, bits: int, sigma_max: float,
+                     m: int = C.M_DEFAULT,
+                     vdd_grid=(0.80, 0.72, 0.65, 0.58, 0.52, 0.46, 0.40)
+                     ) -> DesignPoint:
+    """Beyond-paper knob: jointly pick (Vdd, R) for minimum TD energy.
+
+    The paper notes TD's easy voltage scaling (design at nominal, scale down
+    for error-tolerant workloads) but Fig. 11 relaxes only R.  Scaling Vdd
+    degrades eta_ESNR, so R must grow; the optimum trades R * E_cell(V)
+    against V^2.
+    """
+    best = None
+    for v in vdd_grid:
+        p = evaluate_td(n, bits, sigma_max, m, vdd=v)
+        if best is None or p.e_mac < best.e_mac:
+            best = p
+    return best

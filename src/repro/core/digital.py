@@ -1,0 +1,51 @@
+"""Digital adder-tree VMM reference model (paper Section IV).
+
+The paper obtains digital numbers from post-layout simulation of single-cycle
+VMM arrays synthesized at 1 GHz in the same 22 nm technology (TT corner),
+dividing total array energy by array length N to get the per-MAC average.
+Weights are fully (bit-)serialized like the TD implementation.
+
+We model the same structure analytically: a 1xB AND-stage feeding a binary
+adder tree with N leaves.  Level k of the tree has N/2^k adders of width
+~ B + k, so the per-MAC adder-bit count is sum_k (B + k)/2^k ~ B + 2 + o(1).
+Digital computation is exact: no R, no SNR dependence (its energy is flat in
+the accuracy-relaxation axis -- which is exactly why TD/analog overtake it
+once the error budget is relaxed, Fig. 11).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import constants as C
+
+
+def _adder_bits_per_mac(n: float, bits: int) -> float:
+    """sum_{k=1..log2 N} (B + k) / 2^k, exact partial sum."""
+    depth = max(1, int(math.ceil(math.log2(max(2.0, n)))))
+    total = 0.0
+    for k in range(1, depth + 1):
+        total += (bits + k) / 2.0 ** k
+    return total
+
+
+def digital_energy_per_mac(n: float, bits: int,
+                           vdd: float = C.VDD_NOM) -> float:
+    """Per-MAC energy of the single-cycle N-long 1xB VMM array."""
+    scale = (vdd / C.VDD_NOM) ** 2
+    e_adder = _adder_bits_per_mac(n, bits) * C.E_FA_BIT * C.ALPHA_SW_DIGITAL
+    e_and = bits * 0.35e-15 * C.ALPHA_SW_DIGITAL          # AND gating stage
+    e_wire = math.log2(max(2.0, n)) * C.E_WIRE_PER_LOG2N
+    e = (e_adder + e_and + e_wire) * scale + C.E_SEQ_MAC * scale
+    return e * (1.0 + C.LEAKAGE_FRACTION)
+
+
+def digital_throughput(n: float, bits: int, m: int = C.M_DEFAULT) -> float:
+    """Single-cycle array at F_DIG: N*M MACs retire per cycle."""
+    return n * m * C.F_DIG
+
+
+def digital_area(n: float, bits: int) -> float:
+    """Per-MAC area after P&R: AND stage + amortized adder tree + seq."""
+    a_adder = _adder_bits_per_mac(n, bits) * C.A_FA_BIT
+    a_and = bits * 0.30e-12
+    return a_adder + a_and + C.A_SEQ_MAC

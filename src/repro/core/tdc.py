@@ -1,0 +1,174 @@
+"""Time-to-digital converter models (paper Section III-A, Eq. 8-10, Figs. 5-7).
+
+Two architectures:
+  * SAR-TDC  -- successive approximation, binary-decaying delay of the faster
+                signal (Fig. 5a, Eq. 10),
+  * hybrid   -- novel: gray-code counter driven by a ring oscillator of
+                L_osc TD-AND cells for the MSBs + a small SAR-TDC for the
+                LSBs (Fig. 5b, Eq. 8) with closed-form optimal L_osc (Eq. 9).
+
+`range_units` is the maximum TD input in *unit-cell delays* (i.e. delay
+steps x R).  Fig. 6's observation that CNN output ranges concentrate lets the
+range be clipped to RANGE_KAPPA * sqrt(N) * (2^B - 1) steps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax.numpy as jnp
+
+from repro.core import cells
+from repro.core import constants as C
+
+
+@functools.lru_cache(maxsize=4096)
+def _e_at(e_nom: float, vdd: float) -> float:
+    """Cached scalar voltage-scaled energy (hot in the L_osc optimizer)."""
+    return float(e_nom) * (vdd / C.VDD_NOM) ** 2
+
+
+@functools.lru_cache(maxsize=4096)
+def _tau_at(vdd: float) -> float:
+    return float(cells.delay_at_vdd(jnp.asarray(C.TAU_UNIT),
+                                    jnp.asarray(vdd)))
+
+
+# ---------------------------------------------------------------------------
+# Output-range model (Fig. 6)
+# ---------------------------------------------------------------------------
+def effective_range_steps(n: float, bits: int,
+                          clip_to_observed: bool = True) -> float:
+    """Maximum TDC range in delay steps.
+
+    Full range is N * (2^B - 1); observed CNN ranges (Fig. 6) concentrate to
+    ~ kappa * sqrt(N) * (2^B - 1), cut so only outlier layers clip.
+    """
+    full = float(n) * (2.0 ** bits - 1.0)
+    if not clip_to_observed:
+        return full
+    observed = C.RANGE_KAPPA * math.sqrt(float(n)) * (2.0 ** bits - 1.0)
+    return min(full, observed)
+
+
+def range_bits(range_steps: float) -> int:
+    """TDC output bit width covering the range."""
+    return max(1, int(math.ceil(math.log2(max(2.0, range_steps)))))
+
+
+# ---------------------------------------------------------------------------
+# SAR-TDC (Eq. 10)
+# ---------------------------------------------------------------------------
+def sar_tdc_energy(b_tdc: int, m: int = C.M_DEFAULT,
+                   vdd: float = C.VDD_NOM) -> float:
+    """Eq. 10: E = E_TD-AND * (M+1)/M * (2^B - 2) + B * E_sample.
+
+    The reference delay (to max_in/2) is shared by all M chains -> (M+1)/M.
+    """
+    e_and = _e_at(C.E_TD_AND, vdd)
+    e_smp = _e_at(C.E_SAMPLE, vdd)
+    return e_and * (m + 1) / m * (2.0 ** b_tdc - 2.0) + b_tdc * e_smp
+
+
+def sar_tdc_latency(b_tdc: int, vdd: float = C.VDD_NOM) -> float:
+    """Binary search: sum of binary-decaying delays ~ 2^B_tdc unit delays."""
+    tau = _tau_at(vdd)
+    return (2.0 ** b_tdc) * tau
+
+
+def sar_tdc_area(b_tdc: int) -> float:
+    """2^B_tdc - 2 TD-AND cells + B_tdc samplers + B_tdc XOR."""
+    a_pitch = C.AREA_PER_PITCH
+    a_and = C.N_TRANS_TD_AND * a_pitch
+    a_ff = 22 * a_pitch       # flipflop ~ 22 pitches
+    a_xor = 10 * a_pitch
+    return (2.0 ** b_tdc - 2.0) * a_and + b_tdc * (a_ff + a_xor)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid TDC (Eq. 8-9)
+# ---------------------------------------------------------------------------
+def hybrid_tdc_energy(range_units: float, l_osc: float,
+                      m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM) -> float:
+    """Eq. 8 with NR == `range_units` (max chain output in unit delays):
+
+      E = (E_cnt/M + E_cnt,load) * NR / (2 L_osc)
+        + 2 NR E_TD-AND / M
+        + E_TD-AND * 2^ceil(1 + log2(L_osc))
+        + ceil(1 + log2(L_osc)) * E_sample
+    """
+    e_and = _e_at(C.E_TD_AND, vdd)
+    e_smp = _e_at(C.E_SAMPLE, vdd)
+    e_cnt = _e_at(C.E_CNT, vdd)
+    e_cl = _e_at(C.E_CNT_LOAD, vdd)
+    lsb_bits = math.ceil(1.0 + math.log2(l_osc))
+    return ((e_cnt / m + e_cl) * range_units / (2.0 * l_osc)
+            + 2.0 * range_units * e_and / m
+            + e_and * 2.0 ** lsb_bits
+            + lsb_bits * e_smp)
+
+
+def optimal_l_osc(range_units: float, m: int = C.M_DEFAULT,
+                  vdd: float = C.VDD_NOM) -> int:
+    """Eq. 9 closed form (Gauss brackets ignored), then integer refinement.
+
+      L_osc ~ (sqrt((E_cnt/M + E_cnt,load) * 2 E_TD-AND NR ln4) - E_sample)
+              / (4 E_TD-AND ln2)
+    """
+    e_and = _e_at(C.E_TD_AND, vdd)
+    e_smp = _e_at(C.E_SAMPLE, vdd)
+    e_cnt = _e_at(C.E_CNT, vdd)
+    e_cl = _e_at(C.E_CNT_LOAD, vdd)
+    num = math.sqrt((e_cnt / m + e_cl) * 2.0 * e_and * range_units
+                    * math.log(4.0)) - e_smp
+    l0 = num / (4.0 * e_and * math.log(2.0))
+    l0 = max(1, int(round(l0)))
+    # refine on the exact (bracketed) Eq. 8 within a local window
+    best_l, best_e = l0, hybrid_tdc_energy(range_units, l0, m, vdd)
+    for cand in range(max(1, l0 // 2), 2 * l0 + 2):
+        e = hybrid_tdc_energy(range_units, cand, m, vdd)
+        if e < best_e:
+            best_l, best_e = cand, e
+    return best_l
+
+
+def hybrid_tdc_latency(range_units: float, l_osc: int,
+                       vdd: float = C.VDD_NOM) -> float:
+    """Counter runs concurrently with the chain; after the edge arrives, the
+    LSB SAR covers a 2*L_osc window -> ~2*L_osc unit delays + sampling."""
+    tau = _tau_at(vdd)
+    lsb_bits = math.ceil(1.0 + math.log2(l_osc))
+    return 2.0 * l_osc * tau + lsb_bits * 4.0 * tau
+
+
+def hybrid_tdc_area(range_units: float, l_osc: int,
+                    m: int = C.M_DEFAULT) -> float:
+    """Ring osc (L_osc TD-ANDs, shared) + gray counter (shared) + per-chain
+    MSB sample register + per-chain LSB SAR."""
+    a_pitch = C.AREA_PER_PITCH
+    a_and = C.N_TRANS_TD_AND * a_pitch
+    a_ff = 22 * a_pitch
+    msb_bits = range_bits(range_units / (2.0 * l_osc) + 1.0)
+    a_counter = msb_bits * 9.0 * a_ff          # gray counter synthesis est.
+    lsb_bits = math.ceil(1.0 + math.log2(l_osc))
+    a_shared = l_osc * a_and + a_counter
+    a_per_chain = msb_bits * a_ff + sar_tdc_area(lsb_bits)
+    return a_shared / m + a_per_chain
+
+
+# ---------------------------------------------------------------------------
+# Full TDC choice used by the comparison (Fig. 7 -> hybrid)
+# ---------------------------------------------------------------------------
+def tdc_energy_per_vmm(n: float, bits: int, redundancy: float,
+                       m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM,
+                       arch: str = "hybrid",
+                       clip_range: bool = True) -> float:
+    """Energy of one chain conversion, E_TDC(N, M) of Eq. 7."""
+    steps = effective_range_steps(n, bits, clip_range)
+    units = steps * redundancy
+    if arch == "hybrid":
+        l = optimal_l_osc(units, m, vdd)
+        return hybrid_tdc_energy(units, l, m, vdd)
+    elif arch == "sar":
+        return sar_tdc_energy(range_bits(steps), m, vdd)
+    raise ValueError(f"unknown TDC arch {arch!r}")

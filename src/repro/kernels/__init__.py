@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+td_vmm       bit-serial noisy TD-VMM (MXU int8 tiles + in-kernel hash noise)
+lsq_quant    fused LSQ fake-quantization (VPU)
+decode_gqa   fused GQA decode attention (flash-decode, memory-bound hot spot)
+flash_attn   causal GQA flash-attention forward (train/prefill score-traffic
+             eliminator — EXPERIMENTS §Perf C4)
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle).  Kernels are validated in
+interpret=True mode on CPU; on TPU the model path flips use_pallas=True.
+"""

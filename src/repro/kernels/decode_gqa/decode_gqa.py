@@ -1,0 +1,100 @@
+"""Pallas kernel: fused GQA decode attention (flash-decode style).
+
+Decode with a long KV cache is the memory-roofline hot spot of the decode_*
+shapes: each step streams the whole KV cache from HBM once.  The kernel
+tiles the cache along S; each grid step loads a (bs, Hkv, D) KV block into
+VMEM, updates the online-softmax running (m, l, acc) held in VMEM scratch,
+and writes the normalized output on the last block.
+
+Grid: (B, S/bs).  Scratch: m/l (Hq,), acc (Hq, D) — persistent across the S
+axis for a fixed batch row (TPU grid is sequential over the last dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bs: int, n_blocks: int):
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    hq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    length = len_ref[0]
+
+    qg = q.reshape(hkv, g, d) * (d ** -0.5)
+    sc = jnp.einsum("kgd,skd->kgs", qg, k)        # (Hkv, g, bs)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (hkv, g, bs), 2) \
+        + blk * bs
+    sc = jnp.where(pos < length, sc, NEG_INF)
+
+    m_prev = m_ref[...].reshape(hkv, g)
+    l_prev = l_ref[...].reshape(hkv, g)
+    acc_prev = acc_ref[...].reshape(hkv, g, d)
+
+    m_new = jnp.maximum(m_prev, sc.max(-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(sc - m_new[..., None])
+    l_new = l_prev * alpha + p.sum(-1)
+    acc_new = acc_prev * alpha[..., None] + jnp.einsum("kgs,skd->kgd", p, v)
+
+    m_ref[...] = m_new.reshape(hq)
+    l_ref[...] = l_new.reshape(hq)
+    acc_ref[...] = acc_new.reshape(hq, d)
+
+    @pl.when(blk == n_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)[..., None]
+                    ).reshape(hq, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_gqa_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      length: jnp.ndarray, *, bs: int = 512,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q (B, Hq, D); k/v (B, S, Hkv, D); length (B,) int32."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    bs = min(bs, s)
+    n_blocks = -(-s // bs)
+    s_pad = n_blocks * bs
+    if s_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+
+    kern = functools.partial(_kernel, bs=bs, n_blocks=n_blocks)
+    return pl.pallas_call(
+        kern,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, hq, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hq,), jnp.float32),
+            pltpu.VMEM((hq,), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.astype(jnp.int32), q, k, v)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper: decode attention dispatch (kernel or oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_gqa.decode_gqa import decode_gqa_pallas
+from repro.kernels.decode_gqa.ref import decode_gqa_ref
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length: jnp.ndarray, use_pallas: bool = False,
+                     interpret: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        return decode_gqa_pallas(q, k, v, length, interpret=interpret)
+    return decode_gqa_ref(q, k, v, length)

@@ -1,0 +1,21 @@
+"""Oracle for the fused GQA decode-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_gqa_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   length: jnp.ndarray) -> jnp.ndarray:
+    """q (B, Hq, D); k/v (B, S, Hkv, D); length (B,) valid KV entries.
+    Returns (B, Hq, D)."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    valid = jnp.arange(s)[None, :] < length[:, None]          # (B, S)
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    p = jnp.exp(sc - sc.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: causal GQA flash-attention forward.
+
+This is the fused path that removes the S x S score traffic identified as
+the dominant (and HLO-irreducible) memory-roofline term of every train/
+prefill cell (EXPERIMENTS §Perf C4): scores and probabilities live only in
+VMEM tiles; HBM sees q, k, v and o exactly once.
+
+Grid: (B, Hkv, S_q/bq, S_kv/bk) — the KV axis innermost so the online-
+softmax running state (m, l, acc) persists in VMEM scratch across KV
+blocks of one query tile.  Causal masking skips fully-masked KV blocks
+via pl.when (no MXU work issued for the upper triangle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, n_kb: int, causal: bool, g: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: the whole KV block is masked iff q_block_end < k_block_start
+    run = (not causal) or (qb * bq + bq - 1 >= kb * bk)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :, :].astype(jnp.float32)    # (bq, g, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
+        d = q.shape[-1]
+        sc = jnp.einsum("qgd,kd->gqk", q * (d ** -0.5), k)   # (g, bq, bk)
+        if causal:
+            qpos = qb * bq + jax.lax.broadcasted_iota(
+                jnp.int32, sc.shape, 1)
+            kpos = kb * bk + jax.lax.broadcasted_iota(
+                jnp.int32, sc.shape, 2)
+            sc = jnp.where(qpos >= kpos, sc, NEG_INF)
+        m_prev = m_ref[...]                              # (g, bq)
+        l_prev = l_ref[...]
+        acc_prev = acc_ref[...]                          # (g, bq, D)
+        m_new = jnp.maximum(m_prev, sc.max(-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(-1)
+        acc_new = acc_prev * alpha[..., None] \
+            + jnp.einsum("gqk,kd->gqd", p, v)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_new
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        l = l_ref[...]
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (g, bq, D)
+        o_ref[0] = out.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      *, causal: bool = True, bq: int = 256, bk: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q (B,S,Hq,D); k/v (B,S,Hkv,D); S % bq == S % bk == 0."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    n_qb, n_kb = s // bq, s // bk
+    # regroup q as (B, S, Hkv, g, D) so one grid step owns one kv head
+    qg = q.reshape(b, s, hkv, g, d)
+
+    kern = functools.partial(_kernel, bq=bq, bk=bk, n_kb=n_kb,
+                             causal=causal, g=g)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hkv, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, d),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, g, d),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the training flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.flash_attn import flash_attn_pallas
+from repro.kernels.flash_attn.ref import flash_attn_ref
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, use_pallas: bool = False,
+                    interpret: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        return flash_attn_pallas(q, k, v, causal=causal,
+                                 interpret=interpret)
+    return flash_attn_ref(q, k, v, causal)

@@ -1,0 +1,21 @@
+"""Oracle for the training flash-attention kernel (causal GQA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   causal: bool = True) -> jnp.ndarray:
+    """q (B,S,Hq,D); k/v (B,S,Hkv,D) -> (B,S,Hq,D), f32 math."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jnp.exp(sc - sc.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, hq, d)

@@ -1,0 +1,10 @@
+"""Oracle for the fused LSQ fake-quant kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lsq_quant_ref(x: jnp.ndarray, s: jnp.ndarray, qn: float,
+                  qp: float) -> jnp.ndarray:
+    s_ = jnp.maximum(s, 1e-8)
+    return jnp.clip(jnp.round(x / s_), qn, qp) * s_

@@ -1,0 +1,46 @@
+"""Jit'd wrapper: signed-code TD matmul via the Pallas kernel.
+
+Handles offset encoding, contraction padding, batch flattening and the
+exact digital correction side-sums (popcount / static weight sum) around the
+unsigned kernel — mirroring how a real macro wraps its TD array with small
+digital logic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.td_vmm.td_vmm import td_vmm_pallas
+from repro.quant import bitserial
+
+
+def td_vmm(x_int: jnp.ndarray, w_int: jnp.ndarray, pol,
+           key: jax.Array, interpret: bool = True) -> jnp.ndarray:
+    """x_int (..., K) signed codes; w_int (K, N) signed codes.
+    Semantics match tdsim.td_linear.td_matmul_int but with the kernel's
+    counter-based noise."""
+    k, n = w_int.shape
+    lead = x_int.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    xu = bitserial.to_offset(x_int.reshape(m, k), pol.bits_a)
+    wu = bitserial.to_offset(w_int, pol.bits_w)
+    n_seg = max(1, -(-k // pol.n_chain))
+    k_pad = n_seg * pol.n_chain
+    xu_p = jnp.pad(xu, ((0, 0), (0, k_pad - k)))
+    wu_p = jnp.pad(wu, ((0, k_pad - k), (0, 0)))
+    seed = jax.random.key_data(key).ravel()[-1].astype(jnp.uint32) \
+        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) \
+        else jnp.asarray(key, jnp.uint32).ravel()[-1]
+
+    main = td_vmm_pallas(xu_p, wu_p, seed, bits_a=pol.bits_a,
+                         n_chain=pol.n_chain, sigma=float(pol.sigma_chain),
+                         tdc_q=int(pol.tdc_q), interpret=interpret)
+
+    ox = bitserial.offset_of(pol.bits_a)
+    ow = bitserial.offset_of(pol.bits_w)
+    corr_w = ox * wu.sum(0).astype(jnp.float32)
+    corr_x = ow * xu.sum(-1, keepdims=True).astype(jnp.float32)
+    out = main - corr_w[None, :] - corr_x + k * ox * ow
+    return out.reshape(*lead, n)

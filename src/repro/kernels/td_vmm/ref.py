@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the TD-VMM kernel.
+
+Defines the *exact* semantics the Pallas kernel must reproduce, including
+the counter-based noise (hash -> Box-Muller) so kernel and oracle are
+bit-comparable.  The statistical properties of the hash noise (N(0, sigma))
+are asserted separately in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def hash32(x: jnp.ndarray) -> jnp.ndarray:
+    """Avalanching integer hash (lowbias32), uint32 -> uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _uniform(bits: jnp.ndarray) -> jnp.ndarray:
+    """uint32 -> (0, 1) float32 using the top 24 bits."""
+    return (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24)) + (0.5 / (1 << 24))
+
+
+def gauss_noise(idx: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Standard normal from a linear index + seed (Box-Muller)."""
+    h1 = hash32(idx.astype(jnp.uint32) ^ seed.astype(jnp.uint32))
+    h2 = hash32(idx.astype(jnp.uint32) ^ seed.astype(jnp.uint32) ^ GOLDEN)
+    u1 = _uniform(h1)
+    u2 = _uniform(h2)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+
+
+def td_vmm_ref(xu: jnp.ndarray, wu: jnp.ndarray, *, bits_a: int,
+               n_chain: int, sigma: float, tdc_q: int,
+               seed: jnp.ndarray) -> jnp.ndarray:
+    """Bit-serial noisy VMM on *offset-encoded* (unsigned) operands.
+
+    xu: (M, K) uint codes in [0, 2^bits_a); wu: (K, N) uint codes.
+    Returns (M, N) float32:  sum_seg sum_b 2^b TDCround(plane_b @ w_seg + eps).
+    K must already be padded to a multiple of n_chain.
+    """
+    m, k = xu.shape
+    n = wu.shape[1]
+    n_seg = k // n_chain
+    w_seg = wu.reshape(n_seg, n_chain, n).astype(jnp.float32)
+    out = jnp.zeros((m, n), jnp.float32)
+    for b in range(bits_a):
+        plane = ((xu >> b) & 1).reshape(m, n_seg, n_chain).astype(jnp.float32)
+        partial = jnp.einsum("msk,skn->msn", plane, w_seg)
+        if sigma > 0.0:
+            # linear noise index: ((b*n_seg + seg)*M + row)*N + col
+            seg_i = jnp.arange(n_seg, dtype=jnp.uint32)
+            row_i = jnp.arange(m, dtype=jnp.uint32)
+            col_i = jnp.arange(n, dtype=jnp.uint32)
+            idx = ((jnp.uint32(b) * n_seg + seg_i[None, :, None])
+                   * jnp.uint32(m) + row_i[:, None, None]) \
+                * jnp.uint32(n) + col_i[None, None, :]
+            partial = partial + sigma * gauss_noise(idx, seed)
+        if tdc_q > 1:
+            partial = tdc_q * jnp.round(partial / tdc_q)
+        else:
+            partial = jnp.round(partial)
+        out = out + (2.0 ** b) * partial.sum(1)
+    return out

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for the bit-serial noisy TD-VMM.
+
+Hardware mapping (TPU adaptation of the paper's scheme — DESIGN.md §2):
+one chain segment (length n_chain) of one output column is a "hardware
+chain"; a grid step processes a (bm x n_chain) x (n_chain x bn) tile on the
+MXU once per activation bit-plane, adds the per-chain Gaussian error from a
+counter-based hash (no HBM RNG traffic), applies TDC rounding, and
+accumulates 2^b-weighted partials into the fp32 output tile held in VMEM.
+
+Grid: (M/bm, N/bn, K/n_chain) — K innermost so the output tile is revisited
+and accumulated in place.  BlockSpecs keep all three tiles in VMEM; the
+operand tiles are int8-ranged (codes), so the MXU dot runs at int8 density
+on real hardware (dot with preferred_element_type=float32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GOLDEN = 0x9E3779B9
+
+
+def _hash32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _uniform(bits):
+    return (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24)) \
+        + (0.5 / (1 << 24))
+
+
+def _td_vmm_kernel(x_ref, w_ref, seed_ref, o_ref, *, bits_a: int,
+                   sigma: float, tdc_q: int, n_seg: int,
+                   m_total: int, n_total: int, bm: int, bn: int):
+    """One (bm, bn) output tile, one chain segment (k-step)."""
+    seg = pl.program_id(2)
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(seg == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)            # (bm, n_chain) offset codes
+    w = w_ref[...].astype(jnp.float32)          # (n_chain, bn)
+    seed = seed_ref[0]
+
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for b in range(bits_a):
+        plane = ((x >> b) & 1).astype(jnp.float32)
+        partial = jax.lax.dot(plane, w,
+                              preferred_element_type=jnp.float32)
+        if sigma > 0.0:
+            row = (jax.lax.broadcasted_iota(jnp.uint32, partial.shape, 0)
+                   + jnp.uint32(i * bm))
+            col = (jax.lax.broadcasted_iota(jnp.uint32, partial.shape, 1)
+                   + jnp.uint32(j * bn))
+            idx = ((jnp.uint32(b) * jnp.uint32(n_seg)
+                    + jnp.uint32(seg)) * jnp.uint32(m_total) + row) \
+                * jnp.uint32(n_total) + col
+            h1 = _hash32(idx ^ seed)
+            h2 = _hash32(idx ^ seed ^ jnp.uint32(GOLDEN))
+            z = jnp.sqrt(-2.0 * jnp.log(_uniform(h1))) \
+                * jnp.cos(2.0 * jnp.pi * _uniform(h2))
+            partial = partial + sigma * z
+        if tdc_q > 1:
+            partial = tdc_q * jnp.round(partial * (1.0 / tdc_q))
+        else:
+            partial = jnp.round(partial)
+        acc = acc + (2.0 ** b) * partial
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits_a", "n_chain", "sigma",
+                                             "tdc_q", "bm", "bn",
+                                             "interpret"))
+def td_vmm_pallas(xu: jnp.ndarray, wu: jnp.ndarray, seed: jnp.ndarray,
+                  *, bits_a: int, n_chain: int, sigma: float, tdc_q: int,
+                  bm: int = 128, bn: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """xu (M, K) / wu (K, N) offset-encoded codes; K % n_chain == 0.
+    M, N are padded up to tile multiples internally."""
+    m, k = xu.shape
+    n = wu.shape[1]
+    assert k % n_chain == 0, "pad K to a multiple of n_chain first"
+    n_seg = k // n_chain
+    bm_ = min(bm, m) if m % min(bm, m) == 0 else bm
+    m_pad = -(-m // bm) * bm
+    n_pad = -(-n // bn) * bn
+    xu_p = jnp.pad(xu, ((0, m_pad - m), (0, 0))).astype(jnp.int32)
+    wu_p = jnp.pad(wu, ((0, 0), (0, n_pad - n))).astype(jnp.int32)
+    seed_arr = jnp.asarray([seed], jnp.uint32) if jnp.ndim(seed) == 0 \
+        else seed.astype(jnp.uint32).reshape(1)
+
+    # noise indices use the TRUE (m, n): identical to the ref oracle; padded
+    # rows/cols may collide but are sliced away below.
+    kern = functools.partial(
+        _td_vmm_kernel, bits_a=bits_a, sigma=sigma, tdc_q=tdc_q,
+        n_seg=n_seg, m_total=m, n_total=n, bm=bm, bn=bn)
+    out = pl.pallas_call(
+        kern,
+        grid=(m_pad // bm, n_pad // bn, n_seg),
+        in_specs=[
+            pl.BlockSpec((bm, n_chain), lambda i, j, s: (i, s)),
+            pl.BlockSpec((n_chain, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(xu_p, wu_p, seed_arr)
+    return out[:m, :n]

@@ -1,0 +1,1 @@
+"""Launch layer: mesh, sharding, input specs, steps, drivers, dry-run."""

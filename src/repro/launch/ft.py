@@ -1,0 +1,89 @@
+"""Fault tolerance and straggler mitigation for the training loop.
+
+Single-process implementations of the cluster-scale mechanisms, with the
+same interfaces a multi-host deployment would use:
+
+  * Heartbeat/step-time watchdog: tracks a rolling step-time distribution;
+    a step exceeding p50 * straggler_factor is flagged (at scale: triggers
+    hot-spare swap or collective reconfiguration; here: logged + counted,
+    and a standing policy object decides restart vs skip).
+  * RetryPolicy: classify exceptions into retryable (preemption-like,
+    transient I/O) vs fatal; run_with_retries re-enters the train loop from
+    the last checkpoint — the loop body is idempotent by construction
+    (stateless data stream + checkpointed step).
+  * Elastic remesh on restore is handled by checkpoint.restore(shardings=…):
+    a restarted job may come up with a different device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+
+@dataclasses.dataclass
+class WatchdogReport:
+    step: int
+    duration: float
+    p50: float
+    is_straggler: bool
+
+
+class StepWatchdog:
+    def __init__(self, straggler_factor: float = 3.0, window: int = 50,
+                 warmup_steps: int = 3):
+        self.factor = straggler_factor
+        self.times: deque = deque(maxlen=window)
+        self.warmup = warmup_steps
+        self.straggler_count = 0
+        self._t0 = None
+        self._step = -1
+
+    def start(self, step: int):
+        self._step = step
+        self._t0 = time.monotonic()
+
+    def stop(self) -> WatchdogReport:
+        dur = time.monotonic() - self._t0
+        hist = sorted(self.times)
+        p50 = hist[len(hist) // 2] if hist else dur
+        straggler = (len(self.times) >= self.warmup
+                     and dur > self.factor * p50)
+        if straggler:
+            self.straggler_count += 1
+        else:
+            self.times.append(dur)   # keep the baseline uncontaminated
+        return WatchdogReport(self._step, dur, p50, straggler)
+
+
+class Preemption(RuntimeError):
+    """Raised by the environment (or tests) to simulate node loss."""
+
+
+RETRYABLE = (Preemption, OSError, TimeoutError)
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_restarts: int = 5
+    backoff_s: float = 0.1
+
+
+def run_with_retries(body: Callable[[], object],
+                     policy: RetryPolicy = RetryPolicy(),
+                     on_restart: Callable[[int, BaseException], None]
+                     | None = None):
+    """Run `body` (a full train session that resumes from the latest
+    checkpoint) restarting on retryable failures."""
+    restarts = 0
+    while True:
+        try:
+            return body()
+        except RETRYABLE as e:          # noqa: PERF203
+            restarts += 1
+            if restarts > policy.max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts, e)
+            time.sleep(policy.backoff_s * restarts)

@@ -1,0 +1,103 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell — the
+dry-run lowers against these (weak-type-correct, shardable, no allocation).
+
+Conventions (documented in DESIGN.md):
+  * train/prefill on decoder archs: tokens/labels (B, S).
+  * vlm: 1024 stub patch embeddings replace the first 1024 context
+    positions: embeds (B, 1024, d_frontend) + tokens (B, S - 1024).
+  * audio enc-dec: the context splits between encoder frames and decoder
+    tokens: train -> embeds (B, S/2, d_f) + tokens (B, S/2); prefill_32k ->
+    embeds (B, S, d_f) + tokens (B, 2048); decode -> self-cache of S with
+    cross memory capped at 8192 frames.
+  * decode shapes: one new token against a KV cache/SSM state of length S.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchConfig
+from repro.configs.base import ShapeCfg
+from repro.launch import sharding as shard_lib
+from repro.models import encdec, transformer
+
+TOKEN_DT = jnp.int32
+EMBED_DT = jnp.bfloat16
+CACHE_DT = jnp.bfloat16
+
+N_PATCHES = 1024
+CROSS_MEMORY_CAP = 8192
+DEC_PREFILL = 2048
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _vis_positions(cfg, s: int) -> int:
+    return min(N_PATCHES, max(s // 4, 16))
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeCfg, mesh) -> dict:
+    """Inputs of train/prefill steps."""
+    cfg = arch.model
+    b, s = shape.global_batch, shape.seq_len
+    bs = shard_lib.batch_spec(mesh, b, 2)
+    bs3 = shard_lib.batch_spec(mesh, b, 3)
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            s_src, s_tgt = s // 2, s // 2
+        else:                     # prefill: seq_len on the encoder
+            s_src, s_tgt = s, DEC_PREFILL
+        return {
+            "embeds": _sds((b, s_src, cfg.d_frontend), EMBED_DT, mesh, bs3),
+            "tokens": _sds((b, s_tgt), TOKEN_DT, mesh, bs),
+            "labels": _sds((b, s_tgt), TOKEN_DT, mesh, bs),
+        }
+    out = {}
+    s_txt = s
+    if cfg.frontend is not None:
+        n_vis = _vis_positions(cfg, s)
+        s_txt = s - n_vis
+        out["embeds"] = _sds((b, n_vis, cfg.d_frontend), EMBED_DT, mesh, bs3)
+    out["tokens"] = _sds((b, s_txt), TOKEN_DT, mesh, bs)
+    out["labels"] = _sds((b, s_txt), TOKEN_DT, mesh, bs)
+    return out
+
+
+def decode_state_shapes(arch: ArchConfig, shape: ShapeCfg) -> dict:
+    """Abstract decode-state pytree (ShapeDtypeStructs, no allocation)."""
+    cfg = arch.model
+    b, s = shape.global_batch, shape.seq_len
+
+    if cfg.family == "encdec":
+        def build():
+            caches = encdec.init_caches(b, s, cfg, CACHE_DT)
+            enc_out = jnp.zeros((b, CROSS_MEMORY_CAP, cfg.d_model), EMBED_DT)
+            return {"layers": caches, "enc_out": enc_out}
+    else:
+        def build():
+            caches = transformer.init_caches(b, s, cfg, CACHE_DT)
+            return {"layers": caches, "enc_out": None}
+    return jax.eval_shape(build)
+
+
+def decode_input_specs(arch: ArchConfig, shape: ShapeCfg, mesh) -> dict:
+    """Inputs of the serve (decode) step: one token + the state pytree."""
+    cfg = arch.model
+    b = shape.global_batch
+    state_shapes = decode_state_shapes(arch, shape)
+    specs = shard_lib.cache_specs(state_shapes, mesh)
+    state = jax.tree_util.tree_map(
+        lambda sds, sp: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, sp)),
+        state_shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    tok = _sds((b, 1), TOKEN_DT, mesh, shard_lib.batch_spec(mesh, b, 2))
+    return {"tok": tok, "state": state}
+
+
+def shape_cfg(name: str) -> ShapeCfg:
+    return SHAPES[name]

@@ -1,0 +1,115 @@
+"""Step builders: train_step (grad-accum microbatching + AdamW/ZeRO),
+prefill_step, serve_step (single-token decode).
+
+Every step is a pure function suitable for jax.jit with explicit
+in/out_shardings; the builders close over static config only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import common, get_api
+from repro.optim import adamw
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+def build_train_step(arch: ArchConfig, shape: ShapeCfg):
+    cfg = arch.model
+    pol = common.resolve_policy(arch.td)
+    api = get_api(cfg)
+    n_micro = arch.microbatches_for(shape.name)
+    compute_dt = DTYPES[arch.train.compute_dtype]
+    ar_dt = DTYPES[arch.train.grad_allreduce_dtype]
+
+    def loss_fn(params, mb, key):
+        p_c = common.cast_tree(params, compute_dt)
+        loss, metrics = api["train_loss"](p_c, mb, cfg, pol, key,
+                                          remat=arch.train.remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, seed):
+        key = jax.random.key(seed)
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch, key)
+        else:
+            def resh(a):
+                return a.reshape(n_micro, a.shape[0] // n_micro,
+                                 *a.shape[1:])
+            mbs = jax.tree_util.tree_map(resh, batch)
+
+            def body(carry, xs):
+                gacc, i = carry
+                mb = xs
+                (l, mets), g = grad_fn(params, mb,
+                                       jax.random.fold_in(key, i))
+                g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(ar_dt), gacc, g)
+                return (g, i + 1), (l, mets)
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, ar_dt), params)
+            (gsum, _), (losses, metric_seq) = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.int32)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+            loss = losses.mean()
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(), metric_seq)
+
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, opt_state, arch.train)
+        metrics = {**metrics, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(arch: ArchConfig, shape: ShapeCfg):
+    cfg = arch.model
+    pol = common.resolve_policy(arch.td)
+    api = get_api(cfg)
+    compute_dt = DTYPES[arch.train.compute_dtype]
+
+    def prefill_step(params, batch):
+        p_c = common.cast_tree(params, compute_dt)
+        b = {k: v for k, v in batch.items() if k != "labels"}
+        logits, state = api["prefill"](p_c, b, cfg, pol,
+                                       s_cache=shape.seq_len)
+        return logits, state
+
+    return prefill_step
+
+
+def build_serve_step(arch: ArchConfig, shape: ShapeCfg):
+    """One decode step: new token against a seq_len KV cache/SSM state."""
+    cfg = arch.model
+    pol = common.resolve_policy(arch.td)
+    api = get_api(cfg)
+    compute_dt = DTYPES[arch.train.compute_dtype]
+
+    def serve_step(params, tok, state):
+        p_c = common.cast_tree(params, compute_dt)
+        logits, new_state = api["decode_step"](p_c, tok, state, cfg, pol)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_state
+
+    return serve_step
+
+
+def build_forward_eval(arch: ArchConfig):
+    """Forward-only loss eval (used by noise-tolerance runs on LMs)."""
+    cfg = arch.model
+    api = get_api(cfg)
+
+    def eval_step(params, batch, pol, key):
+        loss, metrics = api["train_loss"](params, batch, cfg, pol, key)
+        return metrics
+
+    return eval_step

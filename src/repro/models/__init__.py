@@ -1,0 +1,9 @@
+"""Model zoo: unified decoder/enc-dec stacks covering the 10 assigned
+architectures (dense GQA / qk-norm / QKV-bias, MoE, Mamba2 hybrid, RWKV6,
+enc-dec, VLM/audio stub frontends)."""
+from repro.models import (attention, common, encdec, ffn, mamba2, model_api,
+                          rwkv6, transformer)
+from repro.models.model_api import get_api, matmul_shapes
+
+__all__ = ["attention", "common", "encdec", "ffn", "mamba2", "model_api",
+           "rwkv6", "transformer", "get_api", "matmul_shapes"]

@@ -1,0 +1,165 @@
+"""Shared model building blocks: norms, RoPE, embeddings, losses, dtype and
+TD-policy plumbing.
+
+Parameters are plain nested dicts of jnp arrays.  Every matmul goes through
+`dense(...)`, which routes to the TD execution simulator according to the
+arch's TDExecCfg — this is how the paper's technique is a first-class
+feature of every architecture rather than a bolt-on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg, TDExecCfg
+from repro.tdsim import policy as td_policy
+from repro.tdsim import td_linear
+
+
+# ---------------------------------------------------------------------------
+# TD policy resolution (host-side, hashable -> safe as jit constant)
+# ---------------------------------------------------------------------------
+def resolve_policy(td: TDExecCfg) -> td_policy.TDPolicy:
+    if td.mode == "precise":
+        return td_policy.PRECISE
+    if td.mode == "quant":
+        return td_policy.quant_policy(td.bits_a, td.bits_w)
+    if td.mode == "td":
+        return td_policy.solve_td_policy(td.bits_a, td.bits_w, td.n_chain,
+                                         td.sigma_max,
+                                         use_pallas=td.use_pallas)
+    raise ValueError(f"unknown td mode {td.mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sharding constraints (no-ops outside a mesh context)
+# ---------------------------------------------------------------------------
+def maybe_constrain(x: jnp.ndarray, *axes) -> jnp.ndarray:
+    """with_sharding_constraint(x, P(*axes)) if a global mesh providing all
+    referenced axis names is active; otherwise identity.  Lets model code
+    carry distribution hints without coupling tests to a mesh."""
+    env = jax.sharding.get_abstract_mesh()
+    if env is None or env.empty:
+        return x
+    names = set(env.axis_names)
+
+    def ok(a):
+        if a is None:
+            return True
+        if isinstance(a, (tuple, list)):
+            return all(n in names for n in a)
+        return a in names
+
+    if not all(ok(a) for a in axes):
+        return x
+    # drop axes that do not divide the dim
+    fixed = []
+    for dim, a in zip(x.shape, axes):
+        if a is None:
+            fixed.append(None)
+            continue
+        ax = (a,) if isinstance(a, str) else tuple(a)
+        n = 1
+        for nm in ax:
+            n *= env.shape[nm]
+        fixed.append(a if dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*fixed))
+
+
+def batch_sharding_axes(env=None):
+    env = env or jax.sharding.get_abstract_mesh()
+    if env is None or env.empty:
+        return None
+    return ("pod", "data") if "pod" in env.axis_names else "data"
+
+
+# ---------------------------------------------------------------------------
+# Initializers / dense layer
+# ---------------------------------------------------------------------------
+def dense_init(key: jax.Array, d_in: int, d_out: int, pol,
+               bias: bool = False, dtype=jnp.float32,
+               scale: float | None = None) -> dict:
+    return td_linear.init_linear(key, d_in, d_out, pol, bias, dtype, scale)
+
+
+def dense(params: dict, x: jnp.ndarray, pol, key=None) -> jnp.ndarray:
+    return td_linear.linear(params, x, pol, key)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                         # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / losses
+# ---------------------------------------------------------------------------
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return params["table"][ids]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None,
+                  z_coef: float = 1e-4) -> jnp.ndarray:
+    """Mean next-token CE with z-loss; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    z = z_coef * lse ** 2
+    loss = nll + z
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()
+
+
+def fold_key(key: jax.Array | None, *idx: int) -> jax.Array | None:
+    if key is None:
+        return None
+    for i in idx:
+        key = jax.random.fold_in(key, i)
+    return key
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)

@@ -1,0 +1,130 @@
+"""Encoder-decoder stack (seamless-m4t family): bidirectional encoder over
+stub audio-frame embeddings, causal decoder with cross-attention.
+
+Decode caches: per decoder layer a self-attention KV cache plus static
+cross-attention K/V computed once from the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import attention, common, ffn
+
+
+def init_params(key: jax.Array, cfg: ModelCfg, pol,
+                dtype=jnp.float32) -> dict:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    keys = jax.random.split(key, n_enc + cfg.n_layers + 4)
+    d_in = cfg.d_frontend or cfg.d_model
+    params: dict = {
+        "adapter": common.dense_init(keys[0], d_in, cfg.d_model, pol,
+                                     dtype=dtype),
+        "embed": common.embed_init(keys[1], cfg.vocab, cfg.d_model, dtype),
+        "enc_norm": common.rmsnorm_init(cfg.d_model, dtype),
+        "final_norm": common.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": common.dense_init(keys[2], cfg.d_model, cfg.vocab, pol,
+                                     dtype=dtype,
+                                     scale=1.0 / cfg.d_model ** 0.5),
+    }
+    enc_layers = []
+    for i in range(n_enc):
+        lk = jax.random.split(keys[3 + i], 2)
+        enc_layers.append({
+            "ln1": common.rmsnorm_init(cfg.d_model, dtype),
+            "ln2": common.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attention.attn_init(lk[0], cfg, pol, dtype),
+            "mlp": ffn.swiglu_init(lk[1], cfg.d_model, cfg.d_ff, pol, dtype),
+        })
+    params["encoder"] = enc_layers
+    dec_layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[3 + n_enc + i], 3)
+        dec_layers.append({
+            "ln1": common.rmsnorm_init(cfg.d_model, dtype),
+            "ln_x": common.rmsnorm_init(cfg.d_model, dtype),
+            "ln2": common.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attention.attn_init(lk[0], cfg, pol, dtype),
+            "xattn": attention.attn_init(lk[1], cfg, pol, dtype, cross=True),
+            "mlp": ffn.swiglu_init(lk[2], cfg.d_model, cfg.d_ff, pol, dtype),
+        })
+    params["decoder"] = dec_layers
+    return params
+
+
+def encode(params: dict, embeds: jnp.ndarray, cfg: ModelCfg, pol,
+           key: jax.Array | None = None,
+           remat: str = "none") -> jnp.ndarray:
+    """embeds: (B, S_src, d_frontend) stub frame embeddings."""
+    x = common.dense(params["adapter"], embeds, pol)
+    x = common.maybe_constrain(x, common.batch_sharding_axes(), None, None)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def run(lp, xx, i, lkey):
+        h = common.rmsnorm(lp["ln1"], xx, cfg.rms_eps)
+        y, _ = attention.attention(lp["attn"], h, cfg, pol, positions,
+                                   causal=not cfg.enc_bidirectional,
+                                   key=common.fold_key(lkey, 2 * i))
+        xx = xx + y
+        h = common.rmsnorm(lp["ln2"], xx, cfg.rms_eps)
+        return xx + ffn.swiglu(lp["mlp"], h, pol,
+                               common.fold_key(lkey, 2 * i + 1))
+
+    if remat in ("full", "dots"):
+        run = jax.checkpoint(run, static_argnums=(2,))
+    for i, lp in enumerate(params["encoder"]):
+        x = run(lp, x, i, key)
+    return common.rmsnorm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def decode(params: dict, tokens: jnp.ndarray, enc_out: jnp.ndarray,
+           cfg: ModelCfg, pol,
+           caches: list | None = None,
+           positions: jnp.ndarray | None = None,
+           key: jax.Array | None = None,
+           remat: str = "none"
+           ) -> tuple[jnp.ndarray, list | None]:
+    x = common.embed(params["embed"], tokens)
+    s = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+    new_caches: list = [None] * cfg.n_layers
+
+    def run(lp, xx, cache, i, lkey):
+        h = common.rmsnorm(lp["ln1"], xx, cfg.rms_eps)
+        y, nc = attention.attention(lp["attn"], h, cfg, pol, positions,
+                                    cache=None if cache is None
+                                    else cache["self"],
+                                    key=common.fold_key(lkey, 3 * i))
+        xx = xx + y
+        h = common.rmsnorm(lp["ln_x"], xx, cfg.rms_eps)
+        y, _ = attention.attention(lp["xattn"], h, cfg, pol, positions,
+                                   kv_from=enc_out, causal=False,
+                                   key=common.fold_key(lkey, 3 * i + 1))
+        xx = xx + y
+        h = common.rmsnorm(lp["ln2"], xx, cfg.rms_eps)
+        xx = xx + ffn.swiglu(lp["mlp"], h, pol,
+                             common.fold_key(lkey, 3 * i + 2))
+        return xx, nc
+
+    if remat in ("full", "dots"):
+        run = jax.checkpoint(run, static_argnums=(3,))
+    for i, lp in enumerate(params["decoder"]):
+        cache = caches[i] if caches is not None else None
+        x, nc = run(lp, x, cache, i, key)
+        if nc is not None:
+            new_caches[i] = {"self": nc}
+    x = common.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = common.dense(params["lm_head"], x, pol,
+                          common.fold_key(key, 10_000))
+    logits = common.maybe_constrain(
+        logits, common.batch_sharding_axes(), None, "model")
+    return logits, (new_caches if caches is not None else None)
+
+
+def init_caches(b: int, s_cache: int, cfg: ModelCfg,
+                dtype=jnp.bfloat16) -> list:
+    return [{"self": attention.init_cache(b, s_cache, cfg, dtype)}
+            for _ in range(cfg.n_layers)]

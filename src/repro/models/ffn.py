@@ -1,0 +1,152 @@
+"""FFNs: SwiGLU dense MLP and top-k MoE with sort-based capacity dispatch.
+
+The MoE dispatch is the production pattern (GShard/t5x-style): top-k routing,
+fixed per-expert capacity Cap = ceil(T * k / E * capacity_factor), sort-based
+slotting (no (T, E, Cap) one-hot materialization — O(Tk log Tk) sort plus
+gathers), overflow tokens dropped, combine weighted by router probability.
+Experts are sharded over the 'model' mesh axis (expert parallelism); the
+token gather/scatter across the data<->model boundary lowers to all-to-all
+style collectives under pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg, MoECfg
+from repro.models import common
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+def swiglu_init(key: jax.Array, d: int, d_ff: int, pol,
+                dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": common.dense_init(k1, d, d_ff, pol, dtype=dtype),
+            "wg": common.dense_init(k2, d, d_ff, pol, dtype=dtype),
+            "wo": common.dense_init(k3, d_ff, d, pol, dtype=dtype,
+                                    scale=1.0 / d_ff ** 0.5)}
+
+
+def swiglu(params: dict, x: jnp.ndarray, pol,
+           key: jax.Array | None = None) -> jnp.ndarray:
+    k1, k2, k3 = (common.fold_key(key, i) for i in range(3))
+    h = jax.nn.silu(common.dense(params["wg"], x, pol, k1)) \
+        * common.dense(params["wi"], x, pol, k2)
+    return common.dense(params["wo"], h, pol, k3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def moe_init(key: jax.Array, d: int, moe: MoECfg, pol,
+             dtype=jnp.float32) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    e, f = moe.num_experts, moe.d_ff_expert
+    std = 1.0 / d ** 0.5
+    p = {
+        "router": {"w": jax.random.normal(kr, (d, e), dtype) * std},
+        "wi": jax.random.normal(k1, (e, d, f), dtype) * std,
+        "wg": jax.random.normal(k2, (e, d, f), dtype) * std,
+        "wo": jax.random.normal(k3, (e, f, d), dtype) * (1.0 / f ** 0.5),
+    }
+    if pol.mode != "precise":
+        from repro.quant import lsq
+        for nm in ("wi", "wg", "wo"):
+            p[f"s_{nm}"] = lsq.init_step_size(p[nm], pol.bits_w, signed=True)
+        p["s_a"] = jnp.asarray(2.0 / (lsq.qrange(pol.bits_a, True)[1] ** 0.5),
+                               dtype)
+    return p
+
+
+def _expert_mm(xs: jnp.ndarray, w: jnp.ndarray, params: dict, nm: str,
+               pol, key) -> jnp.ndarray:
+    """Per-expert matmul routed through the TD simulator when quantized.
+    xs (E, Cap, d) @ w (E, d, f) -> (E, Cap, f)."""
+    if pol.mode == "precise":
+        return jnp.einsum("ecd,edf->ecf", xs, w)
+    from repro.tdsim import td_linear
+    s_a, s_w = params["s_a"], params[f"s_{nm}"]
+
+    def one(xe, we, ke):
+        return td_linear.td_matmul(xe, we, s_a, s_w, pol, ke)
+
+    keys = (jax.random.split(key, w.shape[0]) if key is not None
+            else jnp.zeros((w.shape[0], 2), jnp.uint32))
+    return jax.vmap(one)(xs, w, keys)
+
+
+def _capacity(t: int, moe: MoECfg) -> int:
+    cap = int(-(-t * moe.top_k * moe.capacity_factor // moe.num_experts))
+    return max(moe.top_k, min(cap, t))
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, moe: MoECfg, pol,
+            key: jax.Array | None = None
+            ) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (y, aux_losses).
+
+    Returns router z-loss and load-balance aux loss for the trainer.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    cap = _capacity(t, moe)
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"]["w"]).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based slotting -------------------------------------------
+    flat_e = top_e.reshape(-1)                                  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)                    # group by expert
+    sorted_e = flat_e[order]
+    # rank within expert group = position - first-position-of-group
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(t * k) - group_start[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)      # overflow bin
+    token_of = order // k                                       # (T*k,)
+    weight_of = top_p.reshape(-1)[order]
+
+    # gather tokens into (E*Cap, d) slots (one extra overflow row, dropped)
+    slot_token = jnp.zeros((e * cap + 1,), jnp.int32).at[slot].set(
+        token_of.astype(jnp.int32), mode="drop")
+    slot_weight = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, weight_of, 0.0), mode="drop")
+    slot_token = slot_token[:-1]
+    slot_weight = slot_weight[:-1]
+    xs = xt[slot_token].reshape(e, cap, d)                      # (E, Cap, d)
+    # EP: grouped tokens live with their expert (all-to-all boundary); the
+    # capacity dim shards over 'data' — without it the expert GEMMs were
+    # replicated across the whole data axis (16x waste, §Perf B1).
+    xs = common.maybe_constrain(xs, "model", "data", None)
+
+    # ---- expert computation (EP over 'model') ---------------------------
+    kg, ki, ko = (common.fold_key(key, i) for i in range(3))
+    h = jax.nn.silu(_expert_mm(xs, params["wg"], params, "wg", pol, kg)) \
+        * _expert_mm(xs, params["wi"], params, "wi", pol, ki)
+    h = common.maybe_constrain(h, "model", "data", None)
+    ys = _expert_mm(h, params["wo"], params, "wo", pol, ko)     # (E, Cap, d)
+    ys = common.maybe_constrain(ys, "model", "data", None)
+
+    # ---- combine ---------------------------------------------------------
+    ys_flat = (ys.reshape(e * cap, d)
+               * slot_weight[:, None].astype(ys.dtype))
+    y = jnp.zeros((t, d), ys.dtype).at[slot_token].add(ys_flat)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = common.maybe_constrain(y, common.batch_sharding_axes(), None, None)
+
+    # ---- aux losses ------------------------------------------------------
+    # load balance (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)                                          # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (t * k)
+    aux = moe.aux_coef * e * (me * ce).sum()
+    zloss = moe.router_z_coef * (jax.scipy.special.logsumexp(
+        logits, axis=-1) ** 2).mean()
+    frac_dropped = 1.0 - keep.mean()
+    return y, {"moe_aux": aux, "moe_z": zloss,
+               "moe_dropped": frac_dropped}

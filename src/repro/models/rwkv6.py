@@ -1,0 +1,195 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay, plus the RWKV channel-mix FFN.
+
+Faithful elements: token-shift ddlerp with a low-rank dynamic mix, decay
+w_t = exp(-exp(w0 + tanh(x W_a) W_b)) (data-dependent, per channel), bonus
+term u, per-head wkv state S in R^{hd x hd}, group-norm on head outputs,
+sigmoid receptance channel mix.  The wkv6 recurrence is a lax.scan over time
+(training) and a single fused update (decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import common
+
+
+def dims(cfg: ModelCfg) -> tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd           # (n_heads, head_dim)
+
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def timemix_init(key: jax.Array, cfg: ModelCfg, pol,
+                 dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    nh, hd = dims(cfg)
+    r_mix, r_dec = cfg.rwkv.mix_lora, cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 12)
+    p = {
+        # static token-shift mixes
+        "mu": {m: jnp.full((d,), 0.5, dtype) for m in MIX_NAMES},
+        # shared dynamic-mix LoRA trunk: d -> 5*r_mix -> 5*d
+        "mix_w1": jax.random.normal(ks[0], (d, 5 * r_mix), dtype) * 0.01,
+        "mix_w2": jax.random.normal(ks[1], (5, r_mix, d), dtype) * 0.01,
+        # data-dependent decay LoRA
+        "w0": jnp.full((d,), -2.0, dtype),
+        "dec_a": jax.random.normal(ks[2], (d, r_dec), dtype) * 0.01,
+        "dec_b": jax.random.normal(ks[3], (r_dec, d), dtype) * 0.01,
+        "u": jax.random.normal(ks[4], (nh, hd), dtype) * 0.1,
+        "wr": common.dense_init(ks[5], d, d, pol, dtype=dtype),
+        "wk": common.dense_init(ks[6], d, d, pol, dtype=dtype),
+        "wv": common.dense_init(ks[7], d, d, pol, dtype=dtype),
+        "wg": common.dense_init(ks[8], d, d, pol, dtype=dtype),
+        "wo": common.dense_init(ks[9], d, d, pol, dtype=dtype,
+                                scale=1.0 / d ** 0.5),
+        "ln_x": {"scale": jnp.ones((d,), dtype),
+                 "bias": jnp.zeros((d,), dtype)},
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray | None) -> jnp.ndarray:
+    """Previous-token tensor; `last` (B,1,d) is the decode carry."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last.astype(x.dtype), x], axis=1)[:, :-1] \
+        if x.shape[1] > 1 else last.astype(x.dtype)
+
+
+def _ddlerp(params, x, xx):
+    """Data-dependent lerp between x and shifted xx for the 5 mixes."""
+    base = x + (xx - x) * 0.5
+    low = jnp.tanh(base @ params["mix_w1"])               # (B,S,5r)
+    b, s, _ = low.shape
+    low = low.reshape(b, s, 5, -1)
+    dyn = jnp.einsum("bsfr,frd->bsfd", low, params["mix_w2"])  # (B,S,5,d)
+    outs = {}
+    for i, m in enumerate(MIX_NAMES):
+        mix = params["mu"][m] + dyn[:, :, i]
+        outs[m] = x + (xx - x) * mix
+    return outs
+
+
+def wkv6_scan(r, k, v, w, u, s0=None):
+    """wkv6 recurrence.  r,k,v,w: (B,S,H,hd); u: (H,hd); s0 optional initial
+    state.  S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+    y_t = r_t . (S_{t-1} + (u*k_t) v_t^T).
+    Returns y (B,S,H,hd) and final state (B,H,hd,hd)."""
+    b, s, h, hd = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                              # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        # y = r . (S + (u*k) v^T)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., None] * S + kv
+        return S_new, y
+
+    rs = r.transpose(1, 0, 2, 3).astype(jnp.float32)
+    ks_ = k.transpose(1, 0, 2, 3).astype(jnp.float32)
+    vs = v.transpose(1, 0, 2, 3).astype(jnp.float32)
+    ws = w.transpose(1, 0, 2, 3).astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def timemix(params: dict, x: jnp.ndarray, cfg: ModelCfg, pol,
+            state: dict | None = None,
+            key: jax.Array | None = None
+            ) -> tuple[jnp.ndarray, dict | None]:
+    b, s, d = x.shape
+    nh, hd = dims(cfg)
+    last = state["shift_t"] if state is not None else None
+    xx = _token_shift(x, last)
+    mixes = _ddlerp(params, x.astype(jnp.float32), xx.astype(jnp.float32))
+
+    keys = [common.fold_key(key, i) for i in range(5)]
+    r = common.dense(params["wr"], mixes["r"].astype(x.dtype), pol, keys[0])
+    k = common.dense(params["wk"], mixes["k"].astype(x.dtype), pol, keys[1])
+    v = common.dense(params["wv"], mixes["v"].astype(x.dtype), pol, keys[2])
+    g = common.dense(params["wg"], mixes["g"].astype(x.dtype), pol, keys[3])
+    w_dyn = params["w0"] + jnp.tanh(mixes["w"] @ params["dec_a"]) \
+        @ params["dec_b"]
+    w = jnp.exp(-jnp.exp(w_dyn.astype(jnp.float32)))       # (B,S,d) in (0,1)
+
+    rh = r.reshape(b, s, nh, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, nh, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, nh, hd).astype(jnp.float32)
+    wh = w.reshape(b, s, nh, hd)
+
+    if state is None:
+        y, s_fin = wkv6_scan(rh, kh, vh, wh, params["u"].astype(jnp.float32))
+        new_state = None
+    elif s > 1:
+        # prefill into a decode state
+        y, s_fin = wkv6_scan(rh, kh, vh, wh,
+                             params["u"].astype(jnp.float32),
+                             s0=state["wkv"].astype(jnp.float32))
+        new_state = {"wkv": s_fin.astype(state["wkv"].dtype),
+                     "shift_t": x[:, -1:, :]}
+    else:
+        S = state["wkv"].astype(jnp.float32)               # (B,H,hd,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kh[:, 0], vh[:, 0])
+        y = jnp.einsum("bhk,bhkv->bhv",
+                       rh[:, 0], S + params["u"].astype(jnp.float32)[None, :, :, None] * kv)
+        S_new = wh[:, 0][..., None] * S + kv
+        y = y[:, None]
+        new_state = {"wkv": S_new.astype(state["wkv"].dtype),
+                     "shift_t": x[:, -1:, :]}
+
+    # group-norm over heads, then gate
+    yf = y.reshape(b, s, d)
+    yh = yf.reshape(b, s, nh, hd)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yn = ((yh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    yn = yn * params["ln_x"]["scale"] + params["ln_x"]["bias"]
+    out = common.dense(params["wo"],
+                       (yn * jax.nn.silu(g.astype(jnp.float32))
+                        ).astype(x.dtype), pol, keys[4])
+    return out, new_state
+
+
+def chanmix_init(key: jax.Array, cfg: ModelCfg, pol,
+                 dtype=jnp.float32) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": common.dense_init(k1, d, f, pol, dtype=dtype),
+        "wv": common.dense_init(k2, f, d, pol, dtype=dtype,
+                                scale=1.0 / f ** 0.5),
+        "wr": common.dense_init(k3, d, d, pol, dtype=dtype),
+    }
+
+
+def chanmix(params: dict, x: jnp.ndarray, cfg: ModelCfg, pol,
+            state: dict | None = None,
+            key: jax.Array | None = None
+            ) -> tuple[jnp.ndarray, dict | None]:
+    last = state["shift_c"] if state is not None else None
+    xx = _token_shift(x, last)
+    xk = x + (xx - x) * params["mu_k"]
+    xr = x + (xx - x) * params["mu_r"]
+    k1, k2, k3 = (common.fold_key(key, i) for i in range(3))
+    k = jnp.square(jax.nn.relu(common.dense(params["wk"], xk, pol, k1)))
+    kv = common.dense(params["wv"], k, pol, k2)
+    r = jax.nn.sigmoid(common.dense(params["wr"], xr, pol, k3))
+    new_state = {"shift_c": x[:, -1:, :]} if state is not None else None
+    return r * kv, new_state
+
+
+def init_state(b: int, cfg: ModelCfg, dtype=jnp.float32) -> dict:
+    nh, hd = dims(cfg)
+    d = cfg.d_model
+    return {"wkv": jnp.zeros((b, nh, hd, hd), dtype),
+            "shift_t": jnp.zeros((b, 1, d), dtype),
+            "shift_c": jnp.zeros((b, 1, d), dtype)}

@@ -1,0 +1,232 @@
+"""Unified decoder-only stack covering the dense, MoE, hybrid (zamba2) and
+attention-free (rwkv6) assigned architectures via per-layer mixer dispatch.
+
+Layer anatomy (pre-norm residual):
+    x += mixer(ln1(x))      mixer in {attn, shared_attn, mamba2, rwkv6}
+    x += ffn(ln2(x))        ffn   in {swiglu, moe, rwkv_chanmix}
+
+"shared_attn" (zamba2) applies one weight-tied attention block at several
+depths (per-site norms are private, block weights shared — stored once at
+the top level).  VLM/audio frontends are stubs: `embeds` (precomputed
+patch/frame embeddings) are adapter-projected and prepended to the token
+embeddings, matching the assignment's "modality frontend is a STUB" rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import attention, common, ffn, mamba2, rwkv6
+
+
+def _is_homogeneous(cfg: ModelCfg) -> bool:
+    """scan-over-layers requires identical layer structure (no shared-attn
+    hybrids, single mixer/ffn kind)."""
+    mixers = {cfg.mixer_at(i) for i in range(cfg.n_layers)}
+    ffns = {_ffn_kind(cfg, i) for i in range(cfg.n_layers)}
+    return len(mixers) == 1 and len(ffns) == 1 and \
+        "shared_attn" not in mixers
+
+
+def _ffn_kind(cfg: ModelCfg, layer: int) -> str:
+    if cfg.ffn_pattern is not None:
+        return cfg.ffn_pattern[layer]
+    if cfg.rwkv is not None:
+        return "rwkv_cm"
+    if cfg.moe is not None:
+        return "moe"
+    return "swiglu"
+
+
+def init_params(key: jax.Array, cfg: ModelCfg, pol,
+                dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params: dict = {"embed": common.embed_init(keys[0], cfg.vocab,
+                                               cfg.d_model, dtype)}
+    if cfg.frontend is not None:
+        d_in = cfg.d_frontend or cfg.d_model
+        params["adapter"] = common.dense_init(keys[1], d_in, cfg.d_model,
+                                              pol, dtype=dtype)
+    if any(cfg.mixer_at(i) == "shared_attn" for i in range(cfg.n_layers)):
+        params["shared_attn"] = attention.attn_init(keys[2], cfg, pol, dtype)
+
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[3 + i], 4)
+        mix = cfg.mixer_at(i)
+        lp: dict = {"ln1": common.rmsnorm_init(cfg.d_model, dtype),
+                    "ln2": common.rmsnorm_init(cfg.d_model, dtype)}
+        if mix == "attn":
+            lp["attn"] = attention.attn_init(lk[0], cfg, pol, dtype)
+        elif mix == "mamba2":
+            lp["mamba"] = mamba2.mamba2_init(lk[0], cfg, pol, dtype)
+        elif mix == "rwkv6":
+            lp["timemix"] = rwkv6.timemix_init(lk[0], cfg, pol, dtype)
+        elif mix == "shared_attn":
+            pass  # weights live at params["shared_attn"]
+        else:
+            raise ValueError(mix)
+        fk = _ffn_kind(cfg, i)
+        if fk == "swiglu":
+            lp["mlp"] = ffn.swiglu_init(lk[1], cfg.d_model, cfg.d_ff, pol,
+                                        dtype)
+        elif fk == "moe":
+            lp["moe"] = ffn.moe_init(lk[1], cfg.d_model, cfg.moe, pol, dtype)
+        elif fk == "rwkv_cm":
+            lp["chanmix"] = rwkv6.chanmix_init(lk[1], cfg, pol, dtype)
+        # fk == "none": mixer-only layer (zamba2 mamba blocks)
+        layers.append(lp)
+    if cfg.scan_layers and _is_homogeneous(cfg):
+        layers = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *layers)
+    params["layers"] = layers
+    params["final_norm"] = common.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            keys[-1], cfg.d_model, cfg.vocab, pol, dtype=dtype,
+            scale=1.0 / cfg.d_model ** 0.5)
+    return params
+
+
+def _layer_apply(lp: dict, shared: dict | None, x: jnp.ndarray,
+                 cfg: ModelCfg, pol, i: int,
+                 positions: jnp.ndarray,
+                 cache: dict | None,
+                 key: jax.Array | None) -> tuple[jnp.ndarray, dict | None, dict]:
+    mix = cfg.mixer_at(i)
+    aux: dict = {}
+    kmix = common.fold_key(key, 2 * i)
+    kffn = common.fold_key(key, 2 * i + 1)
+    h = common.rmsnorm(lp["ln1"], x, cfg.rms_eps)
+    new_cache = None
+    if mix == "attn":
+        y, new_cache = attention.attention(lp["attn"], h, cfg, pol,
+                                           positions, cache=cache, key=kmix)
+    elif mix == "shared_attn":
+        y, new_cache = attention.attention(shared, h, cfg, pol,
+                                           positions, cache=cache, key=kmix)
+    elif mix == "mamba2":
+        y, new_cache = mamba2.mamba2(lp["mamba"], h, cfg, pol,
+                                     state=cache, key=kmix)
+    elif mix == "rwkv6":
+        y, new_cache = rwkv6.timemix(lp["timemix"], h, cfg, pol,
+                                     state=cache, key=kmix)
+    else:
+        raise ValueError(mix)
+    x = x + y
+
+    fk = _ffn_kind(cfg, i)
+    if fk == "none":
+        return x, new_cache, aux
+    h = common.rmsnorm(lp["ln2"], x, cfg.rms_eps)
+    if fk == "swiglu":
+        y = ffn.swiglu(lp["mlp"], h, pol, kffn)
+    elif fk == "moe":
+        y, aux = ffn.moe_ffn(lp["moe"], h, cfg.moe, pol, kffn)
+    else:
+        cm_state = (cache if (cache is not None and "shift_c" in
+                              (cache or {})) else None)
+        y, cm_new = rwkv6.chanmix(lp["chanmix"], h, cfg, pol,
+                                  state=cm_state, key=kffn)
+        if new_cache is not None and cm_new is not None:
+            new_cache = {**new_cache, **cm_new}
+    return x + y, new_cache, aux
+
+
+def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
+            caches: list | None = None,
+            positions: jnp.ndarray | None = None,
+            key: jax.Array | None = None,
+            remat: str = "none"
+            ) -> tuple[jnp.ndarray, list | None, dict]:
+    """Returns (logits, new_caches, aux).  batch: {"tokens": (B,S)} plus
+    optional {"embeds": (B,Nv,d_f)} for stub frontends."""
+    tokens = batch["tokens"]
+    x = common.embed(params["embed"], tokens)
+    if cfg.frontend is not None and "embeds" in batch:
+        emb = common.dense(params["adapter"], batch["embeds"], pol)
+        x = jnp.concatenate([emb.astype(x.dtype), x], axis=1)
+    x = common.maybe_constrain(x, common.batch_sharding_axes(), None, None)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+
+    shared = params.get("shared_attn")
+    new_caches: list = [None] * cfg.n_layers
+    aux_all: dict = {}
+
+    def run_layer(lp, xx, cache, i, lkey):
+        return _layer_apply(lp, shared, xx, cfg, pol, i, positions, cache,
+                            lkey)
+
+    if remat == "full":
+        run_layer = jax.checkpoint(run_layer, static_argnums=(3,))
+    elif remat == "dots":
+        run_layer = jax.checkpoint(
+            run_layer, static_argnums=(3,),
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    if cfg.scan_layers and _is_homogeneous(cfg):
+        stacked = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *params["layers"]) \
+            if isinstance(params["layers"], list) else params["layers"]
+        stacked_caches = None
+        if caches is not None:
+            stacked_caches = (jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *caches)
+                if isinstance(caches, list) else caches)
+
+        def scan_body(carry, xs):
+            xx, kk = carry
+            lp, cache_i, idx = xs
+            xx, nc, aux = _layer_apply(lp, shared, xx, cfg, pol, 0,
+                                       positions, cache_i,
+                                       common.fold_key(kk, idx))
+            return (xx, kk), (nc, aux)
+
+        body = scan_body
+        if remat in ("full", "dots"):
+            pol_fn = (None if remat == "full" else
+                      jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            body = jax.checkpoint(scan_body, policy=pol_fn) \
+                if pol_fn else jax.checkpoint(scan_body)
+        (x, _), (nc_stack, aux_stack) = jax.lax.scan(
+            body, (x, key), (stacked, stacked_caches,
+                             jnp.arange(cfg.n_layers)))
+        if caches is not None:
+            new_caches = nc_stack          # stacked pytree, same as input
+        aux_all = {k: v.sum() for k, v in aux_stack.items()}
+    else:
+        for i, lp in enumerate(params["layers"]):
+            cache = caches[i] if caches is not None else None
+            x, nc, aux = run_layer(lp, x, cache, i, key)
+            new_caches[i] = nc
+            for k2, v2 in aux.items():
+                aux_all[k2] = aux_all.get(k2, 0.0) + v2
+
+    x = common.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = common.dense(params["lm_head"], x, pol,
+                              common.fold_key(key, 10_000))
+    # keep the (huge) logits vocab-sharded; CE's logsumexp reduces over it
+    logits = common.maybe_constrain(
+        logits, common.batch_sharding_axes(), None, "model")
+    return logits, (new_caches if caches is not None else None), aux_all
+
+
+def init_caches(b: int, s_cache: int, cfg: ModelCfg,
+                dtype=jnp.bfloat16):
+    caches = []
+    for i in range(cfg.n_layers):
+        mix = cfg.mixer_at(i)
+        if mix in ("attn", "shared_attn"):
+            caches.append(attention.init_cache(b, s_cache, cfg, dtype))
+        elif mix == "mamba2":
+            caches.append(mamba2.init_state(b, cfg, jnp.float32))
+        elif mix == "rwkv6":
+            caches.append(rwkv6.init_state(b, cfg, jnp.float32))
+    if cfg.scan_layers and _is_homogeneous(cfg):
+        return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *caches)
+    return caches

@@ -1,0 +1,4 @@
+"""Quantization substrate: LSQ (paper ref [27]) + bit-serial decomposition."""
+from repro.quant import bitserial, lsq
+
+__all__ = ["bitserial", "lsq"]

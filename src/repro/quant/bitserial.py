@@ -1,0 +1,57 @@
+"""Exact bit-serial decomposition for the 1-by-B TD operating mode.
+
+The TD-MAC cell computes 1-bit-activation x B-bit-weight partial products
+(paper Fig. 4: "1xB TDMAC cell").  Signed integers are handled with *offset
+encoding*: v' = v + 2^(B-1) is unsigned, and
+
+    sum_k x_k w_k = sum_k x'_k w'_k - ox * sum_k w'_k - ow * sum_k x'_k
+                    + K * ox * ow
+
+where ox/ow are the offsets.  The correction terms are exact digital
+side-sums (a popcount for sum x', a static constant for sum w'), which is how
+TD/CIM macros handle signedness without negative delays.  Bit-planes of x'
+are processed serially; plane b is weighted by 2^b at recombination.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def to_offset(v_int: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Signed int in [-2^(B-1), 2^(B-1)-1] -> unsigned in [0, 2^B - 1]."""
+    return v_int + 2 ** (bits - 1)
+
+
+def offset_of(bits: int) -> int:
+    return 2 ** (bits - 1)
+
+
+def bit_planes(v_uint: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(bits, *v.shape) binary planes, LSB first.  v must be in [0, 2^B)."""
+    shifts = jnp.arange(bits, dtype=v_uint.dtype)
+    planes = (v_uint[None, ...] >> shifts.reshape((-1,) + (1,) * v_uint.ndim)) & 1
+    return planes
+
+
+def recompose_planes(plane_results: jnp.ndarray) -> jnp.ndarray:
+    """Weight plane b (leading axis, LSB first) by 2^b and sum."""
+    bits = plane_results.shape[0]
+    w = (2.0 ** jnp.arange(bits)).reshape((bits,) + (1,) * (plane_results.ndim - 1))
+    return (plane_results * w).sum(0)
+
+
+def signed_matmul_via_offset(x_int: jnp.ndarray, w_int: jnp.ndarray,
+                             bits_a: int, bits_w: int) -> jnp.ndarray:
+    """Reference: exact signed int matmul via offset encoding + corrections.
+
+    x_int: (..., K) signed codes;  w_int: (K, N) signed codes.
+    Equals x_int @ w_int exactly (tests assert bit-exactness).
+    """
+    ox, ow = offset_of(bits_a), offset_of(bits_w)
+    xu = to_offset(x_int, bits_a).astype(jnp.float32)
+    wu = to_offset(w_int, bits_w).astype(jnp.float32)
+    k = x_int.shape[-1]
+    main = xu @ wu
+    corr_w = ox * wu.sum(0)                       # (N,)   static per weight
+    corr_x = ow * xu.sum(-1, keepdims=True)       # (..., 1)  popcount side-sum
+    return main - corr_w - corr_x + k * ox * ow

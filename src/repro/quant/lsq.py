@@ -1,0 +1,73 @@
+"""Learned Step Size Quantization (LSQ), paper ref [27] (Esser et al. 2020).
+
+The paper quantizes ResNet18/20 to 4 bit with LSQ before its noise-tolerance
+study (Fig. 10).  We implement LSQ as a custom_vjp so the step size s is
+*learned* during QAT:
+
+  v_bar = clip(round(v / s), Qn, Qp);   v_hat = v_bar * s
+
+Gradients (straight-through on round, exact elsewhere):
+  d v_hat / d v = 1                   if Qn <= v/s <= Qp else 0
+  d v_hat / d s = -v/s + round(v/s)   in range;  clipped bound outside
+with the LSQ gradient scale g = 1 / sqrt(numel * Qp) applied to ds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: int, signed: bool) -> tuple[int, int]:
+    if signed:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return 0, 2 ** bits - 1
+
+
+@jax.custom_vjp
+def _lsq_core(v, s, qn, qp):
+    s_ = jnp.maximum(s, 1e-8)
+    return jnp.clip(jnp.round(v / s_), qn, qp) * s_
+
+
+def _lsq_core_fwd(v, s, qn, qp):
+    s_ = jnp.maximum(s, 1e-8)
+    vs = v / s_
+    v_bar = jnp.clip(jnp.round(vs), qn, qp)
+    return v_bar * s_, (vs, v_bar, s_, qn, qp)
+
+
+def _lsq_core_bwd(res, g):
+    vs, v_bar, s, qn, qp = res
+    in_range = (vs >= qn) & (vs <= qp)
+    dv = jnp.where(in_range, g, 0.0)
+    ds_elem = jnp.where(in_range, v_bar - vs, v_bar)
+    grad_scale = 1.0 / jnp.sqrt(jnp.asarray(float(vs.size))
+                                * jnp.maximum(qp, 1.0))
+    ds = (ds_elem * g).sum() * grad_scale
+    ds = jnp.broadcast_to(ds, jnp.shape(s)).astype(jnp.result_type(s))
+    return dv, ds, None, None
+
+
+_lsq_core.defvjp(_lsq_core_fwd, _lsq_core_bwd)
+
+
+def lsq_fake_quant(v: jnp.ndarray, s: jnp.ndarray, bits: int,
+                   signed: bool) -> jnp.ndarray:
+    """Differentiable LSQ fake-quant with the published gradient rules."""
+    qn, qp = qrange(bits, signed)
+    return _lsq_core(v, s, float(qn), float(qp))
+
+
+def lsq_quantize_int(v: jnp.ndarray, s: jnp.ndarray, bits: int,
+                     signed: bool) -> jnp.ndarray:
+    """Integer codes (no dequant); non-differentiable — callers recombine
+    with lsq_fake_quant via the stop_gradient STE trick."""
+    qn, qp = qrange(bits, signed)
+    s_ = jnp.maximum(s, 1e-8)
+    return jnp.clip(jnp.round(v / s_), qn, qp).astype(jnp.int32)
+
+
+def init_step_size(v: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    """LSQ init: s = 2 * mean(|v|) / sqrt(Qp)."""
+    _, qp = qrange(bits, signed)
+    return 2.0 * jnp.mean(jnp.abs(v)) / jnp.sqrt(jnp.asarray(float(qp)))

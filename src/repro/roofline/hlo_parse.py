@@ -1,0 +1,130 @@
+"""Parse post-SPMD optimized HLO text for collective traffic.
+
+`compiled.as_text()` (after SPMD partitioning) contains the per-device
+program; we extract every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op with its operand/result shapes and
+compute:
+  * operand_bytes  — the prescribed metric (sum of operand sizes),
+  * link_bytes     — ring-model per-chip traffic estimate
+        all-gather:        out * (n-1)/n      (received)
+        reduce-scatter:    in  * (n-1)/n
+        all-reduce:        2 * size * (n-1)/n
+        all-to-all:        size * (n-1)/n
+        collective-permute: size
+    (n = replica-group size parsed per op; conservative n/(n-1)->1 if absent)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DT_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# an HLO instruction line:  %name = TYPE kind(OPERANDS...), attrs
+_INSTR_RE = re.compile(
+    r"=\s+((?:\(?[\w\[\],{}\s/#*]+\)?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DT_BYTES[dt])
+    return total
+
+
+def _group_size(line: str) -> int:
+    # replica_groups={{0,1,2,3},...} or [16,32]<=[512] iota form
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+_OP_RE = re.compile(r"=\s+((?:\(?[\w\[\],{}\s/#*]+\)?))\s+([\w-]+)\(")
+
+
+def op_bytes_breakdown(hlo_text: str, top: int = 25) -> dict:
+    """Per-op-kind result-bytes histogram of an optimized HLO module —
+    the profiler for the memory roofline term (what is XLA counting?).
+
+    Returns {op_kind: result_bytes_total}, top-N kinds.
+    """
+    acc: dict = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.groups()
+        b = _shape_bytes(result_type)
+        if b:
+            acc[kind] = acc.get(kind, 0) + b
+    return dict(sorted(acc.items(), key=lambda kv: -kv[1])[:top])
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    operand_bytes: dict
+    link_bytes: dict
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {k: 0 for k in _COLL_KINDS}
+    operand_bytes = {k: 0.0 for k in _COLL_KINDS}
+    link_bytes = {k: 0.0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:        # async pair: count only the start
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.groups()
+        res_bytes = _shape_bytes(result_type)
+        # operands: everything inside the call parens
+        try:
+            inside = line.split("(", 1)[1]
+        except IndexError:
+            inside = ""
+        op_bytes = _shape_bytes(inside.split(")", 1)[0])
+        n = _group_size(line)
+        frac = (n - 1) / n
+        counts[kind] += 1
+        operand_bytes[kind] += op_bytes
+        if kind == "all-gather":
+            link_bytes[kind] += res_bytes * frac
+        elif kind == "reduce-scatter":
+            link_bytes[kind] += op_bytes * frac
+        elif kind == "all-reduce":
+            link_bytes[kind] += 2.0 * op_bytes * frac
+        elif kind == "all-to-all":
+            link_bytes[kind] += op_bytes * frac
+        else:
+            link_bytes[kind] += op_bytes
+    return CollectiveStats(counts, operand_bytes, link_bytes)

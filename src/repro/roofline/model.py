@@ -1,0 +1,85 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+TPU v5e-class hardware constants (per chip):
+  peak 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute_s    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+  memory_s     = HLO_bytes   / (chips * HBM_BW)
+  collective_s = coll_bytes  / (chips * LINK_BW)
+
+cost_analysis() on the SPMD-partitioned module is per-device; we detect
+which convention we got by comparing against the analytic MODEL_FLOPS and
+normalize to PER-CHIP seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+N_LINKS = 4                # usable links per chip on the 2D torus
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float           # per chip
+    hlo_bytes: float           # per chip
+    coll_bytes: float          # per chip (link-model)
+    model_flops: float         # 6*N*D (global, fwd+bwd) or serve analogue
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): remat/dispatch waste shows up
+        as a ratio below 1."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        denom = self.step_s * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+
+def make_roofline(arch: str, shape: str, mesh: str, chips: int,
+                  flops_total: float, bytes_total: float,
+                  coll_link_bytes_total: float,
+                  model_flops: float) -> Roofline:
+    """totals are whole-program (all chips); divide down to per-chip."""
+    f = flops_total / chips
+    b = bytes_total / chips
+    c = coll_link_bytes_total / chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=f, hlo_bytes=b, coll_bytes=c, model_flops=model_flops,
+        compute_s=f / PEAK_FLOPS,
+        memory_s=b / HBM_BW,
+        collective_s=c / (LINK_BW * N_LINKS),
+    )
+
+
+def model_flops_train(n_params: float, tokens: float) -> float:
+    return 6.0 * n_params * tokens
+
+
+def model_flops_serve(n_params_active: float, tokens: float) -> float:
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,74 @@
+"""Per-layer energy/throughput/area accounting for a model under a policy.
+
+Host-side only (reads static shapes, never traces): given the ledger of
+matmul shapes a model registers and an execution domain, evaluates the core
+design-space model per layer and aggregates -- this is the bridge from the
+assigned LM architectures to the paper's Figs. 9/11/12 axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import design_space
+from repro.core import constants as C
+from repro.tdsim.policy import TDPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulShape:
+    name: str
+    k: int            # contraction length
+    n_out: int        # output features
+    calls_per_token: float = 1.0   # e.g. layer count folded in by caller
+
+
+@dataclasses.dataclass
+class EnergyReport:
+    domain: str
+    per_layer: dict            # name -> dict(e_mac, macs, energy_j, ...)
+    total_macs_per_token: float
+    total_energy_per_token: float
+
+    def summary(self) -> str:
+        lines = [f"domain={self.domain} "
+                 f"macs/token={self.total_macs_per_token:.3e} "
+                 f"J/token={self.total_energy_per_token:.3e}"]
+        for name, d in self.per_layer.items():
+            lines.append(f"  {name}: E/MAC={d['e_mac']:.3e} J "
+                         f"macs={d['macs']:.3e} R={d['r']}")
+        return "\n".join(lines)
+
+
+def account(shapes: list[MatmulShape], pol: TDPolicy, domain: str = "td",
+            sigma_max: float | None = None,
+            m: int = C.M_DEFAULT) -> EnergyReport:
+    """Energy per generated/processed token for a list of matmul shapes.
+
+    Each (k, n_out) matmul maps to n_out hardware chains; a chain of length k
+    is tiled into segments of pol.n_chain, evaluated at the segment length
+    (that is the 'array dimension' axis of the paper's figures).
+    """
+    s_max = (design_space.sigma_exact() if sigma_max is None else sigma_max)
+    per_layer = {}
+    tot_macs = 0.0
+    tot_e = 0.0
+    for sh in shapes:
+        n_eval = min(sh.k, pol.n_chain)
+        pt = design_space.evaluate(domain, n_eval, pol.bits_w, s_max, m)
+        macs = sh.k * sh.n_out * sh.calls_per_token
+        # bit-serial activations: one pass per activation bit-plane
+        passes = pol.bits_a if domain == "td" else 1
+        energy = macs * pt.e_mac * passes
+        per_layer[sh.name] = {"e_mac": pt.e_mac, "macs": macs,
+                              "energy_j": energy, "r": pt.redundancy,
+                              "throughput": pt.throughput,
+                              "area_per_mac": pt.area_per_mac}
+        tot_macs += macs
+        tot_e += energy
+    return EnergyReport(domain, per_layer, tot_macs, tot_e)
+
+
+def compare_domains(shapes: list[MatmulShape], pol: TDPolicy,
+                    sigma_max: float | None = None) -> dict[str, EnergyReport]:
+    return {d: account(shapes, pol, d, sigma_max)
+            for d in design_space.DOMAINS}

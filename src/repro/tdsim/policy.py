@@ -1,0 +1,62 @@
+"""Per-layer execution policy for the TD-simulated matmul.
+
+Couples the ML side to the hardware model: given the weight bit width, the
+hardware chain length and an output error budget (sigma_max, in output-LSB
+units -- e.g. from core.noise_tolerance), solves the redundancy factor R and
+TDC coarsening q exactly like design_space.evaluate_td, and records the
+resulting per-chain noise sigma that the simulator must inject.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import cells
+from repro.core import chain as chain_mod
+from repro.core import constants as C
+from repro.core import design_space
+
+
+@dataclasses.dataclass(frozen=True)
+class TDPolicy:
+    """Static (hashable, jit-constant) execution policy of one matmul."""
+    mode: str = "precise"        # "precise" | "quant" | "td"
+    bits_a: int = 4              # activation bits (bit-serial planes)
+    bits_w: int = 4              # weight bits (in-cell)
+    n_chain: int = C.N_BASELINE  # hardware chain length (contraction tile)
+    redundancy: int = 1          # R
+    sigma_chain: float = 0.0     # injected per-chain noise std (LSB units)
+    tdc_q: int = 1               # TDC LSB coarsening factor
+    use_pallas: bool = False     # route through the Pallas kernel
+
+    def replace(self, **kw) -> "TDPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+PRECISE = TDPolicy(mode="precise")
+
+
+def quant_policy(bits_a: int = 4, bits_w: int = 4) -> TDPolicy:
+    return TDPolicy(mode="quant", bits_a=bits_a, bits_w=bits_w)
+
+
+def solve_td_policy(bits_a: int = 4, bits_w: int = 4,
+                    n_chain: int = C.N_BASELINE,
+                    sigma_max: float | None = None,
+                    vdd: float = C.VDD_NOM,
+                    use_pallas: bool = False) -> TDPolicy:
+    """Solve (R, q, sigma_chain) for an error budget.
+
+    sigma_max=None means the exact regime (3 sigma <= 0.5): the returned
+    policy still injects the residual sigma_chain -- the point of the paper's
+    threshold is that this residual is harmless after rounding.
+    """
+    s_max = chain_mod.sigma_max_exact() if sigma_max is None else sigma_max
+    # joint (R, q) solution identical to the design-space evaluator
+    pt = design_space.evaluate_td(n_chain, bits_w, s_max, vdd=vdd)
+    r, q = pt.redundancy, pt.aux["tdc_lsb_q"]
+    st = chain_mod.cell_stats(bits_w, float(r), vdd)
+    sigma = math.sqrt(n_chain * float(st.var))
+    return TDPolicy(mode="td", bits_a=bits_a, bits_w=bits_w, n_chain=n_chain,
+                    redundancy=r, sigma_chain=sigma, tdc_q=q,
+                    use_pallas=use_pallas)

@@ -1,0 +1,141 @@
+"""TD execution simulator: a drop-in matmul that computes y = x @ w the way
+the paper's time-domain hardware would.
+
+Pipeline (mode == "td"):
+  1. LSQ-quantize x (bits_a, signed) and w (bits_w, signed) to integer codes.
+  2. Offset-encode both (TD hardware has no negative delays).
+  3. For each activation bit-plane b (bit-serial, LSB first):
+       for each chain segment s of length n_chain along the contraction dim:
+         partial[b, s] = x_b[s] . w'[s]  +  eps,  eps ~ N(0, sigma_chain^2)
+         partial      <- tdc_q * round(partial / tdc_q)      (TDC conversion)
+  4. Recompose: y_int = sum_b 2^b sum_s partial[b, s], apply the exact
+     offset-correction side-sums, dequantize with s_a * s_w.
+  5. Straight-through gradients: y = y_fq + stop_grad(y_td - y_fq) where
+     y_fq is the differentiable LSQ fake-quant matmul.
+
+With sigma_chain == 0 and tdc_q == 1 the result is bit-exact equal to the
+fake-quant matmul (tested).  The per-segment noise std scales with
+sqrt(segment_len / n_chain) for the (shorter) tail segment, matching
+Eq. 5's sigma ~ sqrt(N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import bitserial, lsq
+from repro.tdsim.policy import TDPolicy
+
+
+def _segment(k: int, n_chain: int) -> tuple[int, int]:
+    """(n_segments, padded_k)."""
+    n_seg = max(1, -(-k // n_chain))
+    return n_seg, n_seg * n_chain
+
+
+def td_matmul_int(x_int: jnp.ndarray, w_int: jnp.ndarray, pol: TDPolicy,
+                  key: jax.Array) -> jnp.ndarray:
+    """Integer-domain noisy TD matmul.  x_int (..., K) and w_int (K, N) are
+    *signed* LSQ codes; returns the (noisy) integer product (..., N)."""
+    k, n_out = w_int.shape
+    n_seg, k_pad = _segment(k, pol.n_chain)
+    ox = bitserial.offset_of(pol.bits_a)
+    ow = bitserial.offset_of(pol.bits_w)
+    xu = bitserial.to_offset(x_int, pol.bits_a)
+    wu = bitserial.to_offset(w_int, pol.bits_w).astype(jnp.float32)
+
+    # pad the contraction dim to a whole number of chains; padded x' entries
+    # are 0 (they contribute 0 to x'.w' and to the popcount side-sum).
+    pad = k_pad - k
+    xu_p = jnp.pad(xu, [(0, 0)] * (xu.ndim - 1) + [(0, pad)])
+    wu_p = jnp.pad(wu, [(0, pad), (0, 0)])
+    xw_seg = wu_p.reshape(n_seg, pol.n_chain, n_out)
+
+    planes = bitserial.bit_planes(xu_p, pol.bits_a)        # (Ba, ..., Kp)
+    planes_seg = planes.reshape(planes.shape[:-1] + (n_seg, pol.n_chain)
+                                ).astype(jnp.float32)
+
+    # chain partials: (Ba, ..., n_seg, n_out)
+    partial = jnp.einsum("b...sk,skn->b...sn", planes_seg, xw_seg)
+
+    if pol.sigma_chain > 0.0:
+        # tail segment holds k - (n_seg-1)*n_chain live cells
+        live = jnp.minimum(
+            jnp.full((n_seg,), pol.n_chain, jnp.float32),
+            jnp.maximum(k - jnp.arange(n_seg) * pol.n_chain, 1).astype(jnp.float32))
+        sig = pol.sigma_chain * jnp.sqrt(live / pol.n_chain)  # (n_seg,)
+        eps = jax.random.normal(key, partial.shape, jnp.float32)
+        partial = partial + eps * sig[:, None]
+
+    if pol.tdc_q > 1:
+        partial = pol.tdc_q * jnp.round(partial / pol.tdc_q)
+    else:
+        partial = jnp.round(partial)
+
+    per_plane = partial.sum(-2)                            # (Ba, ..., n_out)
+    main = bitserial.recompose_planes(per_plane)           # (..., n_out)
+
+    # exact digital corrections (computed on unpadded tensors)
+    corr_w = ox * wu.sum(0)                                # (n_out,)
+    pop_x = xu.astype(jnp.float32).sum(-1, keepdims=True)  # (..., 1)
+    corr_x = ow * pop_x
+    return main - corr_w - corr_x + k * ox * ow
+
+
+def td_matmul(x: jnp.ndarray, w: jnp.ndarray,
+              s_a: jnp.ndarray, s_w: jnp.ndarray,
+              pol: TDPolicy, key: jax.Array | None = None) -> jnp.ndarray:
+    """Full TD-simulated matmul with LSQ scales and STE gradients.
+
+    x: (..., K) activations; w: (K, N) weights; s_a/s_w: LSQ step sizes.
+    """
+    if pol.mode == "precise":
+        return x @ w
+    x_fq = lsq.lsq_fake_quant(x, s_a, pol.bits_a, signed=True)
+    w_fq = lsq.lsq_fake_quant(w, s_w, pol.bits_w, signed=True)
+    y_fq = x_fq @ w_fq
+    if pol.mode == "quant":
+        return y_fq
+    assert pol.mode == "td", pol.mode
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    x_int = lsq.lsq_quantize_int(x, s_a, pol.bits_a, signed=True)
+    w_int = lsq.lsq_quantize_int(w, s_w, pol.bits_w, signed=True)
+    if pol.use_pallas:
+        from repro.kernels.td_vmm import ops as td_ops
+        y_int = td_ops.td_vmm(x_int, w_int, pol, key)
+    else:
+        y_int = td_matmul_int(x_int, w_int, pol, key)
+    y_td = y_int * (jnp.maximum(s_a, 1e-8) * jnp.maximum(s_w, 1e-8))
+    # straight-through: exact td forward, fake-quant backward
+    return y_fq + jax.lax.stop_gradient(y_td.astype(y_fq.dtype) - y_fq)
+
+
+def linear(params: dict, x: jnp.ndarray, pol: TDPolicy,
+           key: jax.Array | None = None) -> jnp.ndarray:
+    """Linear layer dispatching on the policy.  params holds 'w' (K, N),
+    optional 'b' (N,), and — when quantized — 's_a', 's_w' scalars."""
+    if pol.mode == "precise":
+        y = x @ params["w"]
+    else:
+        y = td_matmul(x, params["w"], params["s_a"], params["s_w"], pol, key)
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_linear(key: jax.Array, k: int, n: int, pol: TDPolicy,
+                bias: bool = False, dtype=jnp.float32,
+                scale: float | None = None) -> dict:
+    """Init params for `linear`; adds LSQ step sizes for quantized modes."""
+    std = scale if scale is not None else (1.0 / (k ** 0.5))
+    w = jax.random.normal(key, (k, n), dtype) * std
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    if pol.mode != "precise":
+        p["s_w"] = lsq.init_step_size(w, pol.bits_w, signed=True)
+        # activation scale init assumes unit-variance inputs
+        p["s_a"] = jnp.asarray(2.0 / (lsq.qrange(pol.bits_a, True)[1] ** 0.5),
+                               dtype)
+    return p

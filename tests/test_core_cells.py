@@ -1,0 +1,117 @@
+"""Unit + property tests for the cell/chain hardware models (paper §II-III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cells, chain, constants as C
+
+
+class TestEtaESNR:
+    def test_cascade_invariance(self):
+        """Eq. 1 rationale: cascading R cells leaves eta unchanged."""
+        sig, e = 0.03, 2e-15
+        base = cells.eta_esnr(jnp.asarray(sig), jnp.asarray(e))
+        for r in (2, 4, 16):
+            casc = cells.eta_esnr(jnp.asarray(sig / np.sqrt(r)),
+                                  jnp.asarray(e * r))
+            assert np.isclose(float(base), float(casc), rtol=1e-6)
+
+    def test_tristate_wins_across_vdd(self):
+        """Fig. 3c: tristate has the best eta_ESNR over the voltage range."""
+        for v in np.linspace(C.VDD_MIN, C.VDD_NOM, 9):
+            vals = {n: float(cells.eta_esnr_vs_vdd(n, jnp.asarray(v)))
+                    for n in C.DELAY_CELLS}
+            assert vals["tristate"] == max(vals.values()), (v, vals)
+
+    def test_eta_degrades_at_low_vdd(self):
+        """§II: design at nominal voltage — eta_ESNR drops when Vdd drops."""
+        e_hi = float(cells.eta_esnr_vs_vdd("tristate", jnp.asarray(C.VDD_NOM)))
+        e_lo = float(cells.eta_esnr_vs_vdd("tristate", jnp.asarray(0.5)))
+        assert e_lo < e_hi
+
+    @given(st.floats(0.45, 0.8), st.floats(0.45, 0.8))
+    @settings(max_examples=20, deadline=None)
+    def test_eta_monotone_in_vdd(self, v1, v2):
+        lo, hi = sorted((v1, v2))
+        e1 = float(cells.eta_esnr_vs_vdd("inverter", jnp.asarray(lo)))
+        e2 = float(cells.eta_esnr_vs_vdd("inverter", jnp.asarray(hi)))
+        assert e1 <= e2 + 1e-9
+
+
+class TestTDMacCell:
+    def test_inl_peak_matches_paper(self):
+        """Fig. 4b: max |INL| ~ 0.11 delay steps at B=4, R=1."""
+        inl = cells.inl_table(4, 1.0)
+        assert 0.09 <= float(jnp.abs(inl).max()) <= 0.13
+
+    def test_inl_scales_inverse_r(self):
+        """Eq. 6: INL (in steps) ~ 1/R."""
+        t1 = cells.inl_table(4, 1.0)
+        t4 = cells.inl_table(4, 4.0)
+        np.testing.assert_allclose(np.asarray(t1) / 4.0, np.asarray(t4),
+                                   atol=1e-9)
+
+    @pytest.mark.parametrize("bits", [1, 2, 4, 8])
+    def test_energy_increases_with_r(self, bits):
+        e1 = float(cells.cell_energy_per_mac(bits, 1))
+        e4 = float(cells.cell_energy_per_mac(bits, 4))
+        assert e4 > e1
+
+    def test_area_formula(self):
+        """Eq. 14: (9B + 7R * (2^(B+1)-1)) * CPP * Hcell."""
+        b, r = 4, 3
+        want = (9 * b + 7 * r * (2 ** (b + 1) - 1)) * C.CPP * C.CELL_H
+        assert np.isclose(float(cells.tdmac_area(b, r)), want)
+
+    def test_input_distribution_normalized(self):
+        for bits in (1, 2, 4, 8):
+            p_x, p_w = cells.input_distribution(bits)
+            assert np.isclose(float(p_x.sum()), 1.0)
+            assert np.isclose(float(p_w.sum()), 1.0, atol=1e-5)
+
+
+class TestChainStatistics:
+    def test_r_scaling_laws(self):
+        """Eq. 6: EVPV ~ 1/R (approximately), VHM ~ 1/R^2 (exactly)."""
+        s1 = chain.cell_stats(4, 1.0)
+        s4 = chain.cell_stats(4, 4.0)
+        vhm_ratio = float(s1.vhm / s4.vhm)
+        evpv_ratio = float(s1.evpv / s4.evpv)
+        assert np.isclose(vhm_ratio, 16.0, rtol=1e-3)
+        assert 3.5 <= evpv_ratio <= 6.5   # "close to 1/R" (paper wording)
+
+    def test_chain_sigma_sqrt_n(self):
+        """Eq. 5: sigma_chain ~ sqrt(N)."""
+        st_ = chain.cell_stats(4, 2.0)
+        _, s100 = chain.chain_stats(jnp.asarray(100.0), st_)
+        _, s400 = chain.chain_stats(jnp.asarray(400.0), st_)
+        assert np.isclose(float(s400 / s100), 2.0, rtol=1e-6)
+
+    def test_monte_carlo_matches_law_of_total_variance(self, key):
+        """Eq. 2-5 against brute-force simulation."""
+        bits, r, n = 4, 2.0, 64
+        st_ = chain.cell_stats(bits, r)
+        mu_a, sig_a = chain.chain_stats(jnp.asarray(float(n)), st_)
+        errs = chain.simulate_chain_errors(key, n, bits, r, n_mc=20000)
+        mu_e = float(errs.mean())
+        sig_e = float(errs.std())
+        assert abs(mu_e - float(mu_a)) < 5 * float(sig_a) / np.sqrt(20000)
+        assert abs(sig_e - float(sig_a)) / float(sig_a) < 0.05
+
+    @given(st.integers(8, 2048), st.sampled_from([1, 2, 4]),
+           st.floats(0.2, 4.0))
+    @settings(max_examples=25, deadline=None)
+    def test_solver_meets_budget_minimally(self, n, bits, sigma_max):
+        r = chain.solve_redundancy(n, bits, sigma_max)
+        st_r = chain.cell_stats(bits, float(r))
+        assert float(n * st_r.var) <= sigma_max ** 2 * (1 + 1e-6)
+        if r > 1:
+            st_rm = chain.cell_stats(bits, float(r - 1))
+            assert float(n * st_rm.var) > sigma_max ** 2
+
+    def test_r_grows_with_n_exact_regime(self):
+        rs = [chain.solve_redundancy(n, 4, chain.sigma_max_exact())
+              for n in (64, 256, 1024)]
+        assert rs[0] < rs[1] < rs[2]

@@ -1,0 +1,142 @@
+"""Distribution tests: sharding rules, roofline HLO parsing, and an 8-device
+dry-run (subprocess with its own XLA_FLAGS so the main test process keeps 1
+device)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as cfgs
+from repro.roofline import hlo_parse
+from repro.roofline.model import make_roofline
+
+
+class TestShardingRules:
+    def test_param_specs_cover_big_matrices(self, key):
+        # build specs against abstract params on a fake 2-axis mesh object
+        from repro.models import get_api
+        from repro.tdsim import PRECISE
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        from repro.launch import sharding as sl
+        cfg = cfgs.get("granite-8b").model
+        api = get_api(cfg)
+        p_sds = jax.eval_shape(
+            lambda: api["init"](jax.random.key(0), cfg, PRECISE))
+        specs = sl.param_specs(p_sds, FakeMesh())
+        flat = jax.tree_util.tree_leaves_with_path(specs)
+        spec_by_path = {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                                 for k in kp): v for kp, v in flat}
+        assert spec_by_path["embed/table"] == P("model", "data")
+        assert spec_by_path["layers/0/attn/wq/w"] == P("data", "model")
+        assert spec_by_path["layers/0/attn/wo/w"] == P("model", "data")
+        assert spec_by_path["layers/0/mlp/wi/w"] == P("data", "model")
+        assert spec_by_path["layers/0/ln1/scale"] == P()
+        assert spec_by_path["lm_head/w"] == P("data", "model")
+
+    def test_moe_expert_parallel_specs(self):
+        from repro.models import get_api
+        from repro.tdsim import PRECISE
+        from repro.launch import sharding as sl
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        cfg = cfgs.get("dbrx-132b").model
+        api = get_api(cfg)
+        p_sds = jax.eval_shape(
+            lambda: api["init"](jax.random.key(0), cfg, PRECISE))
+        specs = sl.param_specs(p_sds, FakeMesh())
+        flat = jax.tree_util.tree_leaves_with_path(specs)
+        spec_by_path = {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                                 for k in kp): v for kp, v in flat}
+        assert spec_by_path["layers/0/moe/wi"] == P("model", "data", None)
+        assert spec_by_path["layers/0/moe/wo"] == P("model", None, "data")
+
+    def test_indivisible_dims_fall_back_to_replication(self):
+        from repro.launch import sharding as sl
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        spec = sl._resolve(("DP", "TP"), (100, 48), FakeMesh())
+        assert spec == P(None, "model")   # 100 % 16 != 0 -> replicate
+
+
+class TestHloParse:
+    HLO = """
+  %ag = f32[256,1024]{1,0} all-gather(f32[16,1024]{1,0} %p0), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = bf16[512,512]{1,0} all-reduce(bf16[512,512]{1,0} %p1), replica_groups=[16,32]<=[512], to_apply=%add
+  %rs = f32[16,1024]{1,0} reduce-scatter(f32[256,1024]{1,0} %p2), replica_groups={{0,1}}, dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %p3), source_target_pairs={{0,1}}
+"""
+
+    def test_counts_and_bytes(self):
+        st = hlo_parse.parse_collectives(self.HLO)
+        assert st.counts["all-gather"] == 1
+        assert st.counts["all-reduce"] == 1
+        assert st.counts["reduce-scatter"] == 1
+        assert st.counts["collective-permute"] == 1
+        assert st.operand_bytes["all-gather"] == 16 * 1024 * 4
+        # ring all-gather: out * (n-1)/n
+        assert np.isclose(st.link_bytes["all-gather"],
+                          256 * 1024 * 4 * 15 / 16)
+        # all-reduce group size from iota form [16,32] -> 32
+        assert np.isclose(st.link_bytes["all-reduce"],
+                          2 * 512 * 512 * 2 * 31 / 32)
+
+    def test_async_pairs_not_double_counted(self):
+        hlo = """
+  %s = f32[64]{0} all-gather-start(f32[4]{0} %x), replica_groups={{0,1}}
+  %d = f32[64]{0} all-gather-done(f32[64]{0} %s)
+"""
+        st = hlo_parse.parse_collectives(hlo)
+        assert st.counts["all-gather"] == 1
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        rl = make_roofline("a", "s", "m", 256, flops_total=1e18,
+                           bytes_total=1e15, coll_link_bytes_total=1e13,
+                           model_flops=5e17)
+        assert rl.compute_s == pytest.approx(1e18 / 256 / 197e12)
+        assert rl.memory_s == pytest.approx(1e15 / 256 / 819e9)
+        assert rl.dominant == "compute"
+        assert 0 < rl.mfu <= 1.0
+
+
+@pytest.mark.slow
+class TestDryRunSmall:
+    """8-device dry-run in a subprocess (own XLA_FLAGS)."""
+
+    @pytest.mark.parametrize("arch,shape", [
+        ("granite-moe-1b-a400m", "decode_32k"),
+        ("rwkv6-1.6b", "train_4k"),
+    ])
+    def test_small_mesh_cell(self, arch, shape, tmp_path):
+        env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+                   PYTHONPATH="src")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", "small", "--out", str(tmp_path)],
+            env=env, capture_output=True, text=True, timeout=1500,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert out.returncode == 0, out.stdout + out.stderr
+        files = list(tmp_path.iterdir())
+        assert len(files) == 1
+        res = json.loads(files[0].read_text())
+        assert res["ok"]
+        assert res["roofline"]["dominant"] in ("compute", "memory",
+                                               "collective")
+        assert res["flops_per_chip"] > 0

@@ -1,0 +1,73 @@
+"""Paper's own evaluation network: ResNet20-family CNN + Fig. 10 procedure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.resnet20_cifar import smoke as resnet_smoke
+from repro.models import resnet
+from repro.tdsim import PRECISE, TDPolicy, quant_policy
+
+
+def test_forward_shapes_finite(key):
+    cfg = resnet_smoke()
+    params = resnet.init_params(key, cfg, PRECISE)
+    imgs, labels = resnet.make_synthetic_cifar(key, 8, cfg)
+    logits = resnet.forward(params, imgs, cfg, PRECISE)
+    assert logits.shape == (8, cfg.classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_trains_on_synthetic(key):
+    cfg = resnet_smoke()
+    pol = quant_policy(4, 4)
+    params = resnet.init_params(key, cfg, pol)
+    imgs, labels = resnet.make_synthetic_cifar(key, 128, cfg)
+
+    def loss_fn(p, k):
+        logits = resnet.forward(p, imgs, cfg, pol, k)
+        oh = jax.nn.one_hot(labels, cfg.classes)
+        return -(jax.nn.log_softmax(logits) * oh).sum(-1).mean()
+
+    @jax.jit
+    def step(p, k):
+        l, g = jax.value_and_grad(loss_fn)(p, k)
+        return jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g), l
+
+    l0 = None
+    for i in range(40):
+        params, l = step(params, jax.random.fold_in(key, i))
+        l0 = l0 if l0 is not None else float(l)
+    assert float(l) < l0 * 0.8
+
+
+def test_noise_degrades_monotonically_on_average(key):
+    """Fig. 10 shape: accuracy decreases as injected sigma grows."""
+    cfg = resnet_smoke()
+    pol_q = quant_policy(4, 4)
+    params = resnet.init_params(key, cfg, pol_q)
+    imgs, labels = resnet.make_synthetic_cifar(key, 64, cfg)
+
+    def acc_at(sigma):
+        pol = TDPolicy(mode="td", bits_a=4, bits_w=4, n_chain=256,
+                       sigma_chain=sigma, tdc_q=1)
+        accs = []
+        for r in range(3):
+            logits = resnet.forward(params, imgs, cfg, pol,
+                                    jax.random.fold_in(key, r))
+            accs.append(float((jnp.argmax(logits, -1) == labels).mean()))
+        return np.mean(accs)
+
+    a_small, a_huge = acc_at(0.25), acc_at(64.0)
+    assert a_huge <= a_small + 0.05
+
+
+def test_im2col_conv_matches_lax_conv(key):
+    from repro.models.resnet import _im2col
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 3, 5))
+    patches = _im2col(x, 3, 1)
+    got = patches @ w.reshape(-1, 5)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,177 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault
+tolerance, noise-tolerance search, energy meter."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as cfgs
+from repro.checkpoint import ckpt
+from repro.core import noise_tolerance
+from repro.data.pipeline import PrefetchLoader
+from repro.data.synthetic import DataCfg, SyntheticStream
+from repro.launch import ft
+from repro.models import matmul_shapes
+from repro.optim import adamw
+from repro.tdsim import energy_meter, solve_td_policy
+from repro.configs.base import TrainCfg
+
+
+class TestOptimizer:
+    def test_adamw_decreases_quadratic(self):
+        params = {"w": jnp.asarray([3.0, -2.0]), "scale": jnp.ones(2)}
+        cfg = TrainCfg(lr=0.1, warmup=0, total_steps=100, weight_decay=0.0)
+        state = adamw.init_opt_state(params)
+        loss = lambda p: ((p["w"] - 1.0) ** 2).sum()
+        for _ in range(60):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw.apply_updates(params, g, state, cfg)
+        assert float(loss(params)) < 0.05
+
+    def test_grad_clip(self):
+        params = {"w": jnp.zeros(3)}
+        cfg = TrainCfg(lr=1.0, warmup=0, grad_clip=1.0)
+        state = adamw.init_opt_state(params)
+        g = {"w": jnp.asarray([100.0, 0.0, 0.0])}
+        _, _, m = adamw.apply_updates(params, g, state, cfg)
+        assert float(m["grad_norm"]) == pytest.approx(100.0)
+
+    def test_no_decay_on_norm_params(self):
+        assert not adamw._is_decay_param("layers/0/ln1/scale")
+        assert not adamw._is_decay_param("layers/0/mlp/wi/s_a")
+        assert adamw._is_decay_param("layers/0/mlp/wi/w")
+
+
+class TestData:
+    def test_determinism_and_rank_sharding(self):
+        cfg = DataCfg(vocab=512, seq_len=64, global_batch=8)
+        s0 = SyntheticStream(cfg, dp_rank=0, dp_size=2)
+        s0b = SyntheticStream(cfg, dp_rank=0, dp_size=2)
+        s1 = SyntheticStream(cfg, dp_rank=1, dp_size=2)
+        b0, b0b, b1 = s0.batch(5), s0b.batch(5), s1.batch(5)
+        np.testing.assert_array_equal(b0["tokens"], b0b["tokens"])
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+        assert b0["tokens"].shape == (4, 64)
+        # labels are next-token shifted
+        np.testing.assert_array_equal(b0["tokens"][:, 1:],
+                                      b0["labels"][:, :-1])
+
+    def test_prefetch_resume(self):
+        cfg = DataCfg(vocab=128, seq_len=16, global_batch=2)
+        stream = SyntheticStream(cfg)
+        loader = PrefetchLoader(stream, start_step=7)
+        step, batch = loader.get()
+        loader.close()
+        assert step == 7
+        np.testing.assert_array_equal(batch["tokens"],
+                                      stream.batch(7)["tokens"])
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, tmp_path, key):
+        tree = {"a": jax.random.normal(key, (4, 3)),
+                "nested": {"b": jnp.arange(5)}}
+        d = str(tmp_path)
+        for step in (1, 2, 3, 4):
+            ckpt.save(d, step, tree, meta={"x": step}, keep_last=2,
+                      async_write=False)
+        assert ckpt.latest_steps(d) == [3, 4]
+        step, restored, meta = ckpt.restore(d, tree)
+        assert step == 4 and meta["x"] == 4
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_async_save(self, tmp_path, key):
+        tree = {"a": jax.random.normal(key, (8,))}
+        t = ckpt.save(str(tmp_path), 1, tree, async_write=True)
+        t.join()
+        assert ckpt.latest_steps(str(tmp_path)) == [1]
+
+    def test_restore_missing_key_raises(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(2)}, async_write=False)
+        with pytest.raises(ValueError):
+            ckpt.restore(str(tmp_path), {"a": jnp.zeros(2),
+                                         "b": jnp.zeros(2)})
+
+
+class TestFaultTolerance:
+    def test_watchdog_flags_straggler(self):
+        wd = ft.StepWatchdog(straggler_factor=2.0, warmup_steps=2)
+        import time
+        for i in range(4):
+            wd.start(i)
+            time.sleep(0.01)
+            wd.stop()
+        wd.start(5)
+        time.sleep(0.08)
+        rep = wd.stop()
+        assert rep.is_straggler
+        assert wd.straggler_count == 1
+
+    def test_retry_resumes(self):
+        calls = []
+
+        def body():
+            calls.append(1)
+            if len(calls) < 3:
+                raise ft.Preemption("boom")
+            return "done"
+
+        assert ft.run_with_retries(body,
+                                   ft.RetryPolicy(backoff_s=0.0)) == "done"
+        assert len(calls) == 3
+
+    def test_train_restart_from_checkpoint(self, tmp_path):
+        """End-to-end: injected preemption -> resume from latest ckpt."""
+        from repro.launch import train as train_mod
+        from repro.configs.base import ShapeCfg
+        arch = cfgs.get_smoke("qwen2.5-3b")
+        shape = ShapeCfg("t", 32, 4, "train")
+        d = str(tmp_path)
+        state = {"failed": False}
+
+        def session():
+            fail_at = 6 if not state["failed"] else None
+            state["failed"] = True
+            return train_mod.run(arch, shape, steps=10, ckpt_dir=d,
+                                 ckpt_every=3, log_every=100,
+                                 fail_at=fail_at)
+
+        _, losses = ft.run_with_retries(session,
+                                        ft.RetryPolicy(backoff_s=0.0))
+        assert ckpt.latest_steps(d)
+        assert np.isfinite(losses).all()
+
+
+class TestNoiseToleranceSearch:
+    def test_finds_crossing(self, key):
+        """Synthetic accuracy curve with a known 1% crossing."""
+        def eval_fn(sigma, k):
+            return 0.9 * (1.0 - 0.01 * (sigma / 2.0) ** 2)
+
+        res = noise_tolerance.find_sigma_max(
+            eval_fn, sigmas=[0.5, 1.0, 2.0, 4.0, 8.0], key=key,
+            rel_drop_max=0.01, n_repeats=1)
+        assert 1.8 <= res.sigma_max <= 2.2
+
+    def test_never_crossing_returns_max(self, key):
+        res = noise_tolerance.find_sigma_max(
+            lambda s, k: 0.9, sigmas=[1.0, 2.0], key=key, n_repeats=1)
+        assert res.sigma_max == 2.0
+
+
+class TestEnergyMeter:
+    def test_accounting_per_arch(self):
+        pol = solve_td_policy(4, 4, 576, sigma_max=2.0)
+        shapes = matmul_shapes(cfgs.get("granite-8b").model)
+        reports = energy_meter.compare_domains(shapes, pol, sigma_max=2.0)
+        assert set(reports) == {"td", "analog", "digital"}
+        for dom, rep in reports.items():
+            assert rep.total_energy_per_token > 0
+            assert rep.total_macs_per_token > 1e8   # ~8B param model
+        # relaxed regime: td beats digital per MAC at the baseline chain
+        # (chain length 576, Fig. 11) — check the J/token orderings exist
+        assert reports["td"].total_energy_per_token != \
+            reports["digital"].total_energy_per_token
