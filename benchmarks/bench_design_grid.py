@@ -1,0 +1,67 @@
+"""Batched design-space engine benchmark (acceptance gate of the batched
+refactor): a >= 5,000-point (domain x N x B x Vdd) grid must evaluate in one
+jitted call at least 10x faster than the scalar per-point loop, and must
+agree with the scalar golden path on winners.
+
+The scalar loop is timed on a deterministic subsample and extrapolated (the
+full scalar grid takes minutes); the row says how many points were timed.
+"""
+import itertools
+import time
+
+import numpy as np
+
+from repro.core import design_space as ds
+
+SIGMA = 2.0
+NS = tuple(int(x) for x in np.unique(
+    np.round(np.geomspace(16, 4096, 24)).astype(int)))
+BITS = (1, 2, 4, 8)
+VDDS = tuple(float(v) for v in np.round(np.linspace(0.40, 0.80, 18), 4))
+SCALAR_SAMPLE = 48
+
+
+def run() -> list[str]:
+    rows = []
+    n_pts = len(ds.DOMAINS) * len(NS) * len(BITS) * len(VDDS)
+    # compile once, then time the steady-state call (the deploy shape)
+    ds.sweep_batched(ns=NS, bit_widths=BITS, sigma_maxes=SIGMA, vdds=VDDS)
+    t0 = time.perf_counter()
+    g = ds.sweep_batched(ns=NS, bit_widths=BITS, sigma_maxes=SIGMA,
+                         vdds=VDDS)
+    t_batched = time.perf_counter() - t0
+
+    combos = list(itertools.product(NS, BITS, VDDS))
+    rng = np.random.default_rng(0)
+    sample = [combos[i] for i in rng.choice(len(combos), SCALAR_SAMPLE,
+                                            replace=False)]
+    t0 = time.perf_counter()
+    mismatch = 0
+    for (n, b, v) in sample:
+        pts = {}
+        for d in ds.DOMAINS:
+            pts[d] = ds.evaluate(d, n, b, SIGMA, vdd=v)
+        w_scalar = min(pts, key=lambda d: pts[d].e_mac)
+        ix = (BITS.index(b), NS.index(n), 0, VDDS.index(v))
+        mismatch += w_scalar != g.winner_names()[ix]
+    t_scalar_sample = time.perf_counter() - t0
+    t_scalar = t_scalar_sample / (len(sample) * len(ds.DOMAINS)) * n_pts
+    speedup = t_scalar / t_batched
+    rows.append(
+        f"design_grid,points={n_pts},batched_ms={t_batched*1e3:.1f},"
+        f"scalar_s_extrapolated={t_scalar:.1f}"
+        f"(timed={SCALAR_SAMPLE * len(ds.DOMAINS)}pts),"
+        f"speedup={speedup:.0f}x,"
+        f"derived=ge_5000_points={n_pts >= 5000},"
+        f"ge_10x={speedup >= 10.0},winner_mismatches={mismatch}")
+    # the queryable boundary results riding on the same grid
+    xo = ds.domain_crossovers(g)
+    iv = ds.winner_intervals(g, "td")
+    pf = ds.pareto_frontier(g)
+    rows.append(f"design_grid,crossovers={len(xo)},"
+                f"td_win_intervals={len(iv)},"
+                f"pareto_points={int(pf.sum())}/{pf.size}")
+    us = t_batched * 1e6 / n_pts
+    rows.append(f"design_grid,us_per_call={us:.2f},"
+                f"derived=one_jitted_call_per_grid=True")
+    return rows

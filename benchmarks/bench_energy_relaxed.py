@@ -1,35 +1,48 @@
 """Fig. 11: energy/MAC over (N, B) for all three domains with the relaxed
-error budget sigma_array_max back-annotated from noise tolerance."""
+error budget sigma_array_max back-annotated from noise tolerance.  Batched
+engine; the domain-crossover boundary is read from the grid as a first-class
+result."""
 import time
 
 from repro.core import design_space as ds
 
 SIGMA_RELAXED = 2.0   # representative Fig. 10b back-annotation
 
+NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
+BITS = (1, 2, 4, 8)
+
 
 def run() -> list[str]:
     rows = []
+    ds.sweep_batched(ns=NS, bit_widths=BITS, sigma_maxes=SIGMA_RELAXED)
     t0 = time.perf_counter()
-    n_pts = 0
+    g = ds.sweep_batched(ns=NS, bit_widths=BITS, sigma_maxes=SIGMA_RELAXED)
+    dt = time.perf_counter() - t0
+    winners = g.winner_names()
+    td_i = g.domain_index("td")
     regions = {}
-    for n in (16, 32, 64, 128, 256, 576, 1024, 2048, 4096):
-        for b in (1, 2, 4, 8):
-            pts = {d: ds.evaluate(d, n, b, SIGMA_RELAXED)
-                   for d in ds.DOMAINS}
-            winner = min(pts, key=lambda d: pts[d].e_mac)
+    for ni, n in enumerate(NS):
+        for bi, b in enumerate(BITS):
+            w = winners[bi, ni, 0, 0]
             if b == 4:
-                regions[n] = winner
-            td = pts["td"]
+                regions[n] = w
+            cells = ",".join(
+                f"{d}_J={g.e_mac[di, bi, ni, 0, 0]:.3e}"
+                for di, d in enumerate(g.domains))
             rows.append(
-                f"fig11_energy_relaxed,N={n},B={b},"
-                + ",".join(f"{d}_J={p.e_mac:.3e}" for d, p in pts.items())
-                + f",td_R={td.redundancy},td_q={td.aux['tdc_lsb_q']},"
-                f"winner={winner}")
-            n_pts += 1
+                f"fig11_energy_relaxed,N={n},B={b},{cells},"
+                f"td_R={g.redundancy[td_i, bi, ni, 0, 0]},"
+                f"td_q={g.tdc_q[td_i, bi, ni, 0, 0]},winner={w}")
+    # the paper's qualitative claim as a queryable crossover record
+    for x in ds.domain_crossovers(g):
+        if x["bits"] == 4:
+            rows.append(f"fig11_energy_relaxed,crossover,B=4,"
+                        f"N={x['n_low']}->{x['n_high']},"
+                        f"{x['domain_low']}->{x['domain_high']}")
     # beyond-paper: joint (Vdd, R) optimization for TD
     v_base = ds.evaluate("td", 576, 4, SIGMA_RELAXED).e_mac
     v_opt = ds.td_vdd_optimized(576, 4, SIGMA_RELAXED)
-    us = (time.perf_counter() - t0) * 1e6 / n_pts
+    us = dt * 1e6 / (len(NS) * len(BITS))
     rows.append(
         f"fig11_energy_relaxed,us_per_call={us:.1f},"
         f"derived=td_wins_mid={regions.get(256)=='td' and regions.get(576)=='td'},"

@@ -8,6 +8,8 @@ import json
 import os
 import time
 
+import numpy as np
+
 import repro.configs as cfgs
 
 ART_DIR = os.environ.get("REPRO_DRYRUN_ART", "artifacts/dryrun")
@@ -24,6 +26,7 @@ def run() -> list[str]:
                d.get("td_mode", "precise"))
         found[key] = d
     n = 0
+    present = []
     for arch, shape, skip in cfgs.cells(include_skips=True):
         if skip:
             rows.append(f"roofline,{arch},{shape},16x16,"
@@ -45,7 +48,18 @@ def run() -> list[str]:
             f"dominant={r['dominant']},step_s={r['step_s']:.4f},"
             f"mfu={r['mfu']:.4f},"
             f"useful_flops_ratio={r['useful_flops_ratio']:.3f}")
+        present.append(r)
         n += 1
+    if present:
+        # vectorized fleet summary over all dry-run cells at once
+        mfu = np.array([r["mfu"] for r in present])
+        step = np.array([r["step_s"] for r in present])
+        dom = np.array([r["dominant"] for r in present])
+        uniq, cnt = np.unique(dom, return_counts=True)
+        mix = ";".join(f"{u}={c}" for u, c in zip(uniq, cnt))
+        rows.append(f"roofline,summary,mfu_med={np.median(mfu):.4f},"
+                    f"mfu_min={mfu.min():.4f},step_med={np.median(step):.4f},"
+                    f"bottleneck_mix={mix}")
     us = (time.perf_counter() - t0) * 1e6 / max(n, 1)
     rows.append(f"roofline,us_per_call={us:.0f},derived=cells_present={n}")
     return rows

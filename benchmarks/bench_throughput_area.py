@@ -1,35 +1,36 @@
 """Fig. 12: throughput (a) and area (b) over array dimensions, relaxed
-error budget."""
+error budget.  Batched engine: one grid call, winners from the arrays."""
 import time
 
 from repro.core import design_space as ds
 
 SIGMA_RELAXED = 2.0
 
+NS = (16, 64, 256, 576, 1024, 4096)
+BITS = (1, 4, 8)
+
 
 def run() -> list[str]:
     rows = []
+    ds.sweep_batched(ns=NS, bit_widths=BITS, sigma_maxes=SIGMA_RELAXED)
     t0 = time.perf_counter()
-    n_pts = 0
-    for n in (16, 64, 256, 576, 1024, 4096):
-        for b in (1, 4, 8):
-            pts = {d: ds.evaluate(d, n, b, SIGMA_RELAXED)
-                   for d in ds.DOMAINS}
-            thr_win = max(pts, key=lambda d: pts[d].throughput)
-            area_win = min(pts, key=lambda d: pts[d].area_per_mac)
-            rows.append(
-                f"fig12_throughput_area,N={n},B={b},"
-                + ",".join(f"{d}_macs={p.throughput:.3e}"
-                           for d, p in pts.items())
-                + "," + ",".join(f"{d}_m2={p.area_per_mac:.3e}"
-                                 for d, p in pts.items())
-                + f",thr_winner={thr_win},area_winner={area_win}")
-            n_pts += 1
-    digital_thr = all(
-        max(ds.DOMAINS,
-            key=lambda d: ds.evaluate(d, n, 4, SIGMA_RELAXED).throughput)
-        == "digital" for n in (576, 4096))
-    us = (time.perf_counter() - t0) * 1e6 / n_pts
+    g = ds.sweep_batched(ns=NS, bit_widths=BITS, sigma_maxes=SIGMA_RELAXED)
+    dt = time.perf_counter() - t0
+    thr_w = g.winner_names("throughput")
+    area_w = g.winner_names("area_per_mac")
+    for ni, n in enumerate(NS):
+        for bi, b in enumerate(BITS):
+            macs = ",".join(f"{d}_macs={g.throughput[di, bi, ni, 0, 0]:.3e}"
+                            for di, d in enumerate(g.domains))
+            m2 = ",".join(f"{d}_m2={g.area_per_mac[di, bi, ni, 0, 0]:.3e}"
+                          for di, d in enumerate(g.domains))
+            rows.append(f"fig12_throughput_area,N={n},B={b},{macs},{m2},"
+                        f"thr_winner={thr_w[bi, ni, 0, 0]},"
+                        f"area_winner={area_w[bi, ni, 0, 0]}")
+    b4 = BITS.index(4)
+    digital_thr = all(thr_w[b4, NS.index(n), 0, 0] == "digital"
+                      for n in (576, 4096))
+    us = dt * 1e6 / (len(NS) * len(BITS))
     rows.append(f"fig12_throughput_area,us_per_call={us:.1f},"
                 f"derived=digital_thr_dominates_large={digital_thr}")
     return rows

@@ -1,43 +1,151 @@
-"""Design-space explorer: winner-region map over (N, B) for a given error
-budget + the noise-tolerance -> energy feedback loop on the paper's CNN.
+"""Design-space explorer CLI over the batched engine.
 
-    PYTHONPATH=src python examples/hw_design_explorer.py [--sigma 2.0]
+Evaluates an arbitrary (N x B x sigma x Vdd) grid for all three domains as
+one jitted call and emits a winner map (table), CSV or JSON, plus the
+domain-crossover boundaries the paper's Figs. 9/11 read off qualitatively.
+
+    PYTHONPATH=src python examples/hw_design_explorer.py
+    PYTHONPATH=src python examples/hw_design_explorer.py \
+        --grid n=16..4096:24 bits=1,2,4,8 vdd=0.4..0.8:9 sigma=2.0 \
+        --format csv --out grid.csv
+
+Grid axis syntax: `key=v1,v2,...` (explicit list) or `key=lo..hi[:count]`
+(range; geometric with integer rounding for n, linear otherwise).
 """
 import argparse
+import csv
+import json
+import sys
+
+import numpy as np
 
 from repro.core import design_space as ds
 
+DEFAULT_NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
+DEFAULT_BITS = (1, 2, 4, 8)
+
+
+def _parse_axis(key: str, spec: str):
+    try:
+        if ".." in spec:
+            lohi, _, cnt = spec.partition(":")
+            lo, _, hi = lohi.partition("..")
+            lo, hi = float(lo), float(hi)
+            count = int(cnt) if cnt else 9
+            if key == "n":
+                vals = np.unique(np.round(np.geomspace(lo, hi, count))
+                                 .astype(int))
+                return tuple(int(v) for v in vals)
+            if key == "bits":
+                vals = np.unique(np.round(np.linspace(lo, hi, count))
+                                 .astype(int))
+                return tuple(int(v) for v in vals)
+            return tuple(float(v) for v in np.linspace(lo, hi, count))
+        vals = [float(v) for v in spec.split(",")]
+    except ValueError as e:
+        raise SystemExit(f"bad --grid axis {key}={spec!r}: {e} "
+                         f"(want `a,b,c` or `lo..hi[:count]`)") from None
+    if key in ("n", "bits"):
+        return tuple(int(v) for v in vals)
+    return tuple(vals)
+
+
+def parse_grid(tokens) -> dict:
+    axes = {"n": DEFAULT_NS, "bits": DEFAULT_BITS, "sigma": None,
+            "vdd": (0.80,)}
+    for tok in tokens or ():
+        key, eq, spec = tok.partition("=")
+        if not eq or key not in axes:
+            raise SystemExit(f"bad --grid token {tok!r} "
+                             f"(want n=|bits=|sigma=|vdd=)")
+        axes[key] = _parse_axis(key, spec)
+    return axes
+
+
+def print_winner_map(g, metric: str) -> None:
+    tag = {"td": "T", "analog": "A", "digital": "D"}
+    w = g.winner_names(metric)
+    for si, s in enumerate(g.sigma_maxes):
+        for vi, v in enumerate(g.vdds):
+            print(f"winner map, metric={metric}, sigma_max={s:.3f}, "
+                  f"vdd={v:.2f} (T=time-domain A=analog D=digital)")
+            print("        " + " ".join(f"B={b}" for b in g.bit_widths))
+            for ni, n in enumerate(g.ns):
+                row = "".join(f"  {tag[w[bi, ni, si, vi]]} "
+                              for bi in range(len(g.bit_widths)))
+                print(f"N={n:5d}" + row)
+
+
+def print_detail(g) -> None:
+    if 576 not in g.ns:
+        return
+    ni = list(g.ns).index(576)
+    print("\nper-point detail at the paper baseline N=576 "
+          f"(sigma={g.sigma_maxes[0]:.3f}, vdd={g.vdds[0]:.2f}):")
+    for bi, b in enumerate(g.bit_widths):
+        for di, d in enumerate(g.domains):
+            ix = (di, bi, ni, 0, 0)
+            print(f"  B={b} {d:8s} {g.e_mac[ix]*1e15:9.2f} fJ/MAC  "
+                  f"R={g.redundancy[ix]:4d}  thr={g.throughput[ix]:.2e}  "
+                  f"area={g.area_per_mac[ix]*1e12:.2f} um^2")
+
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--grid", nargs="*", metavar="AXIS=SPEC",
+                    help="axes: n=, bits=, sigma=, vdd= "
+                         "(list `a,b,c` or range `lo..hi[:count]`)")
     ap.add_argument("--sigma", type=float, default=None,
-                    help="error budget in output LSB (default: exact)")
+                    help="shorthand for a single error budget in output LSB "
+                         "(default: exact regime)")
     ap.add_argument("--metric", default="e_mac",
                     choices=["e_mac", "throughput", "area_per_mac"])
+    ap.add_argument("--format", default="table",
+                    choices=["table", "csv", "json"])
+    ap.add_argument("--out", default=None,
+                    help="output path for csv/json (default: stdout)")
+    ap.add_argument("--crossovers", action="store_true",
+                    help="also print domain-crossover boundaries")
     args = ap.parse_args()
-    sigma = ds.sigma_exact() if args.sigma is None else args.sigma
 
-    ns = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
-    bs = (1, 2, 4, 8)
-    tag = {"td": "T", "analog": "A", "digital": "D"}
+    axes = parse_grid(args.grid)
+    sigma = axes["sigma"]
+    if sigma is None:
+        sigma = (args.sigma,) if args.sigma is not None else None
+    g = ds.sweep_batched(ns=axes["n"], bit_widths=axes["bits"],
+                         sigma_maxes=sigma, vdds=axes["vdd"])
 
-    print(f"winner map, metric={args.metric}, sigma_max={sigma:.3f} "
-          f"(T=time-domain A=analog D=digital)")
-    print("        " + " ".join(f"B={b}" for b in bs))
-    for n in ns:
-        row = []
-        for b in bs:
-            w = ds.best_domain(n, b, sigma, metric=args.metric)
-            row.append(f"  {tag[w.domain]}")
-        print(f"N={n:5d}" + " ".join(row))
+    if args.format == "table":
+        print_winner_map(g, args.metric)
+        print_detail(g)
+    else:
+        recs = list(g.records())
+        fh = open(args.out, "w", newline="") if args.out else sys.stdout
+        try:
+            if args.format == "csv":
+                wr = csv.DictWriter(fh, fieldnames=list(recs[0]))
+                wr.writeheader()
+                wr.writerows(recs)
+            else:
+                json.dump(recs, fh, indent=1)
+                fh.write("\n")
+        finally:
+            if args.out:
+                fh.close()
+                print(f"wrote {len(recs)} records to {args.out}",
+                      file=sys.stderr)
 
-    print("\nper-point detail at the paper baseline N=576:")
-    for b in bs:
-        for d in ds.DOMAINS:
-            p = ds.evaluate(d, 576, b, sigma)
-            print(f"  B={b} {d:8s} {p.e_mac*1e15:9.2f} fJ/MAC  "
-                  f"R={p.redundancy:4d}  thr={p.throughput:.2e}  "
-                  f"area={p.area_per_mac*1e12:.2f} um^2")
+    if args.crossovers or args.format == "table":
+        xs = ds.domain_crossovers(g, args.metric)
+        print(f"\n{len(xs)} domain crossovers along N ({args.metric}):",
+              file=sys.stderr)
+        for x in xs[:40]:
+            print(f"  B={x['bits']} sigma={x['sigma_max']:.3f} "
+                  f"vdd={x['vdd']:.2f}: {x['domain_low']} -> "
+                  f"{x['domain_high']} between N={x['n_low']} "
+                  f"and N={x['n_high']}", file=sys.stderr)
+        if len(xs) > 40:
+            print(f"  ... {len(xs) - 40} more", file=sys.stderr)
 
 
 if __name__ == "__main__":

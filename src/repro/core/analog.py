@@ -11,52 +11,75 @@ Differences vs [11] adopted by the paper (Fig. 8b, following [4]):
 
 Like the TD model, a redundancy factor R repeats unit capacitors once the
 mismatch error exceeds the error budget (cap mismatch averages ~ 1/sqrt(R)).
+
+All entry points are array-polymorphic: python scalars keep the original
+float math (scalar golden path), arrays broadcast elementwise.
 """
 from __future__ import annotations
 
 import math
 
-from repro.core import cells
+import jax.numpy as jnp
+
 from repro.core import constants as C
 from repro.core import tdc
 
 
-def adc_energy(enob: float) -> float:
+def _is_scalar(*xs) -> bool:
+    return all(isinstance(x, (int, float)) for x in xs)
+
+
+def adc_energy(enob):
     """Eq. 12 with k1 = 0.66 pJ, k2 = 0.241 aJ."""
     return C.K1_ADC * enob + C.K2_ADC * 4.0 ** enob
 
 
-def enob_for_sigma(range_steps: float, sigma_max_steps: float) -> float:
+def enob_for_sigma(range_steps, sigma_max_steps):
     """Eq. 13.  The tolerated output noise sigma (in output-LSB/delay-step
     units) sets the required SNR over the signal range:
         SNR_dB = 20 log10(range / sigma)  ->  ENOB = (SNR_dB - 1.76)/6.02
     """
-    snr_db = 20.0 * math.log10(max(range_steps / max(sigma_max_steps, 1e-9), 1.0 + 1e-9))
-    return max(1.0, (snr_db - 1.76) / 6.02)
+    if _is_scalar(range_steps, sigma_max_steps):
+        snr_db = 20.0 * math.log10(
+            max(range_steps / max(sigma_max_steps, 1e-9), 1.0 + 1e-9))
+        return max(1.0, (snr_db - 1.76) / 6.02)
+    ratio = jnp.asarray(range_steps, jnp.float32) \
+        / jnp.maximum(jnp.asarray(sigma_max_steps, jnp.float32), 1e-9)
+    snr_db = 20.0 * jnp.log10(jnp.maximum(ratio, 1.0 + 1e-9))
+    return jnp.maximum(1.0, (snr_db - 1.76) / 6.02)
 
 
-def analog_cell_sigma(bits: int, redundancy: float) -> float:
+def analog_cell_sigma(bits: int, redundancy):
     """Per-MAC mismatch sigma in output-LSB units from unit-cap mismatch.
 
     Binary-weighted cap-DAC cell: dominant MSB cap (2^(B-1) units) has
     relative mismatch SIG_CAP_REL / sqrt(2^(B-1) * R); expressed against the
     1-LSB step the per-cell sigma is ~ SIG_CAP_REL * sqrt((2^B - 1) / R).
     """
-    return C.SIG_CAP_REL * math.sqrt((2.0 ** bits - 1.0) / redundancy)
+    if _is_scalar(redundancy):
+        return C.SIG_CAP_REL * math.sqrt((2.0 ** bits - 1.0) / redundancy)
+    r = jnp.asarray(redundancy, jnp.float32)
+    return C.SIG_CAP_REL * jnp.sqrt((2.0 ** bits - 1.0) / r)
 
 
-def solve_analog_redundancy(n: float, bits: int, sigma_max: float,
-                            r_max: int = 4096) -> int:
+def solve_analog_redundancy(n, bits: int, sigma_max, r_max: int = 4096):
     """Smallest integer R with sqrt(N) * sigma_cell(R) <= sigma_max."""
-    s_cell_needed = sigma_max / math.sqrt(n)
-    r = (C.SIG_CAP_REL ** 2 * (2.0 ** bits - 1.0)) / max(s_cell_needed, 1e-12) ** 2
-    return min(r_max, max(1, int(math.ceil(r))))
+    if _is_scalar(n, sigma_max):
+        s_cell_needed = sigma_max / math.sqrt(n)
+        r = (C.SIG_CAP_REL ** 2 * (2.0 ** bits - 1.0)) \
+            / max(s_cell_needed, 1e-12) ** 2
+        return min(r_max, max(1, int(math.ceil(r))))
+    nf = jnp.asarray(n, jnp.float32)
+    s_cell = jnp.maximum(jnp.asarray(sigma_max, jnp.float32) / jnp.sqrt(nf),
+                         1e-12)
+    r = C.SIG_CAP_REL ** 2 * (2.0 ** bits - 1.0) / s_cell ** 2
+    return jnp.clip(jnp.ceil(r), 1.0, float(r_max)).astype(jnp.int32)
 
 
-def cap_energy_per_mac(bits: int, redundancy: float,
-                       vdd: float = C.VDD_NOM,
-                       p_x_one: float = C.P_X_ONE,
-                       w_bit_sparsity: float = C.W_BIT_SPARSITY) -> float:
+def cap_energy_per_mac(bits: int, redundancy,
+                       vdd=C.VDD_NOM,
+                       p_x_one=C.P_X_ONE,
+                       w_bit_sparsity=C.W_BIT_SPARSITY):
     """Expected charge-redistribution energy of one 1xB MAC: active unit caps
     (bit set in w, x = 1) switch ~ C_u V^2 each; half of it is recovered on
     average by the redistribution (factor 0.5)."""
@@ -66,8 +89,8 @@ def cap_energy_per_mac(bits: int, redundancy: float,
     return p_act * n_units * e_unit * (1.0 + C.LEAKAGE_FRACTION)
 
 
-def analog_energy_per_mac(n: float, bits: int, sigma_max: float,
-                          m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM,
+def analog_energy_per_mac(n, bits: int, sigma_max,
+                          m=C.M_DEFAULT, vdd=C.VDD_NOM,
                           clip_range: bool = True) -> dict:
     """Eq. 11 with the R/ENOB co-solution for a given error budget."""
     r = solve_analog_redundancy(n, bits, sigma_max)
@@ -80,14 +103,14 @@ def analog_energy_per_mac(n: float, bits: int, sigma_max: float,
             "enob": enob, "r": r}
 
 
-def adc_rate(enob: float) -> float:
+def adc_rate(enob):
     """Conversion-rate envelope from the [12] survey (energy-filtered):
     f = F_ADC_BASE * 2^(-F_ADC_DECAY * (ENOB - 6))."""
     return C.F_ADC_BASE * 2.0 ** (-C.F_ADC_DECAY * (enob - 6.0))
 
 
-def analog_throughput(n: float, bits: int, sigma_max: float,
-                      m: int = C.M_DEFAULT, clip_range: bool = True) -> float:
+def analog_throughput(n, bits: int, sigma_max,
+                      m=C.M_DEFAULT, clip_range: bool = True):
     """MAC/s of M chains sharing one ADC: the ADC serializes M conversions,
     each conversion retires N MACs -> throughput = N * f_ADC (M cancels)."""
     steps = tdc.effective_range_steps(n, bits, clip_range)
@@ -95,8 +118,8 @@ def analog_throughput(n: float, bits: int, sigma_max: float,
     return n * adc_rate(enob)
 
 
-def analog_area(n: float, bits: int, sigma_max: float,
-                m: int = C.M_DEFAULT, clip_range: bool = True) -> float:
+def analog_area(n, bits: int, sigma_max,
+                m=C.M_DEFAULT, clip_range: bool = True):
     """Per-MAC area: cap array + pass logic + amortized ADC.
 
     ADC area scales with ENOB (long-channel devices, Section IV-A)."""
@@ -105,5 +128,9 @@ def analog_area(n: float, bits: int, sigma_max: float,
     enob = enob_for_sigma(steps, sigma_max)
     # MOSCAP unit area ~ 0.30 um^2 incl. wiring; pass transistor 1 pitch/bit
     a_cell = (2.0 ** bits - 1.0) * r * 0.30e-12 + bits * C.AREA_PER_PITCH
-    a_adc = C.ADC_AREA_BASE * C.ADC_AREA_PER_ENOB ** max(0.0, enob - 6.0)
+    if _is_scalar(n, sigma_max):
+        a_adc = C.ADC_AREA_BASE * C.ADC_AREA_PER_ENOB ** max(0.0, enob - 6.0)
+    else:
+        a_adc = C.ADC_AREA_BASE \
+            * C.ADC_AREA_PER_ENOB ** jnp.maximum(0.0, enob - 6.0)
     return a_cell + a_adc / (n * m)

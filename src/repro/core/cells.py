@@ -93,8 +93,9 @@ def _bit_planes(bits: int) -> jnp.ndarray:
     return ((w[:, None] >> jnp.arange(bits)[None, :]) & 1).astype(jnp.float32)
 
 
-def inl_table(bits: int, redundancy: float) -> jnp.ndarray:
-    """INL(x, w) of the TD-MAC cell in delay-step units, shape (2, 2^B).
+def inl_table(bits: int, redundancy) -> jnp.ndarray:
+    """INL(x, w) of the TD-MAC cell in delay-step units, shape (*S, 2, 2^B)
+    for `redundancy` of shape S (scalar redundancy gives the plain (2, 2^B)).
 
     Source of nonlinearity: each *bypassed* subcell adds the fixed
     TD-NAND-vs-TD-AND discrepancy, each *active* cascade of length 2^i has a
@@ -117,81 +118,91 @@ def inl_table(bits: int, redundancy: float) -> jnp.ndarray:
     table = jnp.stack([raw_x0, raw_x1], axis=0)       # (2, 2^B)
     # calibrate: remove global mean (uniform); per-R scaling of Eq. 6
     table = table - table.mean()
-    return table / redundancy
+    return table / jnp.asarray(redundancy, jnp.float32)[..., None, None]
 
 
-def cell_delay_variance(bits: int, redundancy: float,
-                        vdd: float = C.VDD_NOM) -> jnp.ndarray:
-    """Var(err_cell | x, w) in delay-step^2 units, shape (2, 2^B).
+def cell_delay_variance(bits: int, redundancy,
+                        vdd=C.VDD_NOM) -> jnp.ndarray:
+    """Var(err_cell | x, w) in delay-step^2 units, shape (*S, 2, 2^B) for
+    `redundancy`/`vdd` broadcasting to shape S (scalars give (2, 2^B)).
 
     Active path of bit i contributes R * 2^i unit cells, each with relative
     sigma SIG_U_REL -> variance (in steps^2) 2^i * sig_u^2 / R.
     Bypass contributes a single TD-NAND: (sig_nand / R)^2.
     """
-    sig_u = sig_rel_at_vdd(jnp.asarray(C.SIG_U_REL), jnp.asarray(vdd))
-    sig_n = sig_rel_at_vdd(jnp.asarray(C.SIG_NAND_REL), jnp.asarray(vdd))
+    r = jnp.asarray(redundancy, jnp.float32)[..., None]
+    sig_u = sig_rel_at_vdd(jnp.asarray(C.SIG_U_REL), jnp.asarray(vdd))[..., None]
+    sig_n = sig_rel_at_vdd(jnp.asarray(C.SIG_NAND_REL), jnp.asarray(vdd))[..., None]
     planes = _bit_planes(bits)                        # (2^B, B)
     pow2 = 2.0 ** jnp.arange(bits)
-    var_active = (planes * pow2[None, :]).sum(-1) * sig_u ** 2 / redundancy
+    var_active = (planes * pow2[None, :]).sum(-1) * sig_u ** 2 / r
     n_byp = (1.0 - planes).sum(-1)
-    var_bypass = n_byp * (sig_n / redundancy) ** 2
-    var_x1 = var_active + var_bypass
-    var_x0 = bits * (sig_n / redundancy) ** 2
-    return jnp.stack([jnp.full_like(var_x1, var_x0), var_x1], axis=0)
+    var_bypass = n_byp * (sig_n / r) ** 2
+    var_x1 = var_active + var_bypass                  # (*S, 2^B)
+    var_x0 = jnp.broadcast_to(bits * (sig_n / r) ** 2, var_x1.shape)
+    return jnp.stack([var_x0, var_x1], axis=-2)
 
 
 def input_distribution(bits: int,
-                       p_x_one: float = C.P_X_ONE,
-                       w_bit_sparsity: float = C.W_BIT_SPARSITY
+                       p_x_one=C.P_X_ONE,
+                       w_bit_sparsity=C.W_BIT_SPARSITY
                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(P(x), P(w)) for x in {0,1} and w in [0, 2^B): independent weight bits
-    that are one with prob (1 - sparsity)."""
-    p_x = jnp.array([1.0 - p_x_one, p_x_one])
+    that are one with prob (1 - sparsity).  Batched `p_x_one`/`w_bit_sparsity`
+    of shape S give shapes (*S, 2) and (*S, 2^B)."""
+    p1 = jnp.asarray(p_x_one, jnp.float32)
+    p_x = jnp.stack([1.0 - p1, p1], axis=-1)
     planes = _bit_planes(bits)                        # (2^B, B)
-    p_one = 1.0 - w_bit_sparsity
+    p_one = 1.0 - jnp.asarray(w_bit_sparsity, jnp.float32)[..., None, None]
     p_w = jnp.prod(planes * p_one + (1 - planes) * (1 - p_one), axis=-1)
     return p_x, p_w
 
 
-def cell_energy_per_mac(bits: int, redundancy: float,
-                        vdd: float = C.VDD_NOM,
-                        p_x_one: float = C.P_X_ONE,
-                        w_bit_sparsity: float = C.W_BIT_SPARSITY
+def cell_energy_per_mac(bits: int, redundancy,
+                        vdd=C.VDD_NOM,
+                        p_x_one=C.P_X_ONE,
+                        w_bit_sparsity=C.W_BIT_SPARSITY
                         ) -> jnp.ndarray:
-    """E_cell of Eq. 7: expected energy of one 1xB TD MAC-OP.
+    """E_cell of Eq. 7: expected energy of one 1xB TD MAC-OP; shape S for
+    batched `redundancy`/`vdd`/input stats broadcasting to shape S.
 
     The transition edge always propagates through every subcell: through the
     TD-AND cascade (R * 2^i cells) when x & w_i, else through the TD-NAND.
     """
-    e_and = energy_at_vdd(jnp.asarray(C.E_TD_AND), jnp.asarray(vdd))
-    e_nand = energy_at_vdd(jnp.asarray(C.E_TD_NAND), jnp.asarray(vdd))
-    p_act = p_x_one * (1.0 - w_bit_sparsity)          # P(bit i active)
+    r = jnp.asarray(redundancy, jnp.float32)[..., None]
+    e_and = energy_at_vdd(jnp.asarray(C.E_TD_AND), jnp.asarray(vdd))[..., None]
+    e_nand = energy_at_vdd(jnp.asarray(C.E_TD_NAND), jnp.asarray(vdd))[..., None]
+    p_act = (jnp.asarray(p_x_one)
+             * (1.0 - jnp.asarray(w_bit_sparsity)))[..., None]
     pow2 = 2.0 ** jnp.arange(bits)
-    e_bit = p_act * redundancy * pow2 * e_and + (1 - p_act) * e_nand
-    return e_bit.sum() * (1.0 + C.LEAKAGE_FRACTION)
+    e_bit = p_act * r * pow2 * e_and + (1 - p_act) * e_nand
+    return e_bit.sum(-1) * (1.0 + C.LEAKAGE_FRACTION)
 
 
-def tdmac_area(bits: int, redundancy: float) -> jnp.ndarray:
+def tdmac_area(bits: int, redundancy) -> jnp.ndarray:
     """Eq. 14: A = (9*B + 7*R*sum_{i=0..B} 2^i) * CPP * H_cell.
 
-    (The paper's sum runs to B inclusive: 2^{B+1} - 1.)
+    (The paper's sum runs to B inclusive: 2^{B+1} - 1.)  Elementwise in R.
     """
-    n_pitch = 9.0 * bits + 7.0 * redundancy * (2.0 ** (bits + 1) - 1.0)
+    n_pitch = 9.0 * bits \
+        + 7.0 * jnp.asarray(redundancy, jnp.float32) * (2.0 ** (bits + 1) - 1.0)
     return n_pitch * C.AREA_PER_PITCH
 
 
 # Expected delay of one MAC in *unit-cell* delays (for throughput): the edge
 # traverses active cascades (R*2^i cells) or bypasses (1 cell each).
-def cell_mean_delay_units(bits: int, redundancy: float,
-                          p_x_one: float = C.P_X_ONE,
-                          w_bit_sparsity: float = C.W_BIT_SPARSITY
+def cell_mean_delay_units(bits: int, redundancy,
+                          p_x_one=C.P_X_ONE,
+                          w_bit_sparsity=C.W_BIT_SPARSITY
                           ) -> jnp.ndarray:
-    p_act = p_x_one * (1.0 - w_bit_sparsity)
+    r = jnp.asarray(redundancy, jnp.float32)[..., None]
+    p_act = (jnp.asarray(p_x_one)
+             * (1.0 - jnp.asarray(w_bit_sparsity)))[..., None]
     pow2 = 2.0 ** jnp.arange(bits)
-    d_bit = p_act * redundancy * pow2 + (1 - p_act) * 1.0
-    return d_bit.sum()
+    d_bit = p_act * r * pow2 + (1 - p_act) * 1.0
+    return d_bit.sum(-1)
 
 
-def cell_max_delay_units(bits: int, redundancy: float) -> jnp.ndarray:
+def cell_max_delay_units(bits: int, redundancy) -> jnp.ndarray:
     """Worst-case (x=1, w=all-ones) delay in unit cells."""
-    return redundancy * (2.0 ** bits - 1.0) + 0.0
+    return jnp.asarray(redundancy, jnp.float32) * (2.0 ** bits - 1.0) + 0.0

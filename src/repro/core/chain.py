@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -64,52 +65,113 @@ def chain_stats(n: jnp.ndarray, st: CellStats) -> tuple[jnp.ndarray, jnp.ndarray
     return mu, sigma
 
 
-def chain_sigma(n: jnp.ndarray, bits: int, redundancy: jnp.ndarray,
-                vdd: float = C.VDD_NOM,
-                p_x_one: float = C.P_X_ONE,
-                w_bit_sparsity: float = C.W_BIT_SPARSITY) -> jnp.ndarray:
-    """sigma_err,chain in delay steps, vectorized over (n, redundancy)."""
-    def _one(r):
-        st = cell_stats(bits, r, vdd, p_x_one, w_bit_sparsity)
-        return st.evpv + st.vhm
-    var_cell = _one(redundancy) if jnp.ndim(redundancy) == 0 else jax.vmap(_one)(redundancy)
-    return jnp.sqrt(n * var_cell)
+@dataclasses.dataclass(frozen=True)
+class CellVarCoeffs:
+    """Exact rational decomposition of the cell statistics in R (Eq. 6):
 
+        mu(R)       = mu1 / R
+        var_cell(R) = a1 / R + c / R^2
 
-def solve_redundancy(n: float, bits: int,
-                     sigma_max: float,
-                     vdd: float = C.VDD_NOM,
-                     r_max: int = 4096,
-                     p_x_one: float = C.P_X_ONE,
-                     w_bit_sparsity: float = C.W_BIT_SPARSITY) -> int:
-    """Smallest integer R with sigma_chain(N, B, R) <= sigma_max.
-
-    Closed form: with EVPV = a/R and VHM = b/R^2 (Eq. 6),
-      N (a/R + b/R^2) <= s^2   <=>   R >= (N a + sqrt(N^2 a^2 + 4 s^2 N b)) / (2 s^2)
-    then refined to the exact integer (the bypass-variance term deviates
-    slightly from pure 1/R scaling).
+    a1 is the active-cascade EVPV term (~1/R); c collects the bypass EVPV
+    term and the VHM, both exactly ~1/R^2.  Fields are jnp arrays of the
+    broadcast shape of (vdd, p_x_one, w_bit_sparsity).
     """
-    st1 = cell_stats(bits, 1.0, vdd, p_x_one, w_bit_sparsity)
-    a = float(st1.evpv)     # ~ 1/R
-    b = float(st1.vhm)      # ~ 1/R^2
-    s2 = float(sigma_max) ** 2
-    if n * (a + b) <= s2:
-        return 1
-    r_guess = (n * a + (n * n * a * a + 4.0 * s2 * n * b) ** 0.5) / (2.0 * s2)
-    r = max(1, int(r_guess))
-    # integer refinement (model is monotone decreasing in R)
-    while r > 1:
-        st = cell_stats(bits, float(r - 1), vdd, p_x_one, w_bit_sparsity)
-        if n * float(st.var) <= s2:
-            r -= 1
-        else:
-            break
-    while r < r_max:
-        st = cell_stats(bits, float(r), vdd, p_x_one, w_bit_sparsity)
-        if n * float(st.var) <= s2:
-            break
-        r += 1
-    return r
+    a1: jnp.ndarray
+    c: jnp.ndarray
+    mu1: jnp.ndarray
+
+    def var(self, redundancy) -> jnp.ndarray:
+        r = jnp.asarray(redundancy, jnp.float32)
+        return self.a1 / r + self.c / r ** 2
+
+
+def cell_var_coeffs(bits: int, vdd=C.VDD_NOM,
+                    p_x_one=C.P_X_ONE,
+                    w_bit_sparsity=C.W_BIT_SPARSITY) -> CellVarCoeffs:
+    """Coefficients of the exact var_cell(R) = a1/R + c/R^2 model, batched
+    over (vdd, p_x_one, w_bit_sparsity).  Derivation: the active-path
+    variance is R*2^i unit cells -> 2^i sig_u^2/R per step; every bypass and
+    the whole INL table scale as 1/R, so their second moments go as 1/R^2.
+    """
+    p_x, p_w = cells.input_distribution(bits, p_x_one, w_bit_sparsity)
+    pxw = p_x[..., :, None] * p_w[..., None, :]            # (*S, 2, 2^B)
+    inl1 = cells.inl_table(bits, 1.0)                      # (2, 2^B)
+    mu1 = (inl1 * pxw).sum((-2, -1))
+    m2_1 = (inl1 ** 2 * pxw).sum((-2, -1))
+    planes = cells._bit_planes(bits)                       # (2^B, B)
+    act = (planes * 2.0 ** jnp.arange(bits)[None, :]).sum(-1)
+    n_byp = (1.0 - planes).sum(-1)
+    sig_u = cells.sig_rel_at_vdd(jnp.asarray(C.SIG_U_REL), jnp.asarray(vdd))
+    sig_n = cells.sig_rel_at_vdd(jnp.asarray(C.SIG_NAND_REL), jnp.asarray(vdd))
+    p1, p0 = p_x[..., 1], p_x[..., 0]
+    a1 = p1 * (p_w * act).sum(-1) * sig_u ** 2
+    k_byp = p1 * (p_w * n_byp).sum(-1) + p0 * bits
+    c = k_byp * sig_n ** 2 + (m2_1 - mu1 ** 2)
+    return CellVarCoeffs(a1=a1, c=c, mu1=mu1)
+
+
+def chain_sigma(n: jnp.ndarray, bits: int, redundancy: jnp.ndarray,
+                vdd=C.VDD_NOM,
+                p_x_one=C.P_X_ONE,
+                w_bit_sparsity=C.W_BIT_SPARSITY) -> jnp.ndarray:
+    """sigma_err,chain in delay steps, batched over (n, redundancy, vdd)."""
+    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity)
+    return jnp.sqrt(jnp.asarray(n, jnp.float32) * co.var(redundancy))
+
+
+@functools.lru_cache(maxsize=65536)
+def _var_coeffs_scalar(bits: int, vdd: float, p_x_one: float,
+                       w_bit_sparsity: float) -> tuple[float, float]:
+    """(a1, c) as python floats, memoized -- the scalar solver hot path."""
+    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity)
+    return float(co.a1), float(co.c)
+
+
+def solve_redundancy(n, bits: int,
+                     sigma_max,
+                     vdd=C.VDD_NOM,
+                     r_max: int = 4096,
+                     p_x_one=C.P_X_ONE,
+                     w_bit_sparsity=C.W_BIT_SPARSITY):
+    """Smallest integer R with sigma_chain(N, B, R) <= sigma_max, batched
+    over (n, sigma_max, vdd) (scalar inputs return a python int).
+
+    Closed form: with var_cell = a1/R + c/R^2 exactly (cell_var_coeffs),
+      N (a1/R + c/R^2) <= s^2
+        <=>  R >= (N a1 + sqrt(N^2 a1^2 + 4 s^2 N c)) / (2 s^2)
+    then a +-1 monotone correction absorbs the float error of the root
+    (the model is monotone decreasing in R, so feasibility is a threshold).
+    Returns r_max when the budget is unattainable below it.
+    """
+    if all(isinstance(x, (int, float))
+           for x in (n, sigma_max, vdd, p_x_one, w_bit_sparsity)):
+        a1, c = _var_coeffs_scalar(bits, float(vdd), float(p_x_one),
+                                   float(w_bit_sparsity))
+        nf, s2 = float(n), float(sigma_max) ** 2
+        root = (nf * a1 + math.sqrt((nf * a1) ** 2 + 4.0 * s2 * nf * c)) \
+            / (2.0 * s2)
+        r0 = math.ceil(root)
+        for r in (r0 - 1, r0, r0 + 1):
+            r = min(max(r, 1), r_max)
+            if nf * (a1 / r + c / (r * r)) <= s2:
+                return r
+        return min(max(r0 + 1, 1), r_max)
+    scalar = (jnp.ndim(n) == 0 and jnp.ndim(sigma_max) == 0
+              and jnp.ndim(vdd) == 0)
+    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity)
+    nf = jnp.asarray(n, jnp.float32)
+    s2 = jnp.asarray(sigma_max, jnp.float32) ** 2
+    root = (nf * co.a1
+            + jnp.sqrt((nf * co.a1) ** 2 + 4.0 * s2 * nf * co.c)) / (2.0 * s2)
+    r0 = jnp.ceil(root)
+    cand = jnp.stack([r0 - 1.0, r0, r0 + 1.0]).clip(1.0, float(r_max))
+    feas = nf * co.var(cand) <= s2
+    # infeasible-everywhere falls through to the clipped r0+1 candidate,
+    # matching the scalar path's r_max cap
+    pick = jnp.where(feas[0], cand[0],
+                     jnp.where(feas[1], cand[1], cand[2]))
+    out = pick.astype(jnp.int32)
+    return int(out) if scalar else out
 
 
 def sigma_max_exact() -> float:

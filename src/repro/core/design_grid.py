@@ -1,0 +1,393 @@
+"""Batched three-domain design-space engine (vectorized Figs. 9, 11, 12).
+
+`sweep_batched` evaluates the full (domain x N x B x sigma_max x Vdd) grid as
+one jitted JAX computation and returns a structure-of-arrays `DesignGrid`.
+The scalar `design_space.evaluate_*` functions remain the per-point golden
+reference; this module reproduces them point-for-point (same closed-form
+R solver, same TDC/q co-optimization) with every per-point python loop
+replaced by a batched axis:
+
+  * the q (TDC LSB coarsening) candidate loop      -> a leading q axis + argmin
+  * the integer R refinement loop                  -> closed form + monotone
+                                                      correction (core.chain)
+  * the L_osc refinement loop                      -> dyadic-block candidate
+                                                      argmin (core.tdc)
+  * the (N, B, sigma, Vdd) grid loops              -> flattened point axis
+
+B (the weight bit width) sets table shapes and therefore stays a static,
+trace-time axis: one jit call traces all requested bit widths.
+
+Downstream queries -- Pareto frontiers and the paper's "TD wins for
+small-to-medium N" domain-crossover boundaries -- are first-class results
+computed from the grid arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analog, cells, chain, digital, tdc
+from repro.core import constants as C
+
+DOMAINS: tuple[str, ...] = ("td", "analog", "digital")
+
+_FIELDS = ("e_mac", "throughput", "area_per_mac", "redundancy", "tdc_q",
+           "l_osc", "sigma_chain", "latency")
+
+
+# ---------------------------------------------------------------------------
+# Per-domain batched evaluators over a flat point axis (bits static)
+# ---------------------------------------------------------------------------
+def _eval_td_b(n, sigma, vdd, *, bits, m, q_max, clip_range, tdc_arch,
+               p_x_one, w_bit_sparsity) -> dict:
+    """TD evaluation of flat (P,) point arrays with the (R, q) co-solution.
+
+    Mirrors design_space.evaluate_td: every q in [1, q_max] is evaluated on a
+    leading axis, infeasible ones masked to +inf, argmin picks the winner
+    (first occurrence == smallest q, like the scalar scan's strict <)."""
+    n = jnp.asarray(n, jnp.float32)
+    sigma = jnp.asarray(sigma, jnp.float32)
+    vdd = jnp.asarray(vdd, jnp.float32)
+    sig2 = sigma ** 2
+    qq = jnp.arange(1, q_max + 1, dtype=jnp.float32)        # (Q,)
+    quant_var = (qq ** 2 - 1.0) / 12.0
+    # q=1 is always kept: it is the scalar path's fallback candidate
+    feasible = (quant_var[:, None] < sig2[None, :] * 0.999) \
+        | (qq[:, None] == 1.0)                              # (Q, P)
+    sigma_chain = jnp.sqrt(jnp.maximum(sig2[None, :] - quant_var[:, None],
+                                       1e-12))
+    r = chain.solve_redundancy(n[None, :], bits, sigma_chain, vdd[None, :],
+                               p_x_one=p_x_one,
+                               w_bit_sparsity=w_bit_sparsity)
+    rf = r.astype(jnp.float32)
+    e_cell = cells.cell_energy_per_mac(bits, rf, vdd[None, :],
+                                       p_x_one, w_bit_sparsity)
+    steps = tdc.effective_range_steps(n, bits, clip_range)  # (P,)
+    units = steps[None, :] * rf / qq[:, None]
+    if tdc_arch == "hybrid":
+        l_osc = tdc.optimal_l_osc(units, m, vdd[None, :])
+        e_tdc = tdc.hybrid_tdc_energy(units, l_osc, m, vdd[None, :])
+        t_tdc = tdc.hybrid_tdc_latency(units, l_osc, vdd[None, :])
+        a_tdc = tdc.hybrid_tdc_area(units, jnp.maximum(1.0, l_osc), m)
+    else:
+        l_osc = jnp.zeros_like(units)
+        b_tdc = tdc.range_bits(steps[None, :] / qq[:, None])
+        e_tdc = tdc.sar_tdc_energy(b_tdc, m, vdd[None, :])
+        t_tdc = tdc.sar_tdc_latency(b_tdc, vdd[None, :])
+        a_tdc = tdc.sar_tdc_area(b_tdc) * jnp.ones_like(units)
+    e_mac = e_cell + e_tdc / n[None, :]                     # Eq. 7
+    tau = cells.delay_at_vdd(jnp.asarray(C.TAU_UNIT), vdd)  # (P,)
+    t_chain = (steps[None, :] * rf + n[None, :] * bits) * tau[None, :]
+    latency = t_chain + t_tdc
+    throughput = n[None, :] * m / latency
+    area = cells.tdmac_area(bits, rf) + a_tdc / n[None, :]
+    qi = jnp.argmin(jnp.where(feasible, e_mac, jnp.inf), axis=0)  # (P,)
+
+    def take(arr):
+        return jnp.take_along_axis(arr, qi[None, :], axis=0)[0]
+
+    return {"e_mac": take(e_mac), "throughput": take(throughput),
+            "area_per_mac": take(area), "redundancy": take(rf),
+            "tdc_q": qq[qi], "l_osc": take(l_osc),
+            "sigma_chain": take(sigma_chain), "latency": take(latency)}
+
+
+def _eval_analog_b(n, sigma, vdd, *, bits, m, clip_range) -> dict:
+    n = jnp.asarray(n, jnp.float32)
+    res = analog.analog_energy_per_mac(n, bits, sigma, m, vdd, clip_range)
+    thr = analog.analog_throughput(n, bits, sigma, m, clip_range)
+    area = analog.analog_area(n, bits, sigma, m, clip_range)
+    rate = analog.adc_rate(res["enob"])
+    one = jnp.ones_like(n)
+    return {"e_mac": res["e_mac"] * one, "throughput": thr * one,
+            "area_per_mac": area * one,
+            "redundancy": res["r"].astype(jnp.float32) * one,
+            "tdc_q": one, "l_osc": 0.0 * one, "sigma_chain": 0.0 * one,
+            "latency": 1.0 / rate * one}
+
+
+def _eval_digital_b(n, sigma, vdd, *, bits, m) -> dict:
+    n = jnp.asarray(n, jnp.float32)
+    vdd = jnp.asarray(vdd, jnp.float32)
+    e = digital.digital_energy_per_mac(n, bits, vdd)
+    thr = digital.digital_throughput(n, bits, m)
+    area = digital.digital_area(n, bits)
+    one = jnp.ones_like(n)
+    return {"e_mac": e * one, "throughput": thr * one,
+            "area_per_mac": area * one, "redundancy": one, "tdc_q": one,
+            "l_osc": 0.0 * one, "sigma_chain": 0.0 * one,
+            "latency": (1.0 / C.F_DIG) * one}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("domains", "bit_widths", "m", "q_max",
+                              "clip_range", "tdc_arch", "p_x_one",
+                              "w_bit_sparsity"))
+def _sweep_jit(n, sigma, vdd, *, domains, bit_widths, m, q_max, clip_range,
+               tdc_arch, p_x_one, w_bit_sparsity) -> dict:
+    """One traced computation for the whole grid: flat (P,) point arrays in,
+    dict of (D, NB, P) field arrays out.  bit_widths/domains unroll at trace
+    time (table shapes depend on B)."""
+    per_domain = []
+    for d in domains:
+        per_b = []
+        for b in bit_widths:
+            if d == "td":
+                out = _eval_td_b(n, sigma, vdd, bits=b, m=m, q_max=q_max,
+                                 clip_range=clip_range, tdc_arch=tdc_arch,
+                                 p_x_one=p_x_one,
+                                 w_bit_sparsity=w_bit_sparsity)
+            elif d == "analog":
+                out = _eval_analog_b(n, sigma, vdd, bits=b, m=m,
+                                     clip_range=clip_range)
+            elif d == "digital":
+                out = _eval_digital_b(n, sigma, vdd, bits=b, m=m)
+            else:
+                raise ValueError(f"unknown domain {d!r}")
+            per_b.append(out)
+        per_domain.append({f: jnp.stack([pb[f] for pb in per_b])
+                           for f in _FIELDS})
+    return {f: jnp.stack([pd[f] for pd in per_domain]) for f in _FIELDS}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "m", "q_max", "clip_range", "tdc_arch",
+                              "p_x_one", "w_bit_sparsity"))
+def _eval_td_jit(n, sigma, vdd, *, bits, m, q_max, clip_range, tdc_arch,
+                 p_x_one, w_bit_sparsity) -> dict:
+    out = _eval_td_b(n, sigma, vdd, bits=bits, m=m, q_max=q_max,
+                     clip_range=clip_range, tdc_arch=tdc_arch,
+                     p_x_one=p_x_one, w_bit_sparsity=w_bit_sparsity)
+    out["sigma_chain_achieved"] = chain.chain_sigma(
+        n, bits, out["redundancy"], vdd, p_x_one, w_bit_sparsity)
+    return out
+
+
+def evaluate_td_batched(n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
+                        m: int = C.M_DEFAULT, clip_range: bool = True,
+                        tdc_arch: str = "hybrid", relax_tdc: bool = True,
+                        p_x_one: float = C.P_X_ONE,
+                        w_bit_sparsity: float = C.W_BIT_SPARSITY) -> dict:
+    """Elementwise TD evaluation of same-length point arrays (no grid
+    product): one jitted call solving (R, q) for every point.  This is the
+    batch entry used by tdsim.policy to solve all layers of a network at
+    once.  Returns a dict of numpy arrays keyed like _FIELDS plus
+    `sigma_chain_achieved` (= sqrt(N var_cell(R)), the noise the simulator
+    must inject)."""
+    n_a, s_a, v_a = np.broadcast_arrays(
+        np.asarray(n, np.float64), np.asarray(sigma_max, np.float64),
+        np.asarray(vdd, np.float64))
+    if relax_tdc:
+        q_max = int(np.floor(np.sqrt(12.0 * 0.999 * s_a.max() ** 2
+                                     + 1.0))) + 1
+    else:
+        q_max = 1
+    out = _eval_td_jit(jnp.asarray(n_a.ravel(), jnp.float32),
+                       jnp.asarray(s_a.ravel(), jnp.float32),
+                       jnp.asarray(v_a.ravel(), jnp.float32),
+                       bits=int(bits), m=int(m), q_max=q_max,
+                       clip_range=bool(clip_range), tdc_arch=str(tdc_arch),
+                       p_x_one=float(p_x_one),
+                       w_bit_sparsity=float(w_bit_sparsity))
+    return {k: np.asarray(v, np.float64).reshape(n_a.shape)
+            for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Structure-of-arrays result
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DesignGrid:
+    """Dense (domain x B x N x sigma x Vdd) design grid, SoA layout.
+
+    Field arrays have shape (D, NB, Nn, Ns, Nv) and float64-safe numpy
+    dtypes; `redundancy` and `tdc_q` are integral-valued.
+    """
+    domains: tuple[str, ...]
+    ns: np.ndarray
+    bit_widths: np.ndarray
+    sigma_maxes: np.ndarray
+    vdds: np.ndarray
+    m: int
+    e_mac: np.ndarray
+    throughput: np.ndarray
+    area_per_mac: np.ndarray
+    redundancy: np.ndarray
+    tdc_q: np.ndarray
+    l_osc: np.ndarray
+    sigma_chain: np.ndarray
+    latency: np.ndarray
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.e_mac.shape
+
+    @property
+    def n_points(self) -> int:
+        return int(np.prod(self.shape))
+
+    def domain_index(self, domain: str) -> int:
+        return self.domains.index(domain)
+
+    def winners(self, metric: str = "e_mac") -> np.ndarray:
+        """(NB, Nn, Ns, Nv) int array of the winning domain index."""
+        arr = getattr(self, metric)
+        return (np.argmax(arr, axis=0) if metric == "throughput"
+                else np.argmin(arr, axis=0))
+
+    def winner_names(self, metric: str = "e_mac") -> np.ndarray:
+        return np.asarray(self.domains)[self.winners(metric)]
+
+    def records(self) -> Iterable[dict]:
+        """Flat per-point dict rows (CSV/JSON friendly)."""
+        for di, d in enumerate(self.domains):
+            for bi, b in enumerate(self.bit_widths):
+                for ni, n in enumerate(self.ns):
+                    for si, s in enumerate(self.sigma_maxes):
+                        for vi, v in enumerate(self.vdds):
+                            ix = (di, bi, ni, si, vi)
+                            yield {
+                                "domain": d, "n": int(n), "bits": int(b),
+                                "sigma_max": float(s), "vdd": float(v),
+                                "m": self.m,
+                                "e_mac": float(self.e_mac[ix]),
+                                "throughput": float(self.throughput[ix]),
+                                "area_per_mac": float(self.area_per_mac[ix]),
+                                "redundancy": int(self.redundancy[ix]),
+                                "tdc_q": int(self.tdc_q[ix]),
+                                "latency": float(self.latency[ix]),
+                            }
+
+    def to_json(self) -> str:
+        return json.dumps(list(self.records()))
+
+
+def sweep_batched(domains: Sequence[str] = DOMAINS,
+                  ns: Sequence[int] = (16, 32, 64, 128, 256, 576, 1024,
+                                       2048, 4096),
+                  bit_widths: Sequence[int] = (1, 2, 4, 8),
+                  sigma_maxes: Sequence[float] | float | None = None,
+                  vdds: Sequence[float] | float = C.VDD_NOM,
+                  m: int = C.M_DEFAULT,
+                  clip_range: bool = True,
+                  tdc_arch: str = "hybrid",
+                  relax_tdc: bool = True,
+                  p_x_one: float = C.P_X_ONE,
+                  w_bit_sparsity: float = C.W_BIT_SPARSITY) -> DesignGrid:
+    """Evaluate the full (domain x N x B x sigma x Vdd) grid in one jitted
+    call.  sigma_maxes=None means the exact regime of Fig. 9."""
+    if sigma_maxes is None:
+        sigma_maxes = chain.sigma_max_exact()
+    sig = np.atleast_1d(np.asarray(sigma_maxes, np.float64))
+    vdd = np.atleast_1d(np.asarray(vdds, np.float64))
+    ns_a = np.atleast_1d(np.asarray(ns, np.int64))
+    # static q ceiling from the largest budget; the per-point feasibility
+    # mask inside the jit reproduces the scalar candidate enumeration
+    if relax_tdc:
+        q_max = int(np.floor(np.sqrt(12.0 * 0.999 * sig.max() ** 2
+                                     + 1.0))) + 1
+    else:
+        q_max = 1
+    n_g, s_g, v_g = np.meshgrid(ns_a, sig, vdd, indexing="ij")
+    out = _sweep_jit(jnp.asarray(n_g.ravel(), jnp.float32),
+                     jnp.asarray(s_g.ravel(), jnp.float32),
+                     jnp.asarray(v_g.ravel(), jnp.float32),
+                     domains=tuple(domains), bit_widths=tuple(bit_widths),
+                     m=int(m), q_max=q_max, clip_range=bool(clip_range),
+                     tdc_arch=str(tdc_arch), p_x_one=float(p_x_one),
+                     w_bit_sparsity=float(w_bit_sparsity))
+    full = (len(domains), len(bit_widths), len(ns_a), len(sig), len(vdd))
+    fields = {f: np.asarray(out[f], np.float64).reshape(full)
+              for f in _FIELDS}
+    fields["redundancy"] = np.rint(fields["redundancy"]).astype(np.int64)
+    fields["tdc_q"] = np.rint(fields["tdc_q"]).astype(np.int64)
+    return DesignGrid(domains=tuple(domains), ns=ns_a,
+                      bit_widths=np.asarray(bit_widths, np.int64),
+                      sigma_maxes=sig, vdds=vdd, m=int(m), **fields)
+
+
+# ---------------------------------------------------------------------------
+# Queries: Pareto frontier and domain-crossover boundaries
+# ---------------------------------------------------------------------------
+def pareto_mask(costs: np.ndarray, chunk: int = 1024) -> np.ndarray:
+    """Boolean mask of non-dominated rows of `costs` (P, K), lower-better.
+
+    A point is dominated if another point is <= on every objective and
+    strictly < on at least one."""
+    costs = np.asarray(costs, np.float64)
+    p = costs.shape[0]
+    keep = np.ones(p, bool)
+    for lo in range(0, p, chunk):
+        blk = costs[lo:lo + chunk]                         # (c, K)
+        le = (costs[:, None, :] <= blk[None, :, :]).all(-1)   # (P, c)
+        lt = (costs[:, None, :] < blk[None, :, :]).any(-1)
+        keep[lo:lo + chunk] = ~(le & lt).any(0)
+    return keep
+
+
+def pareto_frontier(grid: DesignGrid,
+                    objectives: Sequence[str] = ("e_mac", "area_per_mac",
+                                                 "throughput")) -> np.ndarray:
+    """Non-dominated mask over all grid points, shaped like grid.e_mac.
+
+    `throughput` is maximized, every other objective minimized."""
+    cols = []
+    for name in objectives:
+        col = getattr(grid, name).ravel().astype(np.float64)
+        cols.append(-col if name == "throughput" else col)
+    return pareto_mask(np.stack(cols, axis=-1)).reshape(grid.shape)
+
+
+def domain_crossovers(grid: DesignGrid,
+                      metric: str = "e_mac") -> list[dict]:
+    """Where the winning domain flips along the N axis -- the paper's
+    "TD wins for small-to-medium N" boundary as a queryable result.
+
+    One record per (bits, sigma, vdd, consecutive-N pair) with a change."""
+    w = grid.winners(metric)                     # (NB, Nn, Ns, Nv)
+    flips = w[:, 1:] != w[:, :-1]                # (NB, Nn-1, Ns, Nv)
+    out = []
+    for bi, ni, si, vi in np.argwhere(flips):
+        out.append({
+            "metric": metric,
+            "bits": int(grid.bit_widths[bi]),
+            "sigma_max": float(grid.sigma_maxes[si]),
+            "vdd": float(grid.vdds[vi]),
+            "n_low": int(grid.ns[ni]),
+            "n_high": int(grid.ns[ni + 1]),
+            "domain_low": grid.domains[w[bi, ni, si, vi]],
+            "domain_high": grid.domains[w[bi, ni + 1, si, vi]],
+        })
+    return out
+
+
+def winner_intervals(grid: DesignGrid, domain: str = "td",
+                     metric: str = "e_mac") -> list[dict]:
+    """Per (bits, sigma, vdd): the [n_min, n_max] span where `domain` wins
+    (empty span -> record omitted).  Spans need not be contiguous; this
+    reports the hull plus the win count."""
+    di = grid.domain_index(domain)
+    w = grid.winners(metric) == di               # (NB, Nn, Ns, Nv)
+    out = []
+    for bi in range(w.shape[0]):
+        for si in range(w.shape[2]):
+            for vi in range(w.shape[3]):
+                hits = np.flatnonzero(w[bi, :, si, vi])
+                if hits.size == 0:
+                    continue
+                out.append({
+                    "domain": domain, "metric": metric,
+                    "bits": int(grid.bit_widths[bi]),
+                    "sigma_max": float(grid.sigma_maxes[si]),
+                    "vdd": float(grid.vdds[vi]),
+                    "n_min": int(grid.ns[hits[0]]),
+                    "n_max": int(grid.ns[hits[-1]]),
+                    "wins": int(hits.size),
+                })
+    return out

@@ -12,9 +12,11 @@ The *exact* regime is sigma_max = ERR_EXACT_MAX / SIGMA_CONFIDENCE (Fig. 9),
 the *relaxed* regime uses sigma_array_max from noise-tolerance analysis of a
 quantized network (Fig. 10 -> Fig. 11).
 
-All evaluation is host-side scalar python/numpy (design search), backed by
-jnp cell models; grids are evaluated via plain loops into numpy arrays --
-these are O(100) point grids, not hot paths.
+The scalar evaluators in this module are the per-point golden reference.
+Dense grids should use the batched engine (`sweep_batched`, re-exported from
+repro.core.design_grid): the full (domain x N x B x sigma x Vdd) product
+evaluates as one jitted JAX computation and returns a structure-of-arrays
+`DesignGrid` with Pareto-frontier and domain-crossover queries.
 """
 from __future__ import annotations
 
@@ -26,9 +28,18 @@ import numpy as np
 
 from repro.core import analog, cells, chain, digital, tdc
 from repro.core import constants as C
+from repro.core.design_grid import (DesignGrid, domain_crossovers,
+                                    pareto_frontier, pareto_mask,
+                                    sweep_batched, winner_intervals)
 
 Domain = Literal["td", "analog", "digital"]
 DOMAINS: tuple[Domain, ...] = ("td", "analog", "digital")
+
+__all__ = ["DesignPoint", "DesignGrid", "DOMAINS", "evaluate", "evaluate_td",
+           "evaluate_analog", "evaluate_digital", "sweep", "sweep_batched",
+           "best_domain", "td_vdd_optimized", "sigma_exact",
+           "tdc_coarsening_candidates", "pareto_frontier", "pareto_mask",
+           "domain_crossovers", "winner_intervals"]
 
 
 @dataclasses.dataclass(frozen=True)

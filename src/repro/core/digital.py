@@ -11,40 +11,59 @@ adder tree with N leaves.  Level k of the tree has N/2^k adders of width
 Digital computation is exact: no R, no SNR dependence (its energy is flat in
 the accuracy-relaxation axis -- which is exactly why TD/analog overtake it
 once the error budget is relaxed, Fig. 11).
+
+Entry points are array-polymorphic: python scalars keep the original float
+math, arrays broadcast elementwise (closed-form partial sums replace the
+per-point tree-depth loop).
 """
 from __future__ import annotations
 
 import math
 
+import jax.numpy as jnp
+
 from repro.core import constants as C
 
 
-def _adder_bits_per_mac(n: float, bits: int) -> float:
-    """sum_{k=1..log2 N} (B + k) / 2^k, exact partial sum."""
-    depth = max(1, int(math.ceil(math.log2(max(2.0, n)))))
-    total = 0.0
-    for k in range(1, depth + 1):
-        total += (bits + k) / 2.0 ** k
-    return total
+def _is_scalar(*xs) -> bool:
+    return all(isinstance(x, (int, float)) for x in xs)
 
 
-def digital_energy_per_mac(n: float, bits: int,
-                           vdd: float = C.VDD_NOM) -> float:
+def _adder_bits_per_mac(n, bits: int):
+    """sum_{k=1..d} (B + k) / 2^k with d = ceil(log2 N), exact partial sum:
+    B (1 - 2^-d) + 2 - (d + 2) 2^-d."""
+    if _is_scalar(n):
+        depth = max(1, int(math.ceil(math.log2(max(2.0, n)))))
+        total = 0.0
+        for k in range(1, depth + 1):
+            total += (bits + k) / 2.0 ** k
+        return total
+    nf = jnp.maximum(2.0, jnp.asarray(n, jnp.float32))
+    depth = jnp.maximum(1.0, jnp.ceil(jnp.log2(nf)))
+    inv = 2.0 ** (-depth)
+    return bits * (1.0 - inv) + 2.0 - (depth + 2.0) * inv
+
+
+def digital_energy_per_mac(n, bits: int, vdd=C.VDD_NOM):
     """Per-MAC energy of the single-cycle N-long 1xB VMM array."""
     scale = (vdd / C.VDD_NOM) ** 2
     e_adder = _adder_bits_per_mac(n, bits) * C.E_FA_BIT * C.ALPHA_SW_DIGITAL
     e_and = bits * 0.35e-15 * C.ALPHA_SW_DIGITAL          # AND gating stage
-    e_wire = math.log2(max(2.0, n)) * C.E_WIRE_PER_LOG2N
+    if _is_scalar(n):
+        log2n = math.log2(max(2.0, n))
+    else:
+        log2n = jnp.log2(jnp.maximum(2.0, jnp.asarray(n, jnp.float32)))
+    e_wire = log2n * C.E_WIRE_PER_LOG2N
     e = (e_adder + e_and + e_wire) * scale + C.E_SEQ_MAC * scale
     return e * (1.0 + C.LEAKAGE_FRACTION)
 
 
-def digital_throughput(n: float, bits: int, m: int = C.M_DEFAULT) -> float:
+def digital_throughput(n, bits: int, m=C.M_DEFAULT):
     """Single-cycle array at F_DIG: N*M MACs retire per cycle."""
     return n * m * C.F_DIG
 
 
-def digital_area(n: float, bits: int) -> float:
+def digital_area(n, bits: int):
     """Per-MAC area after P&R: AND stage + amortized adder tree + seq."""
     a_adder = _adder_bits_per_mac(n, bits) * C.A_FA_BIT
     a_and = bits * 0.30e-12

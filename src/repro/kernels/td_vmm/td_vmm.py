@@ -92,7 +92,6 @@ def td_vmm_pallas(xu: jnp.ndarray, wu: jnp.ndarray, seed: jnp.ndarray,
     n = wu.shape[1]
     assert k % n_chain == 0, "pad K to a multiple of n_chain first"
     n_seg = k // n_chain
-    bm_ = min(bm, m) if m % min(bm, m) == 0 else bm
     m_pad = -(-m // bm) * bm
     n_pad = -(-n // bn) * bn
     xu_p = jnp.pad(xu, ((0, m_pad - m), (0, 0))).astype(jnp.int32)

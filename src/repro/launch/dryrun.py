@@ -31,7 +31,7 @@ from repro.configs.base import TDExecCfg
 from repro.launch import sharding as shard_lib
 from repro.launch import specs as specs_lib
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.mesh import activate_mesh, make_mesh, make_production_mesh
 from repro.models import common, get_api
 from repro.optim import adamw
 from repro.roofline import hlo_parse, model as roofline_model
@@ -132,7 +132,7 @@ def run_cell(arch_name: str, shape_name: str, mesh, mesh_tag: str,
     chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         p_sh, specs = _abstract_params(arch, mesh)
         n_params = _count_params(p_sh)
         # A3: replicate weights over 'data' for serving — but only when the

@@ -13,17 +13,32 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape: tuple, axes: tuple):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        # older jax: no explicit-sharding axis types; Auto is the default
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh (tests use small ones, e.g. (2, 4) on 8 host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
+
+
+def activate_mesh(mesh):
+    """Context manager making `mesh` the ambient mesh: jax.set_mesh when
+    available (also feeds get_abstract_mesh), else the plain Mesh context
+    of older jax (NamedShardings carry the mesh regardless)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
 
 
 def dp_axes(mesh) -> tuple:

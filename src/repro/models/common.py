@@ -20,25 +20,47 @@ from repro.tdsim import td_linear
 # TD policy resolution (host-side, hashable -> safe as jit constant)
 # ---------------------------------------------------------------------------
 def resolve_policy(td: TDExecCfg) -> td_policy.TDPolicy:
-    if td.mode == "precise":
-        return td_policy.PRECISE
-    if td.mode == "quant":
-        return td_policy.quant_policy(td.bits_a, td.bits_w)
-    if td.mode == "td":
-        return td_policy.solve_td_policy(td.bits_a, td.bits_w, td.n_chain,
-                                         td.sigma_max,
-                                         use_pallas=td.use_pallas)
-    raise ValueError(f"unknown td mode {td.mode!r}")
+    return resolve_policies([td])[0]
+
+
+def resolve_policies(tds) -> list[td_policy.TDPolicy]:
+    """Resolve many layer configs at once: all "td"-mode entries are solved
+    by one batched (R, q, sigma) call per weight bit width instead of a
+    per-layer scalar solve."""
+    out: list[td_policy.TDPolicy | None] = [None] * len(tds)
+    td_specs, td_idx = [], []
+    for i, td in enumerate(tds):
+        if td.mode == "precise":
+            out[i] = td_policy.PRECISE
+        elif td.mode == "quant":
+            out[i] = td_policy.quant_policy(td.bits_a, td.bits_w)
+        elif td.mode == "td":
+            td_specs.append(td_policy.TDLayerSpec(
+                td.bits_a, td.bits_w, td.n_chain, td.sigma_max,
+                use_pallas=td.use_pallas))
+            td_idx.append(i)
+        else:
+            raise ValueError(f"unknown td mode {td.mode!r}")
+    for i, pol in zip(td_idx, td_policy.solve_td_policies(td_specs)):
+        out[i] = pol
+    return out  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------
 # Sharding constraints (no-ops outside a mesh context)
 # ---------------------------------------------------------------------------
+def _abstract_mesh():
+    """jax.sharding.get_abstract_mesh, tolerating jax versions without it
+    (no queryable mesh -> behave as if none is active)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    return get() if get is not None else None
+
+
 def maybe_constrain(x: jnp.ndarray, *axes) -> jnp.ndarray:
     """with_sharding_constraint(x, P(*axes)) if a global mesh providing all
     referenced axis names is active; otherwise identity.  Lets model code
     carry distribution hints without coupling tests to a mesh."""
-    env = jax.sharding.get_abstract_mesh()
+    env = _abstract_mesh()
     if env is None or env.empty:
         return x
     names = set(env.axis_names)
@@ -68,7 +90,7 @@ def maybe_constrain(x: jnp.ndarray, *axes) -> jnp.ndarray:
 
 
 def batch_sharding_axes(env=None):
-    env = env or jax.sharding.get_abstract_mesh()
+    env = env or _abstract_mesh()
     if env is None or env.empty:
         return None
     return ("pod", "data") if "pod" in env.axis_names else "data"

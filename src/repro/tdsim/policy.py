@@ -5,16 +5,21 @@ hardware chain length and an output error budget (sigma_max, in output-LSB
 units -- e.g. from core.noise_tolerance), solves the redundancy factor R and
 TDC coarsening q exactly like design_space.evaluate_td, and records the
 resulting per-chain noise sigma that the simulator must inject.
+
+`solve_td_policies` batch-solves every layer of a network in one jitted call
+(grouped by weight bit width, which is a static table shape); the scalar
+`solve_td_policy` is a thin wrapper over it.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
+from typing import Sequence
 
-from repro.core import cells
+import numpy as np
+
 from repro.core import chain as chain_mod
 from repro.core import constants as C
-from repro.core import design_space
+from repro.core import design_grid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,8 +41,52 @@ class TDPolicy:
 PRECISE = TDPolicy(mode="precise")
 
 
+@dataclasses.dataclass(frozen=True)
+class TDLayerSpec:
+    """One matmul's hardware question: (B_w, N, sigma_max, Vdd) -> policy.
+
+    sigma_max=None means the exact regime (3 sigma <= 0.5): the returned
+    policy still injects the residual sigma_chain -- the point of the paper's
+    threshold is that this residual is harmless after rounding.
+    """
+    bits_a: int = 4
+    bits_w: int = 4
+    n_chain: int = C.N_BASELINE
+    sigma_max: float | None = None
+    vdd: float = C.VDD_NOM
+    use_pallas: bool = False
+
+
 def quant_policy(bits_a: int = 4, bits_w: int = 4) -> TDPolicy:
     return TDPolicy(mode="quant", bits_a=bits_a, bits_w=bits_w)
+
+
+def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
+    """Solve (R, q, sigma_chain) for every layer of a network in one batched
+    call per distinct weight bit width (the joint (R, q) solution is
+    identical to design_space.evaluate_td)."""
+    specs = list(specs)
+    order: dict[int, list[int]] = {}
+    for i, sp in enumerate(specs):
+        order.setdefault(sp.bits_w, []).append(i)
+    out: list[TDPolicy | None] = [None] * len(specs)
+    for bits_w, idxs in order.items():
+        n = np.array([specs[i].n_chain for i in idxs], np.float64)
+        sig = np.array([chain_mod.sigma_max_exact()
+                        if specs[i].sigma_max is None else specs[i].sigma_max
+                        for i in idxs], np.float64)
+        vdd = np.array([specs[i].vdd for i in idxs], np.float64)
+        res = design_grid.evaluate_td_batched(n, sig, vdd, bits=bits_w)
+        for k, i in enumerate(idxs):
+            sp = specs[i]
+            out[i] = TDPolicy(
+                mode="td", bits_a=sp.bits_a, bits_w=sp.bits_w,
+                n_chain=sp.n_chain,
+                redundancy=int(res["redundancy"][k]),
+                sigma_chain=float(res["sigma_chain_achieved"][k]),
+                tdc_q=int(res["tdc_q"][k]),
+                use_pallas=sp.use_pallas)
+    return out  # type: ignore[return-value]
 
 
 def solve_td_policy(bits_a: int = 4, bits_w: int = 4,
@@ -45,18 +94,6 @@ def solve_td_policy(bits_a: int = 4, bits_w: int = 4,
                     sigma_max: float | None = None,
                     vdd: float = C.VDD_NOM,
                     use_pallas: bool = False) -> TDPolicy:
-    """Solve (R, q, sigma_chain) for an error budget.
-
-    sigma_max=None means the exact regime (3 sigma <= 0.5): the returned
-    policy still injects the residual sigma_chain -- the point of the paper's
-    threshold is that this residual is harmless after rounding.
-    """
-    s_max = chain_mod.sigma_max_exact() if sigma_max is None else sigma_max
-    # joint (R, q) solution identical to the design-space evaluator
-    pt = design_space.evaluate_td(n_chain, bits_w, s_max, vdd=vdd)
-    r, q = pt.redundancy, pt.aux["tdc_lsb_q"]
-    st = chain_mod.cell_stats(bits_w, float(r), vdd)
-    sigma = math.sqrt(n_chain * float(st.var))
-    return TDPolicy(mode="td", bits_a=bits_a, bits_w=bits_w, n_chain=n_chain,
-                    redundancy=r, sigma_chain=sigma, tdc_q=q,
-                    use_pallas=use_pallas)
+    """Single-layer wrapper over the batched solver."""
+    return solve_td_policies([TDLayerSpec(bits_a, bits_w, n_chain, sigma_max,
+                                          vdd, use_pallas)])[0]

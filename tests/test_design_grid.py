@@ -1,0 +1,157 @@
+"""Batched design-space engine: parity against the scalar golden path on the
+paper grids (Figs. 9/11/12) plus Pareto/crossover query units.
+
+Runs without hypothesis: these are the tier-1 guards for the batched
+refactor."""
+import numpy as np
+
+from repro.core import design_grid, design_space as ds
+from repro.tdsim import TDLayerSpec, solve_td_policies
+
+FIG9_NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
+FIG9_BITS = (1, 2, 4, 8)
+FIG12_NS = (16, 64, 256, 576, 1024, 4096)
+FIG12_BITS = (1, 4, 8)
+SIGMA_RELAXED = 2.0
+
+
+def _assert_grid_matches_scalar(grid, ns, bits, sigma):
+    for bi, b in enumerate(bits):
+        for ni, n in enumerate(ns):
+            pts = {d: ds.evaluate(d, n, b, sigma) for d in ds.DOMAINS}
+            for di, d in enumerate(grid.domains):
+                ix = (di, bi, ni, 0, 0)
+                sp = pts[d]
+                assert grid.redundancy[ix] == sp.redundancy, (d, n, b)
+                assert grid.tdc_q[ix] == sp.aux.get("tdc_lsb_q", 1), (d, n, b)
+                np.testing.assert_allclose(grid.e_mac[ix], sp.e_mac,
+                                           rtol=1e-4)
+                np.testing.assert_allclose(grid.throughput[ix],
+                                           sp.throughput, rtol=1e-4)
+                np.testing.assert_allclose(grid.area_per_mac[ix],
+                                           sp.area_per_mac, rtol=1e-4)
+            # winner domain must agree exactly (the paper's headline result)
+            w_scalar = min(pts, key=lambda d: pts[d].e_mac)
+            assert grid.winner_names()[bi, ni, 0, 0] == w_scalar, (n, b)
+
+
+class TestScalarParity:
+    def test_fig9_exact_grid(self):
+        g = ds.sweep_batched(ns=FIG9_NS, bit_widths=FIG9_BITS,
+                             sigma_maxes=None)
+        _assert_grid_matches_scalar(g, FIG9_NS, FIG9_BITS, ds.sigma_exact())
+
+    def test_fig11_relaxed_grid(self):
+        g = ds.sweep_batched(ns=FIG9_NS, bit_widths=FIG9_BITS,
+                             sigma_maxes=SIGMA_RELAXED)
+        _assert_grid_matches_scalar(g, FIG9_NS, FIG9_BITS, SIGMA_RELAXED)
+
+    def test_fig12_throughput_area_winners(self):
+        g = ds.sweep_batched(ns=FIG12_NS, bit_widths=FIG12_BITS,
+                             sigma_maxes=SIGMA_RELAXED)
+        for bi, b in enumerate(FIG12_BITS):
+            for ni, n in enumerate(FIG12_NS):
+                pts = {d: ds.evaluate(d, n, b, SIGMA_RELAXED)
+                       for d in ds.DOMAINS}
+                thr_w = max(pts, key=lambda d: pts[d].throughput)
+                area_w = min(pts, key=lambda d: pts[d].area_per_mac)
+                assert g.winner_names("throughput")[bi, ni, 0, 0] == thr_w
+                assert g.winner_names("area_per_mac")[bi, ni, 0, 0] == area_w
+
+    def test_vdd_axis_matches_scalar(self):
+        vdds = (0.45, 0.60, 0.80)
+        g = ds.sweep_batched(ns=(64, 576), bit_widths=(4,),
+                             sigma_maxes=SIGMA_RELAXED, vdds=vdds)
+        for vi, v in enumerate(vdds):
+            for ni, n in enumerate((64, 576)):
+                sp = ds.evaluate_td(n, 4, SIGMA_RELAXED, vdd=v)
+                ix = (0, 0, ni, 0, vi)
+                assert g.redundancy[ix] == sp.redundancy
+                assert g.tdc_q[ix] == sp.aux["tdc_lsb_q"]
+                np.testing.assert_allclose(g.e_mac[ix], sp.e_mac, rtol=1e-4)
+
+    def test_policy_batch_matches_scalar_engine(self):
+        specs = [TDLayerSpec(4, 4, 576, 2.0), TDLayerSpec(4, 8, 1024, 2.0),
+                 TDLayerSpec(4, 4, 64, None), TDLayerSpec(4, 2, 128, 1.0)]
+        pols = solve_td_policies(specs)
+        for sp, pol in zip(specs, pols):
+            s = ds.sigma_exact() if sp.sigma_max is None else sp.sigma_max
+            pt = ds.evaluate_td(sp.n_chain, sp.bits_w, s)
+            assert pol.redundancy == pt.redundancy
+            assert pol.tdc_q == pt.aux["tdc_lsb_q"]
+            assert pol.sigma_chain > 0.0
+
+
+class TestQueries:
+    def test_pareto_mask_known_frontier(self):
+        costs = np.array([[1.0, 4.0],     # frontier
+                          [2.0, 2.0],     # frontier
+                          [4.0, 1.0],     # frontier
+                          [3.0, 3.0],     # dominated by (2,2)
+                          [2.0, 2.0]])    # duplicate of a frontier point
+        mask = design_grid.pareto_mask(costs)
+        assert mask.tolist() == [True, True, True, False, True]
+
+    def test_pareto_frontier_nonempty_and_nondominated(self):
+        g = ds.sweep_batched(ns=(16, 64, 576), bit_widths=(1, 4),
+                             sigma_maxes=SIGMA_RELAXED)
+        mask = ds.pareto_frontier(g)
+        assert mask.shape == g.shape
+        assert 0 < mask.sum() < mask.size
+        # spot-check: every non-frontier point is dominated by some point
+        e, a, t = (g.e_mac.ravel(), g.area_per_mac.ravel(),
+                   g.throughput.ravel())
+        flat = mask.ravel()
+        worst = np.flatnonzero(~flat)[0]
+        dominated = ((e <= e[worst]) & (a <= a[worst]) & (t >= t[worst])
+                     & ((e < e[worst]) | (a < a[worst]) | (t > t[worst])))
+        assert dominated.any()
+
+    def test_crossovers_match_winner_flips(self):
+        g = ds.sweep_batched(ns=FIG9_NS, bit_widths=(4,),
+                             sigma_maxes=SIGMA_RELAXED)
+        xs = ds.domain_crossovers(g)
+        w = g.winner_names()[0, :, 0, 0]
+        expect = [(int(g.ns[i]), int(g.ns[i + 1]), w[i], w[i + 1])
+                  for i in range(len(w) - 1) if w[i] != w[i + 1]]
+        got = [(x["n_low"], x["n_high"], x["domain_low"], x["domain_high"])
+               for x in xs]
+        assert got == expect
+        assert len(expect) >= 1   # the paper's boundary exists at B=4
+
+    def test_td_win_interval_small_to_medium_n(self):
+        """Fig. 11 headline: TD wins small-to-medium N at B=4, relaxed."""
+        g = ds.sweep_batched(ns=FIG9_NS, bit_widths=(4,),
+                             sigma_maxes=SIGMA_RELAXED)
+        iv = ds.winner_intervals(g, "td")
+        assert len(iv) == 1
+        assert iv[0]["n_min"] >= 32
+        assert iv[0]["n_max"] <= 1024
+
+    def test_records_roundtrip(self):
+        g = ds.sweep_batched(ns=(16, 64), bit_widths=(1, 4),
+                             sigma_maxes=(SIGMA_RELAXED,), vdds=(0.6, 0.8))
+        recs = list(g.records())
+        assert len(recs) == g.n_points
+        r0 = recs[0]
+        assert {"domain", "n", "bits", "sigma_max", "vdd", "e_mac",
+                "throughput", "area_per_mac", "redundancy",
+                "tdc_q"} <= set(r0)
+
+
+class TestBatchedCore:
+    def test_solve_redundancy_array_matches_scalar(self):
+        from repro.core import chain
+        ns = np.array([16.0, 128.0, 576.0, 4096.0])
+        sig = np.array([2.0, 1.0, 0.5, 2.0])
+        r_arr = np.asarray(chain.solve_redundancy(ns, 4, sig))
+        for i in range(len(ns)):
+            assert int(r_arr[i]) == chain.solve_redundancy(
+                float(ns[i]), 4, float(sig[i]))
+
+    def test_optimal_l_osc_array_matches_scalar(self):
+        from repro.core import tdc
+        units = np.array([100.0, 1000.0, 10000.0, 100000.0])
+        l_arr = np.asarray(tdc.optimal_l_osc(units))
+        for i, u in enumerate(units):
+            assert int(l_arr[i]) == tdc.optimal_l_osc(float(u)), u
