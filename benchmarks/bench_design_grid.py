@@ -5,8 +5,16 @@ agree with the scalar golden path on winners.
 
 The scalar loop is timed on a deterministic subsample and extrapolated (the
 full scalar grid takes minutes); the row says how many points were timed.
+
+The grid's headline queries are persisted as CSV artifacts under
+``artifacts/design_grid/`` for EXPERIMENTS.md: the Pareto frontier over
+(e_mac, area_per_mac, throughput), the domain-crossover boundaries along N
+(the paper's "TD wins small-to-medium N"), and the per-(B, sigma, Vdd) TD
+winner intervals.
 """
+import csv
 import itertools
+import os
 import time
 
 import numpy as np
@@ -19,6 +27,47 @@ NS = tuple(int(x) for x in np.unique(
 BITS = (1, 2, 4, 8)
 VDDS = tuple(float(v) for v in np.round(np.linspace(0.40, 0.80, 18), 4))
 SCALAR_SAMPLE = 48
+OUT_DIR = os.path.join("artifacts", "design_grid")
+
+PARETO_HEADER = ["domain", "n", "bits", "sigma_max", "vdd", "m", "e_mac",
+                 "throughput", "area_per_mac", "redundancy", "tdc_q",
+                 "latency"]
+CROSSOVER_HEADER = ["metric", "bits", "sigma_max", "vdd", "n_low", "n_high",
+                    "domain_low", "domain_high"]
+INTERVAL_HEADER = ["domain", "metric", "bits", "sigma_max", "vdd", "n_min",
+                   "n_max", "wins"]
+
+
+def write_artifacts(grid, out_dir: str = OUT_DIR) -> list[str]:
+    """Persist the frontier/boundary queries of a DesignGrid as CSVs."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+
+    mask = ds.pareto_frontier(grid).ravel()
+    p = os.path.join(out_dir, "pareto_frontier.csv")
+    with open(p, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=PARETO_HEADER, extrasaction="ignore")
+        w.writeheader()
+        for keep, rec in zip(mask, grid.records()):
+            if keep:
+                w.writerow(rec)
+    paths.append(p)
+
+    p = os.path.join(out_dir, "domain_crossovers.csv")
+    with open(p, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=CROSSOVER_HEADER)
+        w.writeheader()
+        for metric in ("e_mac", "throughput", "area_per_mac"):
+            w.writerows(ds.domain_crossovers(grid, metric))
+    paths.append(p)
+
+    p = os.path.join(out_dir, "td_winner_intervals.csv")
+    with open(p, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=INTERVAL_HEADER)
+        w.writeheader()
+        w.writerows(ds.winner_intervals(grid, "td"))
+    paths.append(p)
+    return paths
 
 
 def run() -> list[str]:
@@ -61,6 +110,8 @@ def run() -> list[str]:
     rows.append(f"design_grid,crossovers={len(xo)},"
                 f"td_win_intervals={len(iv)},"
                 f"pareto_points={int(pf.sum())}/{pf.size}")
+    for p in write_artifacts(g):
+        rows.append(f"design_grid,artifact={p}")
     us = t_batched * 1e6 / n_pts
     rows.append(f"design_grid,us_per_call={us:.2f},"
                 f"derived=one_jitted_call_per_grid=True")

@@ -6,12 +6,15 @@
 2. Evaluate energy/throughput/area of TD vs analog vs digital for your VMM.
 3. Solve the TD execution policy (R, TDC coarsening, injected sigma) and run
    an actual noisy matmul through the TD execution simulator.
+4. Close the Fig. 10 -> Fig. 11 loop: measure per-layer noise tolerance
+   with ONE vmapped eval call and solve a heterogeneous per-layer policy.
 """
 import jax
 import jax.numpy as jnp
 
 from repro.core import design_space as ds
-from repro.tdsim import solve_td_policy, td_matmul
+from repro.core.noise_tolerance import find_sigma_max_batched
+from repro.tdsim import solve_network_policies, solve_td_policy, td_matmul
 
 # --- 1. hardware design point: ResNet18 3x3x64 kernel, 4-bit, relaxed ----
 N_CHAIN, BITS, SIGMA_MAX = 576, 4, 2.0
@@ -44,4 +47,22 @@ y_noisy = td_matmul(x, w, s_a, s_w, pol, kn)
 rel = float(jnp.abs(y_noisy - y_clean).mean() / jnp.abs(y_clean).mean())
 print(f"TD-simulated matmul: mean |noisy-clean|/|clean| = {rel:.4f} "
       f"(bounded by the sigma_max budget)")
+
+# --- 4. the closed Fig. 10 -> Fig. 11 loop, batched -----------------------
+# a toy 3-"layer" network whose layers tolerate noise differently; the
+# whole (layers x sigma x repeats) sweep is ONE vmapped+jitted call
+fragility = jnp.asarray([0.08, 0.02, 0.005])
+
+
+def eval_fn(sigma_vec, k):          # "accuracy" under per-layer noise
+    return 1.0 - jnp.sum(fragility * sigma_vec)
+
+
+res = find_sigma_max_batched(eval_fn, [0.25, 0.5, 1.0, 2.0, 4.0, 8.0],
+                             key, n_layers=3, n_repeats=2)
+net = solve_network_policies(res.sigma_max, bits_w=BITS, n_chain=N_CHAIN)
+print("\n== per-layer sigma_max -> heterogeneous policy (one pass) ==")
+for i, (s, p) in enumerate(zip(res.sigma_max, net.layers)):
+    print(f"  layer {i}: sigma_max={s:5.2f} -> R={p.redundancy}, "
+          f"q={p.tdc_q}, injected sigma={p.sigma_chain:.3f} LSB")
 print("OK")

@@ -144,6 +144,11 @@ class ArchConfig:
     model: ModelCfg
     train: TrainCfg = TrainCfg()
     td: TDExecCfg = TDExecCfg()
+    # heterogeneous per-layer TD execution (one TDExecCfg per model layer,
+    # e.g. sigma_max back-annotated per layer by the Fig. 10 batched search);
+    # None = the single `td` config applies everywhere.  `td` still drives
+    # the shared top-level matmuls (adapter / lm_head).
+    td_per_layer: tuple[TDExecCfg, ...] | None = None
     # per-shape microbatch override: {shape_name: n_microbatches}
     microbatch_by_shape: dict | None = None
 

@@ -4,11 +4,32 @@ The paper injects Gaussian noise into the convolution outputs of LSQ-4bit
 quantized ResNet20/CIFAR10 and ResNet18/ImageNet, measures the relative
 accuracy drop 1 - Acc(sigma)/Acc(0), and defines sigma_array_max as the noise
 level where the drop crosses 1 %.  That sigma is then fed back into the
-design space (Fig. 11) to relax R and the ADC ENOB.
+design space (Fig. 11) to relax R and the TDC (q).
 
-This module is model-agnostic: it takes any `eval_fn(sigma, key) -> accuracy`
-(built from the tdsim layer for CNNs *and* -- beyond the paper -- for the
-assigned LM architectures, where "accuracy" is next-token top-1).
+Two entry tiers:
+
+  * `find_sigma_max`            -- scalar reference: one eval_fn(sigma, key)
+                                   call per (sigma, repeat), python loop.
+  * `find_sigma_max_batched`    -- the whole (layers x sigma-grid x repeats)
+                                   sweep as ONE vmapped+jitted eval call.
+                                   eval_fn takes a per-layer sigma *vector*
+                                   (probe vectors are one-hot: layer l at
+                                   sigma s means sigma * e_l), so per-layer
+                                   sigma_array_max for every layer of a
+                                   network comes out of a single device
+                                   program -- the vector feeds straight into
+                                   tdsim.policy.solve_network_policies
+                                   (Fig. 10 -> Fig. 11 in one pass).
+
+Both tiers share `crossing_sigma`, the vectorized interpolated 1 %-crossing,
+and the same key-splitting scheme: batched layer l uses
+fold_in(key, l) split exactly like the scalar call, so with a deterministic
+or key-faithful eval_fn the two paths agree layer-by-layer to float
+tolerance (property-tested).
+
+This module is model-agnostic: it takes any eval function (built from the
+tdsim layer for CNNs *and* -- beyond the paper -- for the assigned LM
+architectures, where "accuracy" is next-token top-1).
 """
 from __future__ import annotations
 
@@ -16,6 +37,7 @@ import dataclasses
 from typing import Callable, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -25,6 +47,46 @@ class NoiseToleranceResult:
     rel_drop: np.ndarray        # 1 - acc(sigma)/acc(0)
     acc_clean: float
     sigma_max: float            # interpolated 1 %-drop crossing (Fig. 10b)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedNoiseToleranceResult:
+    """Per-layer Fig. 10 sweep from one vmapped eval call."""
+    sigmas: np.ndarray          # (S,) shared sigma grid
+    rel_drop: np.ndarray        # (L, S) per-layer relative drop curves
+    acc_clean: np.ndarray       # (L,) clean accuracy per layer probe
+    sigma_max: np.ndarray       # (L,) interpolated 1 %-crossings
+    n_evals: int                # evals folded into the single batched call
+
+    def layer(self, l: int) -> NoiseToleranceResult:
+        """Scalar-result view of one layer (for parity checks / reports)."""
+        return NoiseToleranceResult(self.sigmas, self.rel_drop[l],
+                                    float(self.acc_clean[l]),
+                                    float(self.sigma_max[l]))
+
+
+def crossing_sigma(sigmas: np.ndarray, rel_drop: np.ndarray,
+                   rel_drop_max: float = 0.01) -> np.ndarray:
+    """Vectorized first-crossing of the drop threshold with linear
+    interpolation; `rel_drop` is (..., S) over the shared (S,) sigma grid.
+
+    Degenerate cases match the scalar reference: no crossing -> last grid
+    point; crossing already at index 0 -> first grid point.
+    """
+    sig = np.asarray(sigmas, np.float64)
+    drop = np.asarray(rel_drop, np.float64)
+    above = drop > rel_drop_max                       # (..., S)
+    any_above = above.any(axis=-1)
+    j = np.argmax(above, axis=-1)                     # first True (0 if none)
+    # safe gather index: the interpolated value is only selected when
+    # 1 <= j <= S-1, so clamping covers the endpoint branches (and S == 1)
+    jm = np.minimum(np.maximum(j, 1), len(sig) - 1)
+    d0 = np.take_along_axis(drop, (jm - 1)[..., None], axis=-1)[..., 0]
+    d1 = np.take_along_axis(drop, jm[..., None], axis=-1)[..., 0]
+    t = (rel_drop_max - d0) / np.maximum(d1 - d0, 1e-12)
+    interp = sig[jm - 1] + t * (sig[jm] - sig[jm - 1])
+    out = np.where(j == 0, sig[0], interp)
+    return np.where(any_above, out, sig[-1])
 
 
 def find_sigma_max(eval_fn: Callable[[float, jax.Array], float],
@@ -44,16 +106,55 @@ def find_sigma_max(eval_fn: Callable[[float, jax.Array], float],
     accs = np.asarray(accs)
     drop = 1.0 - accs / max(acc_clean, 1e-9)
     sig = np.asarray(list(sigmas), dtype=np.float64)
-    # first crossing, linear interpolation
-    above = np.nonzero(drop > rel_drop_max)[0]
-    if len(above) == 0:
-        sigma_max = float(sig[-1])
-    else:
-        j = int(above[0])
-        if j == 0:
-            sigma_max = float(sig[0])
-        else:
-            d0, d1 = drop[j - 1], drop[j]
-            t = (rel_drop_max - d0) / max(d1 - d0, 1e-12)
-            sigma_max = float(sig[j - 1] + t * (sig[j] - sig[j - 1]))
+    sigma_max = float(crossing_sigma(sig, drop, rel_drop_max))
     return NoiseToleranceResult(sig, drop, acc_clean, sigma_max)
+
+
+def probe_vectors(sigmas: Sequence[float], n_layers: int,
+                  n_repeats: int) -> np.ndarray:
+    """(L, S*R + 1, L) per-layer sigma vectors: row (i*R + r) of layer l is
+    sigmas[i] * e_l, the last row is the all-zero clean probe."""
+    sig = np.asarray(list(sigmas), np.float64)
+    s, l, r = len(sig), int(n_layers), int(n_repeats)
+    vecs = np.zeros((l, s * r + 1, l), np.float64)
+    for li in range(l):
+        vecs[li, : s * r, li] = np.repeat(sig, r)
+    return vecs
+
+
+def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
+                           sigmas: Sequence[float],
+                           key: jax.Array,
+                           n_layers: int,
+                           rel_drop_max: float = 0.01,
+                           n_repeats: int = 3) -> BatchedNoiseToleranceResult:
+    """Per-layer sigma_array_max for all layers in ONE vmapped+jitted call.
+
+    eval_fn(sigma_vec, key) -> scalar accuracy must be jax-traceable, where
+    sigma_vec is a (n_layers,) array of per-layer injected noise std (in
+    output-LSB units).  The sweep probes one layer at a time (one-hot
+    sigma vectors) over the full (layers x sigma-grid x repeats [+ clean])
+    product, vmapped into a single device program -- no python loop, no
+    per-sigma recompile.
+
+    Key discipline matches the scalar path exactly: layer l draws
+    split(fold_in(key, l), S*R + 1), eval (i, r) uses keys[i*R + r] and the
+    clean eval uses keys[-1] -- so a scalar `find_sigma_max` run of layer l
+    with key fold_in(key, l) sees identical (sigma, key) pairs.
+    """
+    sig = np.asarray(list(sigmas), np.float64)
+    s, l, r = len(sig), int(n_layers), int(n_repeats)
+    per = s * r + 1
+    vecs = probe_vectors(sig, l, r)                       # (L, per, L)
+    layer_keys = jnp.stack([jax.random.split(jax.random.fold_in(key, li),
+                                             per) for li in range(l)])
+    flat_v = jnp.asarray(vecs.reshape(l * per, l), jnp.float32)
+    flat_k = layer_keys.reshape((l * per,) + layer_keys.shape[2:])
+    accs = jax.jit(jax.vmap(eval_fn))(flat_v, flat_k)
+    accs = np.asarray(accs, np.float64).reshape(l, per)
+    acc_clean = accs[:, -1]
+    acc = accs[:, : s * r].reshape(l, s, r).mean(axis=-1)
+    drop = 1.0 - acc / np.maximum(acc_clean[:, None], 1e-9)
+    sigma_max = crossing_sigma(sig, drop, rel_drop_max)
+    return BatchedNoiseToleranceResult(sig, drop, acc_clean, sigma_max,
+                                       n_evals=l * per)

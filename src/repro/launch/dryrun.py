@@ -31,6 +31,7 @@ from repro.configs.base import TDExecCfg
 from repro.launch import sharding as shard_lib
 from repro.launch import specs as specs_lib
 from repro.launch import steps as steps_lib
+from repro.launch import td_cli
 from repro.launch.mesh import activate_mesh, make_mesh, make_production_mesh
 from repro.models import common, get_api
 from repro.optim import adamw
@@ -41,7 +42,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 def _abstract_params(arch, mesh, serving: bool = False):
     cfg = arch.model
-    pol = common.resolve_policy(arch.td)
+    pol = common.resolve_arch_policy(arch)
     api = get_api(cfg)
     p_sds = jax.eval_shape(lambda: api["init"](jax.random.key(0), cfg, pol))
     specs = shard_lib.param_specs(p_sds, mesh, serving=serving)
@@ -120,10 +121,13 @@ def _scan_corrections(arch, shape) -> dict:
 
 
 def run_cell(arch_name: str, shape_name: str, mesh, mesh_tag: str,
-             td_mode: str = "precise", scan_layers: bool = False) -> dict:
+             td_mode: str = "precise", scan_layers: bool = False,
+             td_per_layer: str | None = None) -> dict:
     arch = cfgs.get(arch_name)
     if td_mode != "precise":
         arch = arch.replace(td=TDExecCfg(mode=td_mode))
+    if td_per_layer:
+        arch = td_cli.apply_td_args(arch, None, td_per_layer)
     if scan_layers:
         arch = arch.replace(model=dataclasses.replace(arch.model,
                                                       scan_layers=True))
@@ -233,6 +237,10 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--td", default="precise",
                     choices=["precise", "quant", "td"])
+    ap.add_argument("--td-per-layer", default=None,
+                    help="heterogeneous per-layer TD policies: inline sigma "
+                    "list '0.5,1.0,...' or '@per_layer_policies.json' from "
+                    "the Fig. 10 batched noise-tolerance search")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--scan-layers", action="store_true",
@@ -260,11 +268,13 @@ def main():
     for arch_name, shape_name, _ in cells:
         tag = f"{arch_name}__{shape_name}__{mesh_tag}" + \
             (f"__{args.td}" if args.td != "precise" else "") + \
+            ("__per_layer" if args.td_per_layer else "") + \
             ("__scan" if args.scan_layers else "")
         out_path = os.path.join(args.out, tag + ".json")
         try:
             res = run_cell(arch_name, shape_name, mesh, mesh_tag, args.td,
-                           scan_layers=args.scan_layers)
+                           scan_layers=args.scan_layers,
+                           td_per_layer=args.td_per_layer)
             n_ok += 1
             print(f"[OK] {tag}: dominant={res['roofline']['dominant']} "
                   f"step={res['roofline']['step_s']:.4f}s "

@@ -15,15 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as cfgs
-from repro.configs.base import ShapeCfg, TDExecCfg
+from repro.configs.base import ShapeCfg
 from repro.launch import steps as steps_lib
+from repro.launch import td_cli
 from repro.models import common, get_api, matmul_shapes
 from repro.tdsim import energy_meter
 
 
 def run(arch, batch: int, prompt_len: int, gen: int, seed: int = 0):
     cfg = arch.model
-    pol = common.resolve_policy(arch.td)
+    pol = common.resolve_arch_policy(arch)
     api = get_api(cfg)
     key = jax.random.key(seed)
     params = api["init"](key, cfg, pol)
@@ -63,9 +64,12 @@ def run(arch, batch: int, prompt_len: int, gen: int, seed: int = 0):
           f"p95={np.percentile(lat, 95)*1e3:.1f} ms/tok")
     print(f"[serve] sample ids[0,:16]: {np.asarray(gen_ids)[0, :16].tolist()}")
 
-    # hardware energy accounting (the paper's axis) for this serving config
+    # hardware energy accounting (the paper's axis) for this serving config;
+    # with per-layer policies the first layer's policy sets the accounting
+    # bit widths / chain length
     shapes = matmul_shapes(cfg)
-    pol_acct = pol if pol.mode != "precise" else None
+    pol0 = common.pol_at(pol, 0)
+    pol_acct = pol0 if pol0.mode != "precise" else None
     if pol_acct is not None:
         reports = energy_meter.compare_domains(shapes, pol_acct,
                                                sigma_max=2.0)
@@ -84,11 +88,13 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--td", default=None,
                     choices=[None, "precise", "quant", "td"])
+    ap.add_argument("--td-per-layer", default=None,
+                    help="heterogeneous per-layer TD policies: inline sigma "
+                    "list '0.5,1.0,...' or '@per_layer_policies.json' from "
+                    "the Fig. 10 batched noise-tolerance search")
     args = ap.parse_args()
     arch = cfgs.get_smoke(args.arch) if args.smoke else cfgs.get(args.arch)
-    if args.td:
-        arch = arch.replace(td=TDExecCfg(mode=args.td, n_chain=min(
-            576, arch.model.d_model)))
+    arch = td_cli.apply_td_args(arch, args.td, args.td_per_layer)
     run(arch, args.batch, args.prompt_len, args.gen)
 
 

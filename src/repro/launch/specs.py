@@ -20,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import SHAPES, ArchConfig
 from repro.configs.base import ShapeCfg
 from repro.launch import sharding as shard_lib
-from repro.models import encdec, transformer
+from repro.models import common, encdec, transformer
 
 TOKEN_DT = jnp.int32
 EMBED_DT = jnp.bfloat16
@@ -78,8 +78,10 @@ def decode_state_shapes(arch: ArchConfig, shape: ShapeCfg) -> dict:
             enc_out = jnp.zeros((b, CROSS_MEMORY_CAP, cfg.d_model), EMBED_DT)
             return {"layers": caches, "enc_out": enc_out}
     else:
+        pol = common.resolve_arch_policy(arch)
+
         def build():
-            caches = transformer.init_caches(b, s, cfg, CACHE_DT)
+            caches = transformer.init_caches(b, s, cfg, CACHE_DT, pol=pol)
             return {"layers": caches, "enc_out": None}
     return jax.eval_shape(build)
 

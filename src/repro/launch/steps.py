@@ -22,7 +22,7 @@ DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
 
 def build_train_step(arch: ArchConfig, shape: ShapeCfg):
     cfg = arch.model
-    pol = common.resolve_policy(arch.td)
+    pol = common.resolve_arch_policy(arch)
     api = get_api(cfg)
     n_micro = arch.microbatches_for(shape.name)
     compute_dt = DTYPES[arch.train.compute_dtype]
@@ -73,7 +73,7 @@ def build_train_step(arch: ArchConfig, shape: ShapeCfg):
 
 def build_prefill_step(arch: ArchConfig, shape: ShapeCfg):
     cfg = arch.model
-    pol = common.resolve_policy(arch.td)
+    pol = common.resolve_arch_policy(arch)
     api = get_api(cfg)
     compute_dt = DTYPES[arch.train.compute_dtype]
 
@@ -90,7 +90,7 @@ def build_prefill_step(arch: ArchConfig, shape: ShapeCfg):
 def build_serve_step(arch: ArchConfig, shape: ShapeCfg):
     """One decode step: new token against a seq_len KV cache/SSM state."""
     cfg = arch.model
-    pol = common.resolve_policy(arch.td)
+    pol = common.resolve_arch_policy(arch)
     api = get_api(cfg)
     compute_dt = DTYPES[arch.train.compute_dtype]
 

@@ -1,0 +1,74 @@
+"""CLI plumbing for heterogeneous per-layer TD execution.
+
+`--td-per-layer` accepts either
+
+  * an inline comma-separated sigma_array_max list, one entry per model
+    layer (a single value broadcasts), e.g. ``--td-per-layer 0.5,1.0,2.0``
+    -- "exact" marks the exact regime (sigma_max=None) for that layer;
+  * ``@path/to/per_layer_policies.json`` -- the artifact emitted by
+    ``benchmarks/bench_noise_tolerance.py`` (the Fig. 10 batched search),
+    closing the paper's Fig. 10 -> Fig. 11 loop: measured per-layer noise
+    tolerance feeds straight back into the per-layer (R, q, sigma_chain)
+    solution.
+
+The JSON artifact is either ``{"layers": [{"sigma_max": ..,
+"n_chain": ..?, "bits_w": ..?}, ...]}`` or a bare list of such records.
+Missing fields inherit from the base ``TDExecCfg``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.configs.base import ArchConfig, TDExecCfg
+
+
+def _parse_sigma_token(tok: str) -> float | None:
+    tok = tok.strip()
+    if tok.lower() in ("exact", "none"):
+        return None
+    return float(tok)
+
+
+def parse_td_per_layer(spec: str, base: TDExecCfg,
+                       n_layers: int) -> tuple[TDExecCfg, ...]:
+    """Spec string -> one "td"-mode TDExecCfg per layer."""
+    base = dataclasses.replace(base, mode="td")
+    if spec.startswith("@"):
+        with open(spec[1:]) as f:
+            doc = json.load(f)
+        records = doc["layers"] if isinstance(doc, dict) else doc
+        if len(records) == 1:
+            records = list(records) * n_layers
+        if len(records) != n_layers:
+            raise ValueError(f"{spec[1:]} has {len(records)} layer records, "
+                             f"model has {n_layers} layers")
+        out = []
+        for rec in records:
+            kw = {k: rec[k] for k in ("bits_a", "bits_w", "n_chain")
+                  if k in rec}
+            out.append(dataclasses.replace(base,
+                                           sigma_max=rec.get("sigma_max"),
+                                           **kw))
+        return tuple(out)
+    sigmas = [_parse_sigma_token(t) for t in spec.split(",") if t.strip()]
+    if len(sigmas) == 1:
+        sigmas = sigmas * n_layers
+    if len(sigmas) != n_layers:
+        raise ValueError(f"--td-per-layer gave {len(sigmas)} sigmas, model "
+                         f"has {n_layers} layers")
+    return tuple(dataclasses.replace(base, sigma_max=s) for s in sigmas)
+
+
+def apply_td_args(arch: ArchConfig, td: str | None,
+                  td_per_layer: str | None) -> ArchConfig:
+    """Shared --td / --td-per-layer handling for train/serve/dryrun CLIs."""
+    if td:
+        arch = arch.replace(td=TDExecCfg(mode=td, n_chain=min(
+            576, arch.model.d_model)))
+    if td_per_layer:
+        base = arch.td if arch.td.mode == "td" else TDExecCfg(
+            mode="td", n_chain=min(576, arch.model.d_model))
+        arch = arch.replace(td_per_layer=parse_td_per_layer(
+            td_per_layer, base, arch.model.n_layers))
+    return arch

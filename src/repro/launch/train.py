@@ -19,10 +19,11 @@ import numpy as np
 
 import repro.configs as cfgs
 from repro.checkpoint import ckpt
-from repro.configs.base import ShapeCfg, TDExecCfg
+from repro.configs.base import ShapeCfg
 from repro.data.pipeline import PrefetchLoader
 from repro.data.synthetic import DataCfg, SyntheticStream
 from repro.launch import ft
+from repro.launch import td_cli
 from repro.launch import steps as steps_lib
 from repro.models import get_api
 from repro.models import common
@@ -31,7 +32,7 @@ from repro.optim import adamw
 
 def build_session(arch, shape, ckpt_dir, seed=0):
     cfg = arch.model
-    pol = common.resolve_policy(arch.td)
+    pol = common.resolve_arch_policy(arch)
     api = get_api(cfg)
     params = api["init"](jax.random.key(seed), cfg, pol)
     opt_state = adamw.init_opt_state(params)
@@ -109,14 +110,16 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--td", default=None,
                     choices=[None, "precise", "quant", "td"])
+    ap.add_argument("--td-per-layer", default=None,
+                    help="heterogeneous per-layer TD policies: inline sigma "
+                    "list '0.5,1.0,...' or '@per_layer_policies.json' from "
+                    "the Fig. 10 batched noise-tolerance search")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     arch = cfgs.get_smoke(args.arch) if args.smoke else cfgs.get(args.arch)
-    if args.td:
-        arch = arch.replace(td=TDExecCfg(mode=args.td, n_chain=min(
-            576, arch.model.d_model)))
+    arch = td_cli.apply_td_args(arch, args.td, args.td_per_layer)
     shape = ShapeCfg("cli", args.seq, args.batch, "train")
 
     def session():

@@ -19,6 +19,10 @@ from repro.tdsim import td_linear
 # ---------------------------------------------------------------------------
 # TD policy resolution (host-side, hashable -> safe as jit constant)
 # ---------------------------------------------------------------------------
+pol_at = td_policy.pol_at
+pol_top = td_policy.pol_top
+
+
 def resolve_policy(td: TDExecCfg) -> td_policy.TDPolicy:
     return resolve_policies([td])[0]
 
@@ -44,6 +48,28 @@ def resolve_policies(tds) -> list[td_policy.TDPolicy]:
     for i, pol in zip(td_idx, td_policy.solve_td_policies(td_specs)):
         out[i] = pol
     return out  # type: ignore[return-value]
+
+
+def resolve_arch_policy(arch) -> td_policy.TDPolicy | td_policy.NetworkPolicy:
+    """Resolve an ArchConfig's execution policy in one shot.
+
+    Homogeneous (`td_per_layer is None`) -> a single TDPolicy as before.
+    Heterogeneous -> every per-layer TDExecCfg plus the top-level `td` go
+    through ONE `resolve_policies` call (batched (R, q, sigma) solve per
+    distinct weight bit width) and come back as a NetworkPolicy.
+    """
+    if arch.td_per_layer is None:
+        return resolve_policy(arch.td)
+    if arch.model.family != "decoder":
+        raise ValueError("per-layer TD policies require a decoder-family "
+                         f"model, got {arch.model.family!r}")
+    n_layers = arch.model.n_layers
+    if len(arch.td_per_layer) != n_layers:
+        raise ValueError(
+            f"td_per_layer has {len(arch.td_per_layer)} entries for "
+            f"{n_layers}-layer model {arch.model.name!r}")
+    pols = resolve_policies(list(arch.td_per_layer) + [arch.td])
+    return td_policy.NetworkPolicy(layers=tuple(pols[:-1]), top=pols[-1])
 
 
 # ---------------------------------------------------------------------------

@@ -46,7 +46,7 @@ def _dec_train_loss(params, batch, cfg: ModelCfg, pol, key=None,
 def _dec_prefill(params, batch, cfg: ModelCfg, pol, s_cache: int,
                  key=None, cache_dtype=jnp.bfloat16):
     b = batch["tokens"].shape[0]
-    caches = transformer.init_caches(b, s_cache, cfg, cache_dtype)
+    caches = transformer.init_caches(b, s_cache, cfg, cache_dtype, pol=pol)
     logits, caches, _ = transformer.forward(params, batch, cfg, pol,
                                             caches=caches, key=key)
     return logits[:, -1:], {"layers": caches, "enc_out": None}

@@ -85,24 +85,59 @@ def block_strides(cfg: ResNetCfg) -> list[int]:
             for bi in range(cfg.blocks_per_stage)]
 
 
+def noise_sites(cfg: ResNetCfg) -> list[str]:
+    """Ordered names of the network's matmul sites -- the per-layer axis of
+    the batched noise-tolerance search (`forward` accepts one policy per
+    site in exactly this order)."""
+    sites = ["stem"]
+    c_prev = cfg.stages[0]
+    strides = iter(block_strides(cfg))
+    for si, c in enumerate(cfg.stages):
+        for bi in range(cfg.blocks_per_stage):
+            stride = next(strides)
+            sites += [f"s{si}b{bi}.conv1", f"s{si}b{bi}.conv2"]
+            if stride != 1 or c_prev != c:
+                sites.append(f"s{si}b{bi}.proj")
+            c_prev = c
+    sites.append("head")
+    return sites
+
+
 def forward(params: dict, x: jnp.ndarray, cfg: ResNetCfg, pol,
             key: jax.Array | None = None) -> jnp.ndarray:
-    """x (B,H,W,3) -> logits (B, classes)."""
+    """x (B,H,W,3) -> logits (B, classes).
+
+    `pol` is a single policy for every matmul, or a sequence with one policy
+    per site in `noise_sites(cfg)` order (per-layer noise injection for the
+    Fig. 10 batched search)."""
+    per_site = isinstance(pol, (list, tuple))
+    if per_site:
+        n_sites = 2 + sum(2 + ("proj" in blk) for blk in params["blocks"])
+        if len(pol) != n_sites:
+            raise ValueError(f"{len(pol)} per-site policies for a network "
+                             f"with {n_sites} sites (noise_sites order)")
+    site = iter(range(len(pol))) if per_site else None
+
+    def sp():
+        return pol[next(site)] if per_site else pol
+
     h = jax.nn.relu(_bn(params["stem_bn"],
-                        conv(params["stem"], x, 3, 1, pol,
+                        conv(params["stem"], x, 3, 1, sp(),
                              common.fold_key(key, 0))))
     strides = block_strides(cfg)
     for i, blk in enumerate(params["blocks"]):
         stride = strides[i]
         y = jax.nn.relu(_bn(blk["bn1"],
-                            conv(blk["conv1"], h, 3, stride, pol,
+                            conv(blk["conv1"], h, 3, stride, sp(),
                                  common.fold_key(key, 2 * i + 1))))
-        y = _bn(blk["bn2"], conv(blk["conv2"], y, 3, 1, pol,
+        y = _bn(blk["bn2"], conv(blk["conv2"], y, 3, 1, sp(),
                                  common.fold_key(key, 2 * i + 2)))
-        sc = h if "proj" not in blk else conv(blk["proj"], h, 1, stride, pol)
+        sc = h if "proj" not in blk else conv(blk["proj"], h, 1, stride,
+                                             sp(),
+                                             common.fold_key(key, 2 * i + 2000))
         h = jax.nn.relu(y + sc)
     pooled = h.mean((1, 2))
-    return td_linear.linear(params["head"], pooled, pol,
+    return td_linear.linear(params["head"], pooled, sp(),
                             common.fold_key(key, 999))
 
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelCfg
 from repro.models import attention, common, ffn, mamba2, rwkv6
+from repro.tdsim.policy import NetworkPolicy
 
 
 def _is_homogeneous(cfg: ModelCfg) -> bool:
@@ -27,6 +28,15 @@ def _is_homogeneous(cfg: ModelCfg) -> bool:
     ffns = {_ffn_kind(cfg, i) for i in range(cfg.n_layers)}
     return len(mixers) == 1 and len(ffns) == 1 and \
         "shared_attn" not in mixers
+
+
+def _can_scan(cfg: ModelCfg, pol) -> bool:
+    """Heterogeneous per-layer policies are static per layer, so the layer
+    bodies differ and must unroll (a homogeneous NetworkPolicy still
+    scans)."""
+    if not (cfg.scan_layers and _is_homogeneous(cfg)):
+        return False
+    return not (isinstance(pol, NetworkPolicy) and not pol.homogeneous)
 
 
 def _ffn_kind(cfg: ModelCfg, layer: int) -> str:
@@ -41,49 +51,52 @@ def _ffn_kind(cfg: ModelCfg, layer: int) -> str:
 
 def init_params(key: jax.Array, cfg: ModelCfg, pol,
                 dtype=jnp.float32) -> dict:
+    top = common.pol_top(pol)
     keys = jax.random.split(key, cfg.n_layers + 4)
     params: dict = {"embed": common.embed_init(keys[0], cfg.vocab,
                                                cfg.d_model, dtype)}
     if cfg.frontend is not None:
         d_in = cfg.d_frontend or cfg.d_model
         params["adapter"] = common.dense_init(keys[1], d_in, cfg.d_model,
-                                              pol, dtype=dtype)
+                                              top, dtype=dtype)
     if any(cfg.mixer_at(i) == "shared_attn" for i in range(cfg.n_layers)):
-        params["shared_attn"] = attention.attn_init(keys[2], cfg, pol, dtype)
+        params["shared_attn"] = attention.attn_init(keys[2], cfg, top, dtype)
 
     layers = []
     for i in range(cfg.n_layers):
+        pol_i = common.pol_at(pol, i)
         lk = jax.random.split(keys[3 + i], 4)
         mix = cfg.mixer_at(i)
         lp: dict = {"ln1": common.rmsnorm_init(cfg.d_model, dtype),
                     "ln2": common.rmsnorm_init(cfg.d_model, dtype)}
         if mix == "attn":
-            lp["attn"] = attention.attn_init(lk[0], cfg, pol, dtype)
+            lp["attn"] = attention.attn_init(lk[0], cfg, pol_i, dtype)
         elif mix == "mamba2":
-            lp["mamba"] = mamba2.mamba2_init(lk[0], cfg, pol, dtype)
+            lp["mamba"] = mamba2.mamba2_init(lk[0], cfg, pol_i, dtype)
         elif mix == "rwkv6":
-            lp["timemix"] = rwkv6.timemix_init(lk[0], cfg, pol, dtype)
+            lp["timemix"] = rwkv6.timemix_init(lk[0], cfg, pol_i, dtype)
         elif mix == "shared_attn":
             pass  # weights live at params["shared_attn"]
         else:
             raise ValueError(mix)
         fk = _ffn_kind(cfg, i)
         if fk == "swiglu":
-            lp["mlp"] = ffn.swiglu_init(lk[1], cfg.d_model, cfg.d_ff, pol,
+            lp["mlp"] = ffn.swiglu_init(lk[1], cfg.d_model, cfg.d_ff, pol_i,
                                         dtype)
         elif fk == "moe":
-            lp["moe"] = ffn.moe_init(lk[1], cfg.d_model, cfg.moe, pol, dtype)
+            lp["moe"] = ffn.moe_init(lk[1], cfg.d_model, cfg.moe, pol_i,
+                                     dtype)
         elif fk == "rwkv_cm":
-            lp["chanmix"] = rwkv6.chanmix_init(lk[1], cfg, pol, dtype)
+            lp["chanmix"] = rwkv6.chanmix_init(lk[1], cfg, pol_i, dtype)
         # fk == "none": mixer-only layer (zamba2 mamba blocks)
         layers.append(lp)
-    if cfg.scan_layers and _is_homogeneous(cfg):
+    if _can_scan(cfg, pol):
         layers = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *layers)
     params["layers"] = layers
     params["final_norm"] = common.rmsnorm_init(cfg.d_model, dtype)
     if not cfg.tie_embeddings:
         params["lm_head"] = common.dense_init(
-            keys[-1], cfg.d_model, cfg.vocab, pol, dtype=dtype,
+            keys[-1], cfg.d_model, cfg.vocab, top, dtype=dtype,
             scale=1.0 / cfg.d_model ** 0.5)
     return params
 
@@ -92,7 +105,8 @@ def _layer_apply(lp: dict, shared: dict | None, x: jnp.ndarray,
                  cfg: ModelCfg, pol, i: int,
                  positions: jnp.ndarray,
                  cache: dict | None,
-                 key: jax.Array | None) -> tuple[jnp.ndarray, dict | None, dict]:
+                 key: jax.Array | None,
+                 shared_pol=None) -> tuple[jnp.ndarray, dict | None, dict]:
     mix = cfg.mixer_at(i)
     aux: dict = {}
     kmix = common.fold_key(key, 2 * i)
@@ -103,8 +117,11 @@ def _layer_apply(lp: dict, shared: dict | None, x: jnp.ndarray,
         y, new_cache = attention.attention(lp["attn"], h, cfg, pol,
                                            positions, cache=cache, key=kmix)
     elif mix == "shared_attn":
-        y, new_cache = attention.attention(shared, h, cfg, pol,
-                                           positions, cache=cache, key=kmix)
+        # weight-tied shared block: its params were initialized with the
+        # top-level policy, so it must run under that policy too
+        y, new_cache = attention.attention(
+            shared, h, cfg, pol if shared_pol is None else shared_pol,
+            positions, cache=cache, key=kmix)
     elif mix == "mamba2":
         y, new_cache = mamba2.mamba2(lp["mamba"], h, cfg, pol,
                                      state=cache, key=kmix)
@@ -144,7 +161,8 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
     tokens = batch["tokens"]
     x = common.embed(params["embed"], tokens)
     if cfg.frontend is not None and "embeds" in batch:
-        emb = common.dense(params["adapter"], batch["embeds"], pol)
+        emb = common.dense(params["adapter"], batch["embeds"],
+                           common.pol_top(pol))
         x = jnp.concatenate([emb.astype(x.dtype), x], axis=1)
     x = common.maybe_constrain(x, common.batch_sharding_axes(), None, None)
     b, s, _ = x.shape
@@ -156,8 +174,9 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
     aux_all: dict = {}
 
     def run_layer(lp, xx, cache, i, lkey):
-        return _layer_apply(lp, shared, xx, cfg, pol, i, positions, cache,
-                            lkey)
+        return _layer_apply(lp, shared, xx, cfg, common.pol_at(pol, i), i,
+                            positions, cache, lkey,
+                            shared_pol=common.pol_top(pol))
 
     if remat == "full":
         run_layer = jax.checkpoint(run_layer, static_argnums=(3,))
@@ -166,7 +185,7 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
             run_layer, static_argnums=(3,),
             policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
 
-    if cfg.scan_layers and _is_homogeneous(cfg):
+    if _can_scan(cfg, pol):
         stacked = jax.tree_util.tree_map(
             lambda *ls: jnp.stack(ls), *params["layers"]) \
             if isinstance(params["layers"], list) else params["layers"]
@@ -179,9 +198,11 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
         def scan_body(carry, xs):
             xx, kk = carry
             lp, cache_i, idx = xs
-            xx, nc, aux = _layer_apply(lp, shared, xx, cfg, pol, 0,
+            xx, nc, aux = _layer_apply(lp, shared, xx, cfg,
+                                       common.pol_at(pol, 0), 0,
                                        positions, cache_i,
-                                       common.fold_key(kk, idx))
+                                       common.fold_key(kk, idx),
+                                       shared_pol=common.pol_top(pol))
             return (xx, kk), (nc, aux)
 
         body = scan_body
@@ -208,7 +229,7 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
     if cfg.tie_embeddings:
         logits = x @ params["embed"]["table"].T
     else:
-        logits = common.dense(params["lm_head"], x, pol,
+        logits = common.dense(params["lm_head"], x, common.pol_top(pol),
                               common.fold_key(key, 10_000))
     # keep the (huge) logits vocab-sharded; CE's logsumexp reduces over it
     logits = common.maybe_constrain(
@@ -217,7 +238,11 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
 
 
 def init_caches(b: int, s_cache: int, cfg: ModelCfg,
-                dtype=jnp.bfloat16):
+                dtype=jnp.bfloat16, pol=None):
+    """`pol` must be the policy the forward pass will run under: a
+    heterogeneous NetworkPolicy unrolls layers, so its caches must stay a
+    per-layer list even when cfg.scan_layers is set (pol=None keeps the
+    config-only behavior)."""
     caches = []
     for i in range(cfg.n_layers):
         mix = cfg.mixer_at(i)
@@ -227,6 +252,6 @@ def init_caches(b: int, s_cache: int, cfg: ModelCfg,
             caches.append(mamba2.init_state(b, cfg, jnp.float32))
         elif mix == "rwkv6":
             caches.append(rwkv6.init_state(b, cfg, jnp.float32))
-    if cfg.scan_layers and _is_homogeneous(cfg):
+    if _can_scan(cfg, pol):
         return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *caches)
     return caches

@@ -8,13 +8,18 @@ resulting per-chain noise sigma that the simulator must inject.
 
 `solve_td_policies` batch-solves every layer of a network in one jitted call
 (grouped by weight bit width, which is a static table shape); the scalar
-`solve_td_policy` is a thin wrapper over it.
+`solve_td_policy` is a thin wrapper over it.  `solve_network_policies` is
+the Fig. 10 -> Fig. 11 coupling: it takes the per-layer sigma_array_max
+vector straight out of `core.noise_tolerance.find_sigma_max_batched` into
+`design_grid.evaluate_td_batched` and returns one `NetworkPolicy` with a
+heterogeneous per-layer (R, q, sigma_chain) solution.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
+import jax
 import numpy as np
 
 from repro.core import chain as chain_mod
@@ -87,6 +92,79 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
                 tdc_q=int(res["tdc_q"][k]),
                 use_pallas=sp.use_pallas)
     return out  # type: ignore[return-value]
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPolicy:
+    """Heterogeneous per-layer execution policy of a whole network.
+
+    `layers[i]` drives layer i's matmuls; `top` drives the shared top-level
+    matmuls (embedding adapter, weight-tied shared blocks, lm_head).  A
+    tuple of frozen TDPolicy values is hashable, so a NetworkPolicy is a
+    valid jit constant exactly like a single TDPolicy.
+    """
+    layers: tuple[TDPolicy, ...]
+    top: TDPolicy = PRECISE
+
+    def at(self, i: int) -> TDPolicy:
+        return self.layers[i]
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    @property
+    def homogeneous(self) -> bool:
+        """True when every layer runs the same policy (such a network may
+        still scan over layers).  Trace-local policies (any jax-array
+        field, e.g. a traced sigma_chain from the noise-tolerance sweep)
+        are conservatively heterogeneous: comparing tracers for equality
+        is not allowed, and those sweeps want unrolled layers anyway."""
+        for p in self.layers:
+            for f in dataclasses.fields(p):
+                if isinstance(getattr(p, f.name), jax.Array):
+                    return False
+        return all(p == self.layers[0] for p in self.layers)
+
+
+def pol_at(pol, i: int) -> TDPolicy:
+    """Layer-i view of a policy: NetworkPolicy dispatches per layer, a plain
+    TDPolicy applies to every layer."""
+    return pol.at(i) if isinstance(pol, NetworkPolicy) else pol
+
+
+def pol_top(pol) -> TDPolicy:
+    """Policy of the shared top-level matmuls (adapter / lm_head)."""
+    return pol.top if isinstance(pol, NetworkPolicy) else pol
+
+
+def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
+                           n_chain=C.N_BASELINE, vdd=C.VDD_NOM,
+                           use_pallas: bool = False,
+                           top: TDPolicy = PRECISE) -> NetworkPolicy:
+    """Per-layer sigma_array_max vector (Fig. 10) -> NetworkPolicy (Fig. 11).
+
+    `sigma_max` is the (L,) output of `find_sigma_max_batched` (entries of
+    None/NaN mean the exact regime for that layer); `bits_a`, `bits_w`,
+    `n_chain` and `vdd` broadcast scalar-or-(L,).  All layers solve through
+    `design_grid.evaluate_td_batched` in one batched call per distinct
+    weight bit width.
+    """
+    sig = np.asarray([np.nan if s is None else float(s) for s in
+                      np.atleast_1d(np.asarray(sigma_max, object))],
+                     np.float64)
+    n_layers = len(sig)
+
+    def bcast(v):
+        return [x.item() for x in np.broadcast_to(np.asarray(v), (n_layers,))]
+
+    ba, bw = bcast(bits_a), bcast(bits_w)
+    nc, vd = bcast(n_chain), bcast(vdd)
+    specs = [TDLayerSpec(bits_a=int(ba[i]), bits_w=int(bw[i]),
+                         n_chain=int(nc[i]),
+                         sigma_max=None if np.isnan(sig[i]) else sig[i],
+                         vdd=float(vd[i]), use_pallas=use_pallas)
+             for i in range(n_layers)]
+    return NetworkPolicy(layers=tuple(solve_td_policies(specs)), top=top)
 
 
 def solve_td_policy(bits_a: int = 4, bits_w: int = 4,

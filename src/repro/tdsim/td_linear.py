@@ -17,6 +17,14 @@ With sigma_chain == 0 and tdc_q == 1 the result is bit-exact equal to the
 fake-quant matmul (tested).  The per-segment noise std scales with
 sqrt(segment_len / n_chain) for the (shorter) tail segment, matching
 Eq. 5's sigma ~ sqrt(N).
+
+`pol.sigma_chain` may also be a *traced* jax scalar (a policy built inside a
+jitted/vmapped function via `pol.replace(sigma_chain=x)`): the noise branch
+is then taken unconditionally and the injected std follows the traced value.
+This is what lets `core.noise_tolerance.find_sigma_max_batched` sweep the
+whole (layer x sigma x repeat) grid in one compiled program instead of
+recompiling per sigma.  Such trace-local policies must not be used as jit
+static arguments or dict keys (the array field is unhashable).
 """
 from __future__ import annotations
 
@@ -25,6 +33,12 @@ import jax.numpy as jnp
 
 from repro.quant import bitserial, lsq
 from repro.tdsim.policy import TDPolicy
+
+
+def _noise_active(sigma) -> bool:
+    """True when the noise branch must be traced: any jax value (possibly a
+    tracer under vmap/jit) counts as active; static floats compare to 0."""
+    return isinstance(sigma, jax.Array) or sigma > 0.0
 
 
 def _segment(k: int, n_chain: int) -> tuple[int, int]:
@@ -58,12 +72,13 @@ def td_matmul_int(x_int: jnp.ndarray, w_int: jnp.ndarray, pol: TDPolicy,
     # chain partials: (Ba, ..., n_seg, n_out)
     partial = jnp.einsum("b...sk,skn->b...sn", planes_seg, xw_seg)
 
-    if pol.sigma_chain > 0.0:
+    if _noise_active(pol.sigma_chain):
         # tail segment holds k - (n_seg-1)*n_chain live cells
         live = jnp.minimum(
             jnp.full((n_seg,), pol.n_chain, jnp.float32),
             jnp.maximum(k - jnp.arange(n_seg) * pol.n_chain, 1).astype(jnp.float32))
-        sig = pol.sigma_chain * jnp.sqrt(live / pol.n_chain)  # (n_seg,)
+        sig = jnp.asarray(pol.sigma_chain, jnp.float32) \
+            * jnp.sqrt(live / pol.n_chain)                    # (n_seg,)
         eps = jax.random.normal(key, partial.shape, jnp.float32)
         partial = partial + eps * sig[:, None]
 
@@ -101,7 +116,9 @@ def td_matmul(x: jnp.ndarray, w: jnp.ndarray,
         key = jax.random.PRNGKey(0)
     x_int = lsq.lsq_quantize_int(x, s_a, pol.bits_a, signed=True)
     w_int = lsq.lsq_quantize_int(w, s_w, pol.bits_w, signed=True)
-    if pol.use_pallas:
+    if pol.use_pallas and not isinstance(pol.sigma_chain, jax.Array):
+        # the pallas kernel bakes sigma in as a compile-time float; traced
+        # sigma (noise-tolerance sweeps) routes through the jnp simulator
         from repro.kernels.td_vmm import ops as td_ops
         y_int = td_ops.td_vmm(x_int, w_int, pol, key)
     else:

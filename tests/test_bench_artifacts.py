@@ -1,0 +1,92 @@
+"""Benchmark CSV artifacts: the design-grid Pareto/crossover files and the
+noise-tolerance Fig. 10 files must exist, be non-empty, and carry the
+expected headers (EXPERIMENTS.md consumes them; CI uploads them).
+
+These run the artifact writers on reduced inputs — the full benchmark runs
+(and the timed acceptance assertions inside them) live in the slow CI job
+via ``python -m benchmarks.run``.
+"""
+import csv
+import json
+import os
+
+import numpy as np
+
+from benchmarks import bench_design_grid, bench_noise_tolerance
+from repro.core import design_space as ds
+from repro.core.noise_tolerance import (BatchedNoiseToleranceResult,
+                                        NoiseToleranceResult)
+from repro.tdsim.policy import solve_network_policies
+
+
+def _read_csv(path):
+    assert os.path.exists(path), path
+    assert os.path.getsize(path) > 0, path
+    with open(path, newline="") as f:
+        rows = list(csv.reader(f))
+    return rows[0], rows[1:]
+
+
+def test_design_grid_artifacts(tmp_path):
+    g = ds.sweep_batched(ns=(16, 64, 256, 1024), bit_widths=(1, 4),
+                         sigma_maxes=2.0)
+    paths = bench_design_grid.write_artifacts(g, str(tmp_path))
+    assert [os.path.basename(p) for p in paths] == \
+        ["pareto_frontier.csv", "domain_crossovers.csv",
+         "td_winner_intervals.csv"]
+
+    hdr, rows = _read_csv(paths[0])
+    assert hdr == bench_design_grid.PARETO_HEADER
+    assert 0 < len(rows) <= g.n_points
+    # frontier rows must be a subset of grid records
+    doms = {r[0] for r in rows}
+    assert doms <= set(g.domains)
+
+    hdr, rows = _read_csv(paths[1])
+    assert hdr == bench_design_grid.CROSSOVER_HEADER
+    assert len(rows) >= 1          # the paper's B=4 boundary exists
+    assert {r[0] for r in rows} <= {"e_mac", "throughput", "area_per_mac"}
+
+    hdr, rows = _read_csv(paths[2])
+    assert hdr == bench_design_grid.INTERVAL_HEADER
+    assert len(rows) >= 1
+    for r in rows:
+        assert int(r[5]) <= int(r[6])    # n_min <= n_max
+
+
+def test_noise_tolerance_artifacts(tmp_path):
+    sig = np.asarray([0.5, 1.0, 2.0])
+    curve = NoiseToleranceResult(sig, np.asarray([0.0, 0.005, 0.02]),
+                                 0.9, 1.5)
+    sites = ["stem", "head"]
+    per_layer = BatchedNoiseToleranceResult(
+        sig, np.asarray([[0.0, 0.01, 0.03], [0.0, 0.0, 0.02]]),
+        np.asarray([0.9, 0.9]), np.asarray([1.0, 1.8]), n_evals=14)
+    net = solve_network_policies(per_layer.sigma_max, bits_w=4, n_chain=64)
+    paths = bench_noise_tolerance.write_artifacts(
+        str(tmp_path), {"m": curve}, {"m": (sites, per_layer)},
+        {"m": (sites, [float(s) for s in per_layer.sigma_max], net)})
+
+    hdr, rows = _read_csv(paths[0])
+    assert hdr == ["model", "sigma", "rel_drop", "acc_clean", "sigma_max"]
+    assert len(rows) == len(sig)
+
+    hdr, rows = _read_csv(paths[1])
+    assert hdr == ["model", "layer_index", "site", "sigma_max", "acc_clean"]
+    assert [r[2] for r in rows] == sites
+
+    assert paths[2].endswith("per_layer_policies_m.json")
+    with open(paths[2]) as f:
+        doc = json.load(f)
+    layers = doc["layers"]
+    assert len(layers) == len(sites)
+    assert {"site", "sigma_max", "n_chain", "bits_w", "redundancy",
+            "tdc_q", "sigma_chain"} <= set(layers[0])
+
+    # the JSON artifact round-trips through the --td-per-layer parser:
+    # measured per-layer tolerance feeds straight back into launch CLIs
+    from repro.configs.base import TDExecCfg
+    from repro.launch import td_cli
+    tds = td_cli.parse_td_per_layer(f"@{paths[2]}", TDExecCfg(mode="td"), 2)
+    assert [t.sigma_max for t in tds] == [1.0, 1.8]
+    assert [t.n_chain for t in tds] == [64, 64]

@@ -1,0 +1,134 @@
+"""Golden-fixture parity for the design-space engine (ROADMAP's
+prerequisite for scalar-path retirement).
+
+`tests/fixtures/design_space_golden.json` pins the scalar
+`design_space.evaluate_*` outputs for the paper grids — the Fig. 9 exact
+regime and the Fig. 11/12 relaxed regime over (domain x N x B) — as checked
+in numbers.  Both the scalar golden path and the batched engine must match
+the fixture: the scalar path tightly (it generated the numbers), the
+batched path at the float32 parity tolerance with *exact* integer decisions
+(R, q) and winners.
+
+Regenerate (only when the hardware model itself intentionally changes):
+
+    PYTHONPATH=src python tests/test_design_space_golden.py
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import design_space as ds
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "design_space_golden.json")
+
+NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
+BITS = (1, 2, 4, 8)
+SIGMA_RELAXED = 2.0   # Fig. 11/12 regime (Fig. 10 back-annotation)
+FIELDS = ("e_mac", "throughput", "area_per_mac", "redundancy", "tdc_q")
+
+
+def _regimes():
+    return {"exact": ds.sigma_exact(), "relaxed": SIGMA_RELAXED}
+
+
+def _scalar_records():
+    recs = []
+    for regime, sigma in _regimes().items():
+        for b in BITS:
+            for n in NS:
+                pts = {d: ds.evaluate(d, n, b, sigma) for d in ds.DOMAINS}
+                for d, p in pts.items():
+                    recs.append({
+                        "regime": regime, "domain": d, "n": n, "bits": b,
+                        "sigma_max": float(sigma),
+                        "e_mac": p.e_mac, "throughput": p.throughput,
+                        "area_per_mac": p.area_per_mac,
+                        "redundancy": int(p.redundancy),
+                        "tdc_q": int(p.aux.get("tdc_lsb_q", 1)),
+                    })
+                recs.append({
+                    "regime": regime, "domain": "__winner__", "n": n,
+                    "bits": b, "sigma_max": float(sigma),
+                    "winner": min(pts, key=lambda d: pts[d].e_mac),
+                })
+    return recs
+
+
+def regenerate():
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump({"ns": list(NS), "bits": list(BITS),
+                   "sigma_relaxed": SIGMA_RELAXED,
+                   "records": _scalar_records()}, f, indent=1)
+    print(f"wrote {FIXTURE}")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        doc = json.load(f)
+    assert tuple(doc["ns"]) == NS and tuple(doc["bits"]) == BITS
+    points, winners = {}, {}
+    for r in doc["records"]:
+        k = (r["regime"], r["n"], r["bits"])
+        if r["domain"] == "__winner__":
+            winners[k] = r["winner"]
+        else:
+            points[(r["regime"], r["domain"], r["n"], r["bits"])] = r
+    return points, winners
+
+
+def test_fixture_checked_in():
+    assert os.path.exists(FIXTURE), \
+        "golden fixture missing; run this module as a script to generate"
+
+
+def test_scalar_path_matches_fixture(golden):
+    """The scalar reference reproduces its own pinned numbers (libm-level
+    tolerance only)."""
+    points, winners = golden
+    for regime, sigma in _regimes().items():
+        for b in BITS:
+            for n in NS:
+                pts = {d: ds.evaluate(d, n, b, sigma) for d in ds.DOMAINS}
+                for d, p in pts.items():
+                    ref = points[(regime, d, n, b)]
+                    assert int(p.redundancy) == ref["redundancy"], (d, n, b)
+                    assert int(p.aux.get("tdc_lsb_q", 1)) == ref["tdc_q"]
+                    for f in ("e_mac", "throughput", "area_per_mac"):
+                        np.testing.assert_allclose(
+                            getattr(p, f), ref[f], rtol=1e-6,
+                            err_msg=f"{regime}/{d}/n={n}/B={b}/{f}")
+                assert min(pts, key=lambda d: pts[d].e_mac) == \
+                    winners[(regime, n, b)], (regime, n, b)
+
+
+def test_batched_path_matches_fixture(golden):
+    """The batched engine matches the pinned scalar numbers: exact integer
+    decisions, f32-tolerance continuous fields, exact winners."""
+    points, winners = golden
+    for regime, sigma in _regimes().items():
+        g = ds.sweep_batched(ns=NS, bit_widths=BITS,
+                             sigma_maxes=None if regime == "exact"
+                             else sigma)
+        names = g.winner_names()
+        for bi, b in enumerate(BITS):
+            for ni, n in enumerate(NS):
+                for di, d in enumerate(g.domains):
+                    ref = points[(regime, d, n, b)]
+                    ix = (di, bi, ni, 0, 0)
+                    assert g.redundancy[ix] == ref["redundancy"], (d, n, b)
+                    assert g.tdc_q[ix] == ref["tdc_q"], (d, n, b)
+                    for f in ("e_mac", "throughput", "area_per_mac"):
+                        np.testing.assert_allclose(
+                            getattr(g, f)[ix], ref[f], rtol=1e-4,
+                            err_msg=f"{regime}/{d}/n={n}/B={b}/{f}")
+                assert names[bi, ni, 0, 0] == winners[(regime, n, b)], \
+                    (regime, n, b)
+
+
+if __name__ == "__main__":
+    regenerate()

@@ -1,0 +1,196 @@
+"""Heterogeneous per-layer TD execution policies, end to end.
+
+One `resolve_arch_policy` / `resolve_policies` call must solve a whole
+network of mixed (n_chain, sigma_max, bits_w) layers, exactly matching the
+per-layer scalar `solve_td_policy` results, and the resulting NetworkPolicy
+must drive a real model forward (dryrun-style smoke)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as cfgs
+from repro.configs.base import TDExecCfg
+from repro.launch import td_cli
+from repro.models import common, get_api
+from repro.tdsim import (NetworkPolicy, TDPolicy, pol_at, pol_top,
+                         solve_network_policies, solve_td_policy)
+
+MIXED = (TDExecCfg(mode="td", bits_w=4, n_chain=64, sigma_max=2.0),
+         TDExecCfg(mode="td", bits_w=8, n_chain=576, sigma_max=0.5))
+
+
+def _smoke_arch(td_per_layer=MIXED):
+    ac = cfgs.get_smoke("granite-8b")
+    assert ac.model.n_layers == len(td_per_layer)
+    return ac.replace(td=TDExecCfg(mode="quant"),
+                      td_per_layer=tuple(td_per_layer))
+
+
+def test_resolve_matches_scalar_solve_per_layer():
+    arch = _smoke_arch()
+    pol = common.resolve_arch_policy(arch)
+    assert isinstance(pol, NetworkPolicy)
+    assert len(pol) == arch.model.n_layers
+    for td, got in zip(MIXED, pol.layers):
+        want = solve_td_policy(td.bits_a, td.bits_w, td.n_chain,
+                               td.sigma_max)
+        assert got == want, (td, got, want)
+    assert pol_top(pol).mode == "quant"
+
+
+def test_solve_network_policies_matches_scalar():
+    sig = np.array([2.0, 1.0, 0.25, 0.5])
+    nc = np.array([576, 64, 1024, 128])
+    bw = np.array([4, 4, 8, 2])
+    net = solve_network_policies(sig, bits_w=bw, n_chain=nc)
+    for i in range(len(sig)):
+        want = solve_td_policy(4, int(bw[i]), int(nc[i]), float(sig[i]))
+        assert net.at(i) == want, i
+
+
+def test_homogeneous_flags():
+    het = common.resolve_arch_policy(_smoke_arch())
+    assert not het.homogeneous
+    hom = NetworkPolicy(layers=(TDPolicy(),) * 3)
+    assert hom.homogeneous
+    # trace-local policies (array sigma) are conservatively heterogeneous
+    traced = NetworkPolicy(layers=(TDPolicy().replace(
+        sigma_chain=jnp.asarray(1.0)),) * 2)
+    assert not traced.homogeneous
+
+
+def test_pol_at_plain_policy_passthrough():
+    p = TDPolicy(mode="quant")
+    assert pol_at(p, 3) is p
+    assert pol_top(p) is p
+
+
+def test_heterogeneous_forward_and_loss(key):
+    """The NetworkPolicy drives a whole smoke LM forward/loss."""
+    arch = _smoke_arch()
+    cfg = arch.model
+    pol = common.resolve_arch_policy(arch)
+    api = get_api(cfg)
+    params = api["init"](key, cfg, pol)
+    toks = jax.random.randint(key, (2, 16), 3, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    loss, metrics = api["train_loss"](params, batch, cfg, pol, key)
+    assert bool(jnp.isfinite(loss))
+    # per-layer policies really differ where configured
+    assert pol.at(0).n_chain != pol.at(1).n_chain
+    assert pol.at(0).bits_w != pol.at(1).bits_w
+
+
+def test_heterogeneous_matches_homogeneous_when_uniform(key):
+    """A NetworkPolicy of identical layers computes exactly what the single
+    TDPolicy computes (same solve, same forward)."""
+    ac = cfgs.get_smoke("granite-8b")
+    cfg = ac.model
+    td = TDExecCfg(mode="td", bits_w=4, n_chain=64, sigma_max=2.0)
+    single = common.resolve_policy(td)
+    net = common.resolve_arch_policy(
+        ac.replace(td=td, td_per_layer=(td,) * cfg.n_layers))
+    assert net.homogeneous and net.at(0) == single
+    api = get_api(cfg)
+    params = api["init"](key, cfg, single)
+    toks = jax.random.randint(key, (2, 8), 3, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    l_single, _ = api["train_loss"](params, batch, cfg, single, key)
+    l_net, _ = api["train_loss"](params, batch, cfg, net, key)
+    np.testing.assert_allclose(np.asarray(l_single), np.asarray(l_net),
+                               rtol=1e-6)
+
+
+def test_td_cli_inline_and_json(tmp_path):
+    base = TDExecCfg(mode="quant", n_chain=128)
+    tds = td_cli.parse_td_per_layer("0.5,exact", base, 2)
+    assert [t.sigma_max for t in tds] == [0.5, None]
+    assert all(t.mode == "td" and t.n_chain == 128 for t in tds)
+    # broadcast single sigma
+    tds = td_cli.parse_td_per_layer("2.0", base, 3)
+    assert len(tds) == 3 and all(t.sigma_max == 2.0 for t in tds)
+    # the bench artifact format
+    doc = {"layers": [{"sigma_max": 1.5, "n_chain": 64, "bits_w": 8},
+                      {"sigma_max": 0.25}]}
+    p = tmp_path / "per_layer_policies.json"
+    import json
+    p.write_text(json.dumps(doc))
+    tds = td_cli.parse_td_per_layer(f"@{p}", base, 2)
+    assert tds[0].n_chain == 64 and tds[0].bits_w == 8
+    assert tds[0].sigma_max == 1.5 and tds[1].sigma_max == 0.25
+    assert tds[1].n_chain == 128     # inherits base
+
+
+def test_td_cli_apply_to_arch():
+    arch = cfgs.get_smoke("granite-8b")
+    arch = td_cli.apply_td_args(arch, "quant", "1.0,2.0")
+    assert arch.td.mode == "quant"
+    assert arch.td_per_layer is not None
+    pol = common.resolve_arch_policy(arch)
+    assert isinstance(pol, NetworkPolicy)
+    assert pol.at(0).sigma_chain > 0.0
+
+
+def test_shared_attn_runs_under_top_policy(key):
+    """Weight-tied shared blocks are top-level matmuls: initialized AND
+    applied under pol_top, even when the surrounding layers are per-layer
+    TD (a precise top has no LSQ scales, so a per-layer dispatch into the
+    shared block would crash)."""
+    ac = cfgs.get_smoke("zamba2-1.2b")
+    cfg = ac.model
+    tds = tuple(TDExecCfg(mode="td", n_chain=min(64, cfg.d_model),
+                          sigma_max=2.0) for _ in range(cfg.n_layers))
+    arch = ac.replace(td=TDExecCfg(mode="precise"), td_per_layer=tds)
+    pol = common.resolve_arch_policy(arch)
+    assert pol_top(pol).mode == "precise"
+    api = get_api(cfg)
+    params = api["init"](key, cfg, pol)
+    batch = {"tokens": jax.random.randint(key, (2, 8), 3, cfg.vocab)}
+    batch["labels"] = batch["tokens"]
+    loss, _ = api["train_loss"](params, batch, cfg, pol, key)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_heterogeneous_with_scan_layers_cfg(key):
+    """scan_layers + heterogeneous NetworkPolicy: caches and layers must
+    both take the unrolled path (prefill + decode roundtrip)."""
+    ac = cfgs.get_smoke("granite-8b")
+    cfg = dataclasses.replace(ac.model, scan_layers=True)
+    arch = ac.replace(model=cfg, td=TDExecCfg(mode="quant"),
+                      td_per_layer=MIXED)
+    pol = common.resolve_arch_policy(arch)
+    api = get_api(cfg)
+    params = api["init"](key, cfg, pol)
+    batch = {"tokens": jax.random.randint(key, (2, 8), 3, cfg.vocab)}
+    logits, state = api["prefill"](params, batch, cfg, pol, s_cache=12)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    logits2, state = api["decode_step"](params, tok, state, cfg, pol)
+    assert logits2.shape[-1] == cfg.vocab
+
+
+def test_resnet_per_site_length_checked(key):
+    from repro.configs.resnet20_cifar import smoke as resnet_smoke
+    from repro.models import resnet
+    cfg = resnet_smoke()
+    params = resnet.init_params(key, cfg, TDPolicy(mode="quant"))
+    imgs, _ = resnet.make_synthetic_cifar(key, 4, cfg)
+    pols = [TDPolicy(mode="quant")] * len(resnet.noise_sites(cfg))
+    resnet.forward(params, imgs, cfg, pols)          # right length: fine
+    try:
+        resnet.forward(params, imgs, cfg, pols[:-1])
+        raise AssertionError("expected ValueError for short policy list")
+    except ValueError:
+        pass
+
+
+def test_non_decoder_rejected():
+    ac = cfgs.get_smoke("granite-8b")
+    enc_model = dataclasses.replace(ac.model, family="encdec")
+    arch = ac.replace(model=enc_model, td_per_layer=MIXED)
+    try:
+        common.resolve_arch_policy(arch)
+        raise AssertionError("expected ValueError for encdec per-layer")
+    except ValueError:
+        pass
