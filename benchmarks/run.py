@@ -11,8 +11,8 @@ import traceback
 from benchmarks import (bench_arch_energy, bench_design_grid,
                         bench_energy_exact, bench_energy_relaxed,
                         bench_eta_esnr, bench_noise_tolerance,
-                        bench_output_range, bench_roofline, bench_tdc,
-                        bench_tdmac_cell, bench_throughput_area)
+                        bench_output_range, bench_roofline, bench_scenarios,
+                        bench_tdc, bench_tdmac_cell, bench_throughput_area)
 
 SUITES = {
     "fig3c": bench_eta_esnr,
@@ -24,6 +24,7 @@ SUITES = {
     "fig11": bench_energy_relaxed,
     "fig12": bench_throughput_area,
     "grid": bench_design_grid,
+    "scenarios": bench_scenarios,
     "roofline": bench_roofline,
     "arch_energy": bench_arch_energy,
 }

@@ -1,16 +1,24 @@
 """Design-space explorer CLI over the batched engine.
 
-Evaluates an arbitrary (N x B x sigma x Vdd) grid for all three domains as
-one jitted call and emits a winner map (table), CSV or JSON, plus the
-domain-crossover boundaries the paper's Figs. 9/11 read off qualitatively.
+Evaluates an arbitrary (N x B x sigma x Vdd x activity x sparsity) grid for
+all three domains as one jitted call and emits a winner map (table), CSV or
+JSON, plus the domain-crossover boundaries the paper's Figs. 9/11 read off
+qualitatively.  Named scenarios and technology corners come from the
+scenario engine (`repro.core.scenario`), and `--minimize-vdd` folds the
+supply axis into a per-point argmin (the retired `td_vdd_optimized` loop as
+a grid reduction).
 
     PYTHONPATH=src python examples/hw_design_explorer.py
     PYTHONPATH=src python examples/hw_design_explorer.py \
         --grid n=16..4096:24 bits=1,2,4,8 vdd=0.4..0.8:9 sigma=2.0 \
         --format csv --out grid.csv
+    PYTHONPATH=src python examples/hw_design_explorer.py \
+        --scenario edge --corner ss --minimize-vdd
 
 Grid axis syntax: `key=v1,v2,...` (explicit list) or `key=lo..hi[:count]`
-(range; geometric with integer rounding for n, linear otherwise).
+(range; geometric with integer rounding for n, linear otherwise).  Axes:
+n, bits, sigma, vdd, px (activation activity p_x_one), wsp (weight bit
+sparsity).
 """
 import argparse
 import csv
@@ -19,7 +27,9 @@ import sys
 
 import numpy as np
 
+from repro.core import constants as C
 from repro.core import design_space as ds
+from repro.core import scenario as sc
 
 DEFAULT_NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
 DEFAULT_BITS = (1, 2, 4, 8)
@@ -52,28 +62,39 @@ def _parse_axis(key: str, spec: str):
 
 def parse_grid(tokens) -> dict:
     axes = {"n": DEFAULT_NS, "bits": DEFAULT_BITS, "sigma": None,
-            "vdd": (0.80,)}
+            "vdd": (0.80,), "px": (C.P_X_ONE,), "wsp": (C.W_BIT_SPARSITY,)}
     for tok in tokens or ():
         key, eq, spec = tok.partition("=")
         if not eq or key not in axes:
             raise SystemExit(f"bad --grid token {tok!r} "
-                             f"(want n=|bits=|sigma=|vdd=)")
+                             f"(want n=|bits=|sigma=|vdd=|px=|wsp=)")
         axes[key] = _parse_axis(key, spec)
     return axes
+
+
+def _vdd_label(g, vi: int) -> str:
+    v = g.vdds[vi]
+    return "opt" if np.isnan(v) else f"{v:.2f}"
 
 
 def print_winner_map(g, metric: str) -> None:
     tag = {"td": "T", "analog": "A", "digital": "D"}
     w = g.winner_names(metric)
     for si, s in enumerate(g.sigma_maxes):
-        for vi, v in enumerate(g.vdds):
-            print(f"winner map, metric={metric}, sigma_max={s:.3f}, "
-                  f"vdd={v:.2f} (T=time-domain A=analog D=digital)")
-            print("        " + " ".join(f"B={b}" for b in g.bit_widths))
-            for ni, n in enumerate(g.ns):
-                row = "".join(f"  {tag[w[bi, ni, si, vi]]} "
-                              for bi in range(len(g.bit_widths)))
-                print(f"N={n:5d}" + row)
+        for vi in range(len(g.vdds)):
+            for ai, a in enumerate(g.p_x_ones):
+                for wi, ws in enumerate(g.w_bit_sparsities):
+                    print(f"winner map, metric={metric}, sigma_max={s:.3f}, "
+                          f"vdd={_vdd_label(g, vi)}, p_x_one={a:.2f}, "
+                          f"w_sparsity={ws:.2f} "
+                          f"(T=time-domain A=analog D=digital)")
+                    print("        " + " ".join(f"B={b}"
+                                                for b in g.bit_widths))
+                    for ni, n in enumerate(g.ns):
+                        row = "".join(
+                            f"  {tag[w[bi, ni, si, vi, ai, wi]]} "
+                            for bi in range(len(g.bit_widths)))
+                        print(f"N={n:5d}" + row)
 
 
 def print_detail(g) -> None:
@@ -81,23 +102,33 @@ def print_detail(g) -> None:
         return
     ni = list(g.ns).index(576)
     print("\nper-point detail at the paper baseline N=576 "
-          f"(sigma={g.sigma_maxes[0]:.3f}, vdd={g.vdds[0]:.2f}):")
+          f"(sigma={g.sigma_maxes[0]:.3f}, vdd={_vdd_label(g, 0)}):")
     for bi, b in enumerate(g.bit_widths):
         for di, d in enumerate(g.domains):
-            ix = (di, bi, ni, 0, 0)
+            ix = (di, bi, ni, 0, 0, 0, 0)
             print(f"  B={b} {d:8s} {g.e_mac[ix]*1e15:9.2f} fJ/MAC  "
                   f"R={g.redundancy[ix]:4d}  thr={g.throughput[ix]:.2e}  "
-                  f"area={g.area_per_mac[ix]*1e12:.2f} um^2")
+                  f"area={g.area_per_mac[ix]*1e12:.2f} um^2  "
+                  f"vdd={g.point_vdd(ix):.2f}")
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--grid", nargs="*", metavar="AXIS=SPEC",
-                    help="axes: n=, bits=, sigma=, vdd= "
+                    help="axes: n=, bits=, sigma=, vdd=, px=, wsp= "
                          "(list `a,b,c` or range `lo..hi[:count]`)")
     ap.add_argument("--sigma", type=float, default=None,
                     help="shorthand for a single error budget in output LSB "
                          "(default: exact regime)")
+    ap.add_argument("--scenario", default=None,
+                    help="named scenario from repro.core.scenario.SCENARIOS "
+                         "(overrides --grid axes)")
+    ap.add_argument("--corner", default=None,
+                    help=f"technology corner ({'/'.join(sc.CORNERS)}; "
+                         "default tt)")
+    ap.add_argument("--minimize-vdd", action="store_true",
+                    help="reduce the Vdd axis to each point's "
+                         "energy-minimizing supply (grid argmin)")
     ap.add_argument("--metric", default="e_mac",
                     choices=["e_mac", "throughput", "area_per_mac"])
     ap.add_argument("--format", default="table",
@@ -108,12 +139,20 @@ def main():
                     help="also print domain-crossover boundaries")
     args = ap.parse_args()
 
-    axes = parse_grid(args.grid)
-    sigma = axes["sigma"]
-    if sigma is None:
-        sigma = (args.sigma,) if args.sigma is not None else None
-    g = ds.sweep_batched(ns=axes["n"], bit_widths=axes["bits"],
-                         sigma_maxes=sigma, vdds=axes["vdd"])
+    minimize = ("vdd",) if args.minimize_vdd else ()
+    if args.scenario:
+        g = sc.sweep_scenario(args.scenario, args.corner,
+                              minimize_over=minimize)
+    else:
+        axes = parse_grid(args.grid)
+        sigma = axes["sigma"]
+        if sigma is None:
+            sigma = (args.sigma,) if args.sigma is not None else None
+        corner = sc.get_corner(args.corner)
+        spec = sc.Scenario("cli", ns=axes["n"], bit_widths=axes["bits"],
+                           sigma_maxes=sigma, vdds=axes["vdd"],
+                           p_x_ones=axes["px"], w_bit_sparsities=axes["wsp"])
+        g = sc.sweep_scenario(spec, corner, minimize_over=minimize)
 
     if args.format == "table":
         print_winner_map(g, args.metric)

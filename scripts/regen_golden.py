@@ -1,0 +1,32 @@
+"""Deliberately re-pin the design-space golden fixture.
+
+The scalar per-point solvers are retired; `design_space.evaluate_*` are
+size-1 wrappers over the batched engine, and
+`tests/fixtures/design_space_golden.json` is the lock that keeps the engine
+honest against the original float64 scalar numbers.  Re-pinning the fixture
+is therefore a *modelling decision* (the hardware model itself changed),
+never a way to make a red test green — hence this dedicated entry point:
+
+    PYTHONPATH=src python scripts/regen_golden.py
+
+Review the diff of the fixture before committing it.
+"""
+import importlib.util
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    spec = importlib.util.spec_from_file_location(
+        "test_design_space_golden",
+        os.path.join(REPO, "tests", "test_design_space_golden.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.regenerate()
+
+
+if __name__ == "__main__":
+    main()

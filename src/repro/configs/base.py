@@ -149,6 +149,12 @@ class ArchConfig:
     # None = the single `td` config applies everywhere.  `td` still drives
     # the shared top-level matmuls (adapter / lm_head).
     td_per_layer: tuple[TDExecCfg, ...] | None = None
+    # named design scenario / technology corner the TD policies resolve for
+    # (core.scenario registries): the corner derates error budgets and
+    # shifts the supply grid, and each "td"-mode matmul's Vdd is picked by
+    # the scenario grid argmin.  None = nominal supply, TT corner.
+    scenario: str | None = None
+    corner: str | None = None
     # per-shape microbatch override: {shape_name: n_microbatches}
     microbatch_by_shape: dict | None = None
 

@@ -8,12 +8,14 @@ chain            chain error statistics (Eq. 2-6) + redundancy solver
 tdc              SAR + hybrid TDC (Eq. 8-10), L_osc optimizer
 analog           charge-domain model (Eq. 11-13)
 digital          adder-tree reference
-design_space     the Figs. 9/11/12 comparison engine (scalar golden path)
+design_space     the Figs. 9/11/12 comparison engine (size-1 grid wrappers)
 design_grid      batched sweep engine: DesignGrid, Pareto, crossovers
+scenario         named scenario / technology-corner sweeps over the grid
 noise_tolerance  Fig. 10 sigma_array_max search
 """
 from repro.core import (analog, cells, chain, constants, design_grid,
-                        design_space, digital, noise_tolerance, tdc)
+                        design_space, digital, noise_tolerance, scenario,
+                        tdc)
 
 __all__ = ["analog", "cells", "chain", "constants", "design_grid",
-           "design_space", "digital", "noise_tolerance", "tdc"]
+           "design_space", "digital", "noise_tolerance", "scenario", "tdc"]

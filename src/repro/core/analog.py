@@ -91,12 +91,18 @@ def cap_energy_per_mac(bits: int, redundancy,
 
 def analog_energy_per_mac(n, bits: int, sigma_max,
                           m=C.M_DEFAULT, vdd=C.VDD_NOM,
-                          clip_range: bool = True) -> dict:
-    """Eq. 11 with the R/ENOB co-solution for a given error budget."""
+                          clip_range: bool = True,
+                          p_x_one=C.P_X_ONE,
+                          w_bit_sparsity=C.W_BIT_SPARSITY) -> dict:
+    """Eq. 11 with the R/ENOB co-solution for a given error budget.
+
+    `p_x_one`/`w_bit_sparsity` set the cap-switching activity (defaults are
+    the paper's Section IV statistics); like every other entry they accept
+    scalars or broadcastable arrays."""
     r = solve_analog_redundancy(n, bits, sigma_max)
     steps = tdc.effective_range_steps(n, bits, clip_range)
     enob = enob_for_sigma(steps, sigma_max)
-    e_cap = cap_energy_per_mac(bits, r, vdd)
+    e_cap = cap_energy_per_mac(bits, r, vdd, p_x_one, w_bit_sparsity)
     e_adc = adc_energy(enob)
     e_mac = e_cap + C.E_PASS_LOGIC + e_adc / n
     return {"e_mac": e_mac, "e_cap": e_cap, "e_adc": e_adc,

@@ -1,31 +1,38 @@
 """Batched three-domain design-space engine (vectorized Figs. 9, 11, 12).
 
-`sweep_batched` evaluates the full (domain x N x B x sigma_max x Vdd) grid as
-one jitted JAX computation and returns a structure-of-arrays `DesignGrid`.
-The scalar `design_space.evaluate_*` functions remain the per-point golden
-reference; this module reproduces them point-for-point (same closed-form
-R solver, same TDC/q co-optimization) with every per-point python loop
-replaced by a batched axis:
+`sweep_batched` evaluates the full (domain x N x B x sigma_max x Vdd x
+p_x_one x w_bit_sparsity) grid as one jitted JAX computation and returns a
+structure-of-arrays `DesignGrid`.  This is the ONLY evaluation path: the
+scalar `design_space.evaluate_*` functions are size-1 wrappers over the
+elementwise entries below (the per-point python solvers were retired once
+the golden fixture pinned their numbers).  Every per-point loop is a
+batched axis:
 
   * the q (TDC LSB coarsening) candidate loop      -> a leading q axis + argmin
   * the integer R refinement loop                  -> closed form + monotone
                                                       correction (core.chain)
   * the L_osc refinement loop                      -> dyadic-block candidate
                                                       argmin (core.tdc)
-  * the (N, B, sigma, Vdd) grid loops              -> flattened point axis
+  * the (N, sigma, Vdd, activity, sparsity) grid   -> flattened point axis
+  * the Vdd optimization loop (td_vdd_optimized)   -> `minimize_over_vdd`
+                                                      grid reduction (argmin
+                                                      along the Vdd axis)
 
 B (the weight bit width) sets table shapes and therefore stays a static,
-trace-time axis: one jit call traces all requested bit widths.
+trace-time axis: one jit call traces all requested bit widths.  The input
+statistics p_x_one (activation activity) and w_bit_sparsity (weight bit
+sparsity) are *traced point arrays* like N/sigma/Vdd — scenario sweeps vary
+them densely without recompiling.
 
 Downstream queries -- Pareto frontiers and the paper's "TD wins for
 small-to-medium N" domain-crossover boundaries -- are first-class results
-computed from the grid arrays.
+computed from the grid arrays.  `core.scenario` builds named scenario /
+technology-corner sweeps on top of this module.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import json
 from typing import Iterable, Sequence
 
 import jax
@@ -40,20 +47,26 @@ DOMAINS: tuple[str, ...] = ("td", "analog", "digital")
 _FIELDS = ("e_mac", "throughput", "area_per_mac", "redundancy", "tdc_q",
            "l_osc", "sigma_chain", "latency")
 
+# grid axis order of every DesignGrid field array
+_AXES = ("domain", "bits", "n", "sigma", "vdd", "p_x_one", "w_bit_sparsity")
+
 
 # ---------------------------------------------------------------------------
 # Per-domain batched evaluators over a flat point axis (bits static)
 # ---------------------------------------------------------------------------
-def _eval_td_b(n, sigma, vdd, *, bits, m, q_max, clip_range, tdc_arch,
-               p_x_one, w_bit_sparsity) -> dict:
+def _eval_td_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits, m, q_max,
+               clip_range, tdc_arch) -> dict:
     """TD evaluation of flat (P,) point arrays with the (R, q) co-solution.
 
-    Mirrors design_space.evaluate_td: every q in [1, q_max] is evaluated on a
-    leading axis, infeasible ones masked to +inf, argmin picks the winner
-    (first occurrence == smallest q, like the scalar scan's strict <)."""
+    Every q in [1, q_max] is evaluated on a leading axis, infeasible ones
+    masked to +inf, argmin picks the winner (first occurrence == smallest q,
+    like the retired scalar scan's strict <).  All five point inputs --
+    n, sigma, vdd, p_x_one, w_bit_sparsity -- are traced (P,) arrays."""
     n = jnp.asarray(n, jnp.float32)
     sigma = jnp.asarray(sigma, jnp.float32)
     vdd = jnp.asarray(vdd, jnp.float32)
+    p1 = jnp.asarray(p_x_one, jnp.float32)
+    wsp = jnp.asarray(w_bit_sparsity, jnp.float32)
     sig2 = sigma ** 2
     qq = jnp.arange(1, q_max + 1, dtype=jnp.float32)        # (Q,)
     quant_var = (qq ** 2 - 1.0) / 12.0
@@ -63,11 +76,11 @@ def _eval_td_b(n, sigma, vdd, *, bits, m, q_max, clip_range, tdc_arch,
     sigma_chain = jnp.sqrt(jnp.maximum(sig2[None, :] - quant_var[:, None],
                                        1e-12))
     r = chain.solve_redundancy(n[None, :], bits, sigma_chain, vdd[None, :],
-                               p_x_one=p_x_one,
-                               w_bit_sparsity=w_bit_sparsity)
+                               p_x_one=p1[None, :],
+                               w_bit_sparsity=wsp[None, :])
     rf = r.astype(jnp.float32)
     e_cell = cells.cell_energy_per_mac(bits, rf, vdd[None, :],
-                                       p_x_one, w_bit_sparsity)
+                                       p1[None, :], wsp[None, :])
     steps = tdc.effective_range_steps(n, bits, clip_range)  # (P,)
     units = steps[None, :] * rf / qq[:, None]
     if tdc_arch == "hybrid":
@@ -92,15 +105,22 @@ def _eval_td_b(n, sigma, vdd, *, bits, m, q_max, clip_range, tdc_arch,
     def take(arr):
         return jnp.take_along_axis(arr, qi[None, :], axis=0)[0]
 
+    # e_cell/e_tdc ride along for the scalar wrappers' aux decomposition
+    # (Eq. 7 check); _sweep_jit keeps only _FIELDS.
     return {"e_mac": take(e_mac), "throughput": take(throughput),
             "area_per_mac": take(area), "redundancy": take(rf),
             "tdc_q": qq[qi], "l_osc": take(l_osc),
-            "sigma_chain": take(sigma_chain), "latency": take(latency)}
+            "sigma_chain": take(sigma_chain), "latency": take(latency),
+            "e_cell": take(jnp.broadcast_to(e_cell, e_mac.shape)),
+            "e_tdc": take(jnp.broadcast_to(e_tdc, e_mac.shape))}
 
 
-def _eval_analog_b(n, sigma, vdd, *, bits, m, clip_range) -> dict:
+def _eval_analog_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits, m,
+                   clip_range) -> dict:
     n = jnp.asarray(n, jnp.float32)
-    res = analog.analog_energy_per_mac(n, bits, sigma, m, vdd, clip_range)
+    res = analog.analog_energy_per_mac(n, bits, sigma, m, vdd, clip_range,
+                                       p_x_one=p_x_one,
+                                       w_bit_sparsity=w_bit_sparsity)
     thr = analog.analog_throughput(n, bits, sigma, m, clip_range)
     area = analog.analog_area(n, bits, sigma, m, clip_range)
     rate = analog.adc_rate(res["enob"])
@@ -109,13 +129,17 @@ def _eval_analog_b(n, sigma, vdd, *, bits, m, clip_range) -> dict:
             "area_per_mac": area * one,
             "redundancy": res["r"].astype(jnp.float32) * one,
             "tdc_q": one, "l_osc": 0.0 * one, "sigma_chain": 0.0 * one,
-            "latency": 1.0 / rate * one}
+            "latency": 1.0 / rate * one,
+            "enob": res["enob"] * one, "e_adc": res["e_adc"] * one,
+            "e_cap": res["e_cap"] * one}
 
 
-def _eval_digital_b(n, sigma, vdd, *, bits, m) -> dict:
+def _eval_digital_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits,
+                    m) -> dict:
     n = jnp.asarray(n, jnp.float32)
     vdd = jnp.asarray(vdd, jnp.float32)
-    e = digital.digital_energy_per_mac(n, bits, vdd)
+    e = digital.digital_energy_per_mac(n, bits, vdd, p_x_one=p_x_one,
+                                       w_bit_sparsity=w_bit_sparsity)
     thr = digital.digital_throughput(n, bits, m)
     area = digital.digital_area(n, bits)
     one = jnp.ones_like(n)
@@ -125,78 +149,106 @@ def _eval_digital_b(n, sigma, vdd, *, bits, m) -> dict:
             "latency": (1.0 / C.F_DIG) * one}
 
 
+def _eval_domain_b(domain: str, n, sigma, vdd, p1, wsp, *, bits, m, q_max,
+                   clip_range, tdc_arch) -> dict:
+    if domain == "td":
+        return _eval_td_b(n, sigma, vdd, p1, wsp, bits=bits, m=m,
+                          q_max=q_max, clip_range=clip_range,
+                          tdc_arch=tdc_arch)
+    if domain == "analog":
+        return _eval_analog_b(n, sigma, vdd, p1, wsp, bits=bits, m=m,
+                              clip_range=clip_range)
+    if domain == "digital":
+        return _eval_digital_b(n, sigma, vdd, p1, wsp, bits=bits, m=m)
+    raise ValueError(f"unknown domain {domain!r}")
+
+
 @functools.partial(
     jax.jit, static_argnames=("domains", "bit_widths", "m", "q_max",
-                              "clip_range", "tdc_arch", "p_x_one",
-                              "w_bit_sparsity"))
-def _sweep_jit(n, sigma, vdd, *, domains, bit_widths, m, q_max, clip_range,
-               tdc_arch, p_x_one, w_bit_sparsity) -> dict:
+                              "clip_range", "tdc_arch"))
+def _sweep_jit(n, sigma, vdd, p1, wsp, *, domains, bit_widths, m, q_max,
+               clip_range, tdc_arch) -> dict:
     """One traced computation for the whole grid: flat (P,) point arrays in,
     dict of (D, NB, P) field arrays out.  bit_widths/domains unroll at trace
-    time (table shapes depend on B)."""
+    time (table shapes depend on B); the five point axes are traced."""
     per_domain = []
     for d in domains:
-        per_b = []
-        for b in bit_widths:
-            if d == "td":
-                out = _eval_td_b(n, sigma, vdd, bits=b, m=m, q_max=q_max,
-                                 clip_range=clip_range, tdc_arch=tdc_arch,
-                                 p_x_one=p_x_one,
-                                 w_bit_sparsity=w_bit_sparsity)
-            elif d == "analog":
-                out = _eval_analog_b(n, sigma, vdd, bits=b, m=m,
-                                     clip_range=clip_range)
-            elif d == "digital":
-                out = _eval_digital_b(n, sigma, vdd, bits=b, m=m)
-            else:
-                raise ValueError(f"unknown domain {d!r}")
-            per_b.append(out)
+        per_b = [_eval_domain_b(d, n, sigma, vdd, p1, wsp, bits=b, m=m,
+                                q_max=q_max, clip_range=clip_range,
+                                tdc_arch=tdc_arch)
+                 for b in bit_widths]
         per_domain.append({f: jnp.stack([pb[f] for pb in per_b])
                            for f in _FIELDS})
     return {f: jnp.stack([pd[f] for pd in per_domain]) for f in _FIELDS}
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bits", "m", "q_max", "clip_range", "tdc_arch",
-                              "p_x_one", "w_bit_sparsity"))
-def _eval_td_jit(n, sigma, vdd, *, bits, m, q_max, clip_range, tdc_arch,
-                 p_x_one, w_bit_sparsity) -> dict:
-    out = _eval_td_b(n, sigma, vdd, bits=bits, m=m, q_max=q_max,
-                     clip_range=clip_range, tdc_arch=tdc_arch,
-                     p_x_one=p_x_one, w_bit_sparsity=w_bit_sparsity)
-    out["sigma_chain_achieved"] = chain.chain_sigma(
-        n, bits, out["redundancy"], vdd, p_x_one, w_bit_sparsity)
+    jax.jit, static_argnames=("domain", "bits", "m", "q_max", "clip_range",
+                              "tdc_arch"))
+def _eval_points_jit(n, sigma, vdd, p1, wsp, *, domain, bits, m, q_max,
+                     clip_range, tdc_arch) -> dict:
+    out = _eval_domain_b(domain, n, sigma, vdd, p1, wsp, bits=bits, m=m,
+                         q_max=q_max, clip_range=clip_range,
+                         tdc_arch=tdc_arch)
+    if domain == "td":
+        out["sigma_chain_achieved"] = chain.chain_sigma(
+            n, bits, out["redundancy"], vdd, p1, wsp)
     return out
+
+
+def _q_ceiling(sigma_max: np.ndarray, relax_tdc: bool) -> int:
+    """Static q-axis ceiling from the largest budget; the per-point
+    feasibility mask inside the jit reproduces the retired scalar candidate
+    enumeration exactly."""
+    if not relax_tdc:
+        return 1
+    return int(np.floor(np.sqrt(12.0 * 0.999 * float(np.max(sigma_max)) ** 2
+                                + 1.0))) + 1
+
+
+def evaluate_points(domain: str, n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
+                    m: int = C.M_DEFAULT, clip_range: bool = True,
+                    tdc_arch: str = "hybrid", relax_tdc: bool = True,
+                    p_x_one=C.P_X_ONE,
+                    w_bit_sparsity=C.W_BIT_SPARSITY) -> dict:
+    """Elementwise evaluation of same-length point arrays (no grid product)
+    for one domain: one jitted call solving every point.  All of
+    (n, sigma_max, vdd, p_x_one, w_bit_sparsity) broadcast together.
+    Returns a dict of numpy arrays keyed like _FIELDS plus domain extras
+    (td: e_cell/e_tdc/sigma_chain_achieved; analog: enob/e_adc/e_cap)."""
+    n_a, s_a, v_a, p_a, w_a = np.broadcast_arrays(
+        np.asarray(n, np.float64), np.asarray(sigma_max, np.float64),
+        np.asarray(vdd, np.float64), np.asarray(p_x_one, np.float64),
+        np.asarray(w_bit_sparsity, np.float64))
+    # q_max only shapes the TD q axis; pin it for the other domains so
+    # varying sigma ceilings do not key fresh analog/digital compiles
+    q_max = _q_ceiling(s_a, relax_tdc) if domain == "td" else 1
+    out = _eval_points_jit(jnp.asarray(n_a.ravel(), jnp.float32),
+                           jnp.asarray(s_a.ravel(), jnp.float32),
+                           jnp.asarray(v_a.ravel(), jnp.float32),
+                           jnp.asarray(p_a.ravel(), jnp.float32),
+                           jnp.asarray(w_a.ravel(), jnp.float32),
+                           domain=str(domain), bits=int(bits), m=int(m),
+                           q_max=q_max, clip_range=bool(clip_range),
+                           tdc_arch=str(tdc_arch))
+    return {k: np.asarray(v, np.float64).reshape(n_a.shape)
+            for k, v in out.items()}
 
 
 def evaluate_td_batched(n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
                         m: int = C.M_DEFAULT, clip_range: bool = True,
                         tdc_arch: str = "hybrid", relax_tdc: bool = True,
-                        p_x_one: float = C.P_X_ONE,
-                        w_bit_sparsity: float = C.W_BIT_SPARSITY) -> dict:
-    """Elementwise TD evaluation of same-length point arrays (no grid
-    product): one jitted call solving (R, q) for every point.  This is the
-    batch entry used by tdsim.policy to solve all layers of a network at
-    once.  Returns a dict of numpy arrays keyed like _FIELDS plus
-    `sigma_chain_achieved` (= sqrt(N var_cell(R)), the noise the simulator
-    must inject)."""
-    n_a, s_a, v_a = np.broadcast_arrays(
-        np.asarray(n, np.float64), np.asarray(sigma_max, np.float64),
-        np.asarray(vdd, np.float64))
-    if relax_tdc:
-        q_max = int(np.floor(np.sqrt(12.0 * 0.999 * s_a.max() ** 2
-                                     + 1.0))) + 1
-    else:
-        q_max = 1
-    out = _eval_td_jit(jnp.asarray(n_a.ravel(), jnp.float32),
-                       jnp.asarray(s_a.ravel(), jnp.float32),
-                       jnp.asarray(v_a.ravel(), jnp.float32),
-                       bits=int(bits), m=int(m), q_max=q_max,
-                       clip_range=bool(clip_range), tdc_arch=str(tdc_arch),
-                       p_x_one=float(p_x_one),
-                       w_bit_sparsity=float(w_bit_sparsity))
-    return {k: np.asarray(v, np.float64).reshape(n_a.shape)
-            for k, v in out.items()}
+                        p_x_one=C.P_X_ONE,
+                        w_bit_sparsity=C.W_BIT_SPARSITY) -> dict:
+    """TD evaluation of same-length point arrays: one jitted call solving
+    (R, q) for every point.  This is the batch entry used by tdsim.policy to
+    solve all layers of a network at once.  Returns a dict of numpy arrays
+    keyed like _FIELDS plus `sigma_chain_achieved` (= sqrt(N var_cell(R)),
+    the noise the simulator must inject) and the e_cell/e_tdc split."""
+    return evaluate_points("td", n, sigma_max, vdd, bits=bits, m=m,
+                           clip_range=clip_range, tdc_arch=tdc_arch,
+                           relax_tdc=relax_tdc, p_x_one=p_x_one,
+                           w_bit_sparsity=w_bit_sparsity)
 
 
 # ---------------------------------------------------------------------------
@@ -204,16 +256,21 @@ def evaluate_td_batched(n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class DesignGrid:
-    """Dense (domain x B x N x sigma x Vdd) design grid, SoA layout.
+    """Dense (domain x B x N x sigma x Vdd x p_x_one x w_bit_sparsity)
+    design grid, SoA layout.
 
-    Field arrays have shape (D, NB, Nn, Ns, Nv) and float64-safe numpy
-    dtypes; `redundancy` and `tdc_q` are integral-valued.
+    Field arrays have shape (D, NB, Nn, Ns, Nv, Na, Nw) and float64-safe
+    numpy dtypes; `redundancy` and `tdc_q` are integral-valued.  A grid
+    produced by `minimize_over_vdd` has a length-1 Vdd axis with
+    `vdds == [nan]` and the per-point winning supply in `vdd_opt`.
     """
     domains: tuple[str, ...]
     ns: np.ndarray
     bit_widths: np.ndarray
     sigma_maxes: np.ndarray
     vdds: np.ndarray
+    p_x_ones: np.ndarray
+    w_bit_sparsities: np.ndarray
     m: int
     e_mac: np.ndarray
     throughput: np.ndarray
@@ -223,6 +280,8 @@ class DesignGrid:
     l_osc: np.ndarray
     sigma_chain: np.ndarray
     latency: np.ndarray
+    # per-point optimal supply after a minimize_over_vdd reduction
+    vdd_opt: np.ndarray | None = None
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -236,7 +295,7 @@ class DesignGrid:
         return self.domains.index(domain)
 
     def winners(self, metric: str = "e_mac") -> np.ndarray:
-        """(NB, Nn, Ns, Nv) int array of the winning domain index."""
+        """(NB, Nn, Ns, Nv, Na, Nw) int array of the winning domain index."""
         arr = getattr(self, metric)
         return (np.argmax(arr, axis=0) if metric == "throughput"
                 else np.argmin(arr, axis=0))
@@ -244,28 +303,64 @@ class DesignGrid:
     def winner_names(self, metric: str = "e_mac") -> np.ndarray:
         return np.asarray(self.domains)[self.winners(metric)]
 
-    def records(self) -> Iterable[dict]:
-        """Flat per-point dict rows (CSV/JSON friendly)."""
-        for di, d in enumerate(self.domains):
-            for bi, b in enumerate(self.bit_widths):
-                for ni, n in enumerate(self.ns):
-                    for si, s in enumerate(self.sigma_maxes):
-                        for vi, v in enumerate(self.vdds):
-                            ix = (di, bi, ni, si, vi)
-                            yield {
-                                "domain": d, "n": int(n), "bits": int(b),
-                                "sigma_max": float(s), "vdd": float(v),
-                                "m": self.m,
-                                "e_mac": float(self.e_mac[ix]),
-                                "throughput": float(self.throughput[ix]),
-                                "area_per_mac": float(self.area_per_mac[ix]),
-                                "redundancy": int(self.redundancy[ix]),
-                                "tdc_q": int(self.tdc_q[ix]),
-                                "latency": float(self.latency[ix]),
-                            }
+    def point_vdd(self, ix: tuple) -> float:
+        """Supply voltage of one grid point (honours vdd_opt reductions)."""
+        if self.vdd_opt is not None:
+            return float(self.vdd_opt[ix])
+        return float(self.vdds[ix[4]])
 
-    def to_json(self) -> str:
-        return json.dumps(list(self.records()))
+    def records(self) -> Iterable[dict]:
+        """Flat per-point dict rows (CSV/JSON friendly), row-major over
+        (domain, bits, n, sigma, vdd, p_x_one, w_bit_sparsity)."""
+        for ix in np.ndindex(*self.shape):
+            di, bi, ni, si, vi, ai, wi = ix
+            yield {
+                "domain": self.domains[di], "n": int(self.ns[ni]),
+                "bits": int(self.bit_widths[bi]),
+                "sigma_max": float(self.sigma_maxes[si]),
+                "vdd": self.point_vdd(ix),
+                "p_x_one": float(self.p_x_ones[ai]),
+                "w_bit_sparsity": float(self.w_bit_sparsities[wi]),
+                "m": self.m,
+                "e_mac": float(self.e_mac[ix]),
+                "throughput": float(self.throughput[ix]),
+                "area_per_mac": float(self.area_per_mac[ix]),
+                "redundancy": int(self.redundancy[ix]),
+                "tdc_q": int(self.tdc_q[ix]),
+                "latency": float(self.latency[ix]),
+            }
+
+    def save_npz(self, path: str) -> str:
+        """Persist the full grid (axes + SoA fields) as one compressed .npz
+        -- the practical format at 10^5+ points (to_json was retired with
+        the scalar path)."""
+        payload = {
+            "domains": np.asarray(self.domains),
+            "ns": self.ns, "bit_widths": self.bit_widths,
+            "sigma_maxes": self.sigma_maxes, "vdds": self.vdds,
+            "p_x_ones": self.p_x_ones,
+            "w_bit_sparsities": self.w_bit_sparsities,
+            "m": np.asarray(self.m),
+        }
+        for f in _FIELDS:
+            payload[f] = getattr(self, f)
+        if self.vdd_opt is not None:
+            payload["vdd_opt"] = self.vdd_opt
+        np.savez_compressed(path, **payload)
+        return path
+
+    @classmethod
+    def load_npz(cls, path: str) -> "DesignGrid":
+        with np.load(path, allow_pickle=False) as z:
+            fields = {f: z[f] for f in _FIELDS}
+            return cls(domains=tuple(str(d) for d in z["domains"]),
+                       ns=z["ns"], bit_widths=z["bit_widths"],
+                       sigma_maxes=z["sigma_maxes"], vdds=z["vdds"],
+                       p_x_ones=z["p_x_ones"],
+                       w_bit_sparsities=z["w_bit_sparsities"],
+                       m=int(z["m"]),
+                       vdd_opt=z["vdd_opt"] if "vdd_opt" in z else None,
+                       **fields)
 
 
 def sweep_batched(domains: Sequence[str] = DOMAINS,
@@ -274,60 +369,109 @@ def sweep_batched(domains: Sequence[str] = DOMAINS,
                   bit_widths: Sequence[int] = (1, 2, 4, 8),
                   sigma_maxes: Sequence[float] | float | None = None,
                   vdds: Sequence[float] | float = C.VDD_NOM,
+                  p_x_ones: Sequence[float] | float = C.P_X_ONE,
+                  w_bit_sparsities: Sequence[float] | float
+                  = C.W_BIT_SPARSITY,
                   m: int = C.M_DEFAULT,
                   clip_range: bool = True,
                   tdc_arch: str = "hybrid",
-                  relax_tdc: bool = True,
-                  p_x_one: float = C.P_X_ONE,
-                  w_bit_sparsity: float = C.W_BIT_SPARSITY) -> DesignGrid:
-    """Evaluate the full (domain x N x B x sigma x Vdd) grid in one jitted
-    call.  sigma_maxes=None means the exact regime of Fig. 9."""
+                  relax_tdc: bool = True) -> DesignGrid:
+    """Evaluate the full (domain x N x B x sigma x Vdd x p_x_one x
+    w_bit_sparsity) grid in one jitted call.  sigma_maxes=None means the
+    exact regime of Fig. 9."""
     if sigma_maxes is None:
         sigma_maxes = chain.sigma_max_exact()
     sig = np.atleast_1d(np.asarray(sigma_maxes, np.float64))
     vdd = np.atleast_1d(np.asarray(vdds, np.float64))
+    p1 = np.atleast_1d(np.asarray(p_x_ones, np.float64))
+    wsp = np.atleast_1d(np.asarray(w_bit_sparsities, np.float64))
     ns_a = np.atleast_1d(np.asarray(ns, np.int64))
-    # static q ceiling from the largest budget; the per-point feasibility
-    # mask inside the jit reproduces the scalar candidate enumeration
-    if relax_tdc:
-        q_max = int(np.floor(np.sqrt(12.0 * 0.999 * sig.max() ** 2
-                                     + 1.0))) + 1
-    else:
-        q_max = 1
-    n_g, s_g, v_g = np.meshgrid(ns_a, sig, vdd, indexing="ij")
-    out = _sweep_jit(jnp.asarray(n_g.ravel(), jnp.float32),
-                     jnp.asarray(s_g.ravel(), jnp.float32),
-                     jnp.asarray(v_g.ravel(), jnp.float32),
+    grids = np.meshgrid(ns_a, sig, vdd, p1, wsp, indexing="ij")
+    out = _sweep_jit(*(jnp.asarray(g.ravel(), jnp.float32) for g in grids),
                      domains=tuple(domains), bit_widths=tuple(bit_widths),
-                     m=int(m), q_max=q_max, clip_range=bool(clip_range),
-                     tdc_arch=str(tdc_arch), p_x_one=float(p_x_one),
-                     w_bit_sparsity=float(w_bit_sparsity))
-    full = (len(domains), len(bit_widths), len(ns_a), len(sig), len(vdd))
+                     m=int(m), q_max=_q_ceiling(sig, relax_tdc),
+                     clip_range=bool(clip_range), tdc_arch=str(tdc_arch))
+    full = (len(domains), len(bit_widths), len(ns_a), len(sig), len(vdd),
+            len(p1), len(wsp))
     fields = {f: np.asarray(out[f], np.float64).reshape(full)
               for f in _FIELDS}
     fields["redundancy"] = np.rint(fields["redundancy"]).astype(np.int64)
     fields["tdc_q"] = np.rint(fields["tdc_q"]).astype(np.int64)
     return DesignGrid(domains=tuple(domains), ns=ns_a,
                       bit_widths=np.asarray(bit_widths, np.int64),
-                      sigma_maxes=sig, vdds=vdd, m=int(m), **fields)
+                      sigma_maxes=sig, vdds=vdd, p_x_ones=p1,
+                      w_bit_sparsities=wsp, m=int(m), **fields)
+
+
+# ---------------------------------------------------------------------------
+# Grid reductions: Vdd as a minimized-over axis
+# ---------------------------------------------------------------------------
+_VDD_AXIS = _AXES.index("vdd")
+
+
+def minimize_over_vdd(grid: DesignGrid, metric: str = "e_mac") -> DesignGrid:
+    """Reduce the Vdd axis to each domain-point's optimal supply (argmin of
+    `metric`; argmax for throughput), recording the winning Vdd per point in
+    `vdd_opt`.  First occurrence wins ties, exactly like the retired
+    `td_vdd_optimized` python loop's strict <.  Returns a grid with a
+    length-1 Vdd axis (`vdds == [nan]`: the supply is per-point now)."""
+    arr = getattr(grid, metric)
+    pick = np.argmax if metric == "throughput" else np.argmin
+    idx = pick(arr, axis=_VDD_AXIS)                   # (D, NB, Nn, Ns, Na, Nw)
+    idx_e = np.expand_dims(idx, _VDD_AXIS)
+    fields = {f: np.take_along_axis(getattr(grid, f), idx_e, axis=_VDD_AXIS)
+              for f in _FIELDS}
+    vdd_opt = grid.vdds[idx_e]
+    if grid.vdd_opt is not None:                      # already reduced: keep
+        vdd_opt = np.take_along_axis(grid.vdd_opt, idx_e, axis=_VDD_AXIS)
+    return dataclasses.replace(grid, vdds=np.asarray([np.nan]),
+                               vdd_opt=vdd_opt, **fields)
 
 
 # ---------------------------------------------------------------------------
 # Queries: Pareto frontier and domain-crossover boundaries
 # ---------------------------------------------------------------------------
-def pareto_mask(costs: np.ndarray, chunk: int = 1024) -> np.ndarray:
+def pareto_mask(costs: np.ndarray, chunk: int = 256) -> np.ndarray:
     """Boolean mask of non-dominated rows of `costs` (P, K), lower-better.
 
     A point is dominated if another point is <= on every objective and
-    strictly < on at least one."""
+    strictly < on at least one.  Exact at any size via the lexicographically
+    sorted archive sweep: a dominator is <= everywhere and < somewhere, so
+    its first differing objective is strictly smaller and it sorts
+    *strictly before* the dominated point in lexicographic row order (pure
+    comparisons -- no float summation that could round ties away).  A point
+    can therefore only be dominated by points before it, and (dominance
+    being transitive) checking against the non-dominated archive plus the
+    point's own block suffices.  O(P * (F + chunk)) with F the frontier
+    size, instead of the naive O(P^2).  The result is independent of
+    `chunk` (property-tested, including the P % chunk == 0 +- 1
+    boundaries)."""
     costs = np.asarray(costs, np.float64)
-    p = costs.shape[0]
-    keep = np.ones(p, bool)
+    p, k = costs.shape
+    if p == 0:
+        return np.zeros(0, bool)
+    # lexsort keys: last key is primary -> reverse so column 0 leads
+    order = np.lexsort(costs.T[::-1])
+    sc = costs[order]                                      # (P, K), lex asc
+    keep_sorted = np.empty(p, bool)
+    archive = np.empty((0, k), np.float64)
     for lo in range(0, p, chunk):
-        blk = costs[lo:lo + chunk]                         # (c, K)
-        le = (costs[:, None, :] <= blk[None, :, :]).all(-1)   # (P, c)
-        lt = (costs[:, None, :] < blk[None, :, :]).any(-1)
-        keep[lo:lo + chunk] = ~(le & lt).any(0)
+        blk = sc[lo:lo + chunk]                            # (b, K)
+        # vs the non-dominated archive (all sort lex-before this block, so
+        # they are the only candidates that can dominate it)
+        le = (archive[None, :, :] <= blk[:, None, :]).all(-1)   # (b, F)
+        lt = (archive[None, :, :] < blk[:, None, :]).any(-1)
+        alive = ~(le & lt).any(-1)
+        # intra-block pairwise (self never dominates self: no strict <);
+        # a block dominator that is itself dominated is covered by
+        # transitivity through the archive
+        le = (blk[None, :, :] <= blk[:, None, :]).all(-1)       # (b, b)
+        lt = (blk[None, :, :] < blk[:, None, :]).any(-1)
+        alive &= ~(le & lt).any(-1)
+        keep_sorted[lo:lo + chunk] = alive
+        archive = np.concatenate([archive, blk[alive]])
+    keep = np.empty(p, bool)
+    keep[order] = keep_sorted
     return keep
 
 
@@ -344,50 +488,56 @@ def pareto_frontier(grid: DesignGrid,
     return pareto_mask(np.stack(cols, axis=-1)).reshape(grid.shape)
 
 
+def _point_keys(grid: DesignGrid, bi, si, vi, ai, wi) -> dict:
+    return {
+        "bits": int(grid.bit_widths[bi]),
+        "sigma_max": float(grid.sigma_maxes[si]),
+        "vdd": float(grid.vdds[vi]),
+        "p_x_one": float(grid.p_x_ones[ai]),
+        "w_bit_sparsity": float(grid.w_bit_sparsities[wi]),
+    }
+
+
 def domain_crossovers(grid: DesignGrid,
                       metric: str = "e_mac") -> list[dict]:
     """Where the winning domain flips along the N axis -- the paper's
     "TD wins for small-to-medium N" boundary as a queryable result.
 
-    One record per (bits, sigma, vdd, consecutive-N pair) with a change."""
-    w = grid.winners(metric)                     # (NB, Nn, Ns, Nv)
-    flips = w[:, 1:] != w[:, :-1]                # (NB, Nn-1, Ns, Nv)
+    One record per (bits, sigma, vdd, activity, sparsity, consecutive-N
+    pair) with a change."""
+    w = grid.winners(metric)                     # (NB, Nn, Ns, Nv, Na, Nw)
+    flips = w[:, 1:] != w[:, :-1]                # (NB, Nn-1, Ns, Nv, Na, Nw)
     out = []
-    for bi, ni, si, vi in np.argwhere(flips):
-        out.append({
-            "metric": metric,
-            "bits": int(grid.bit_widths[bi]),
-            "sigma_max": float(grid.sigma_maxes[si]),
-            "vdd": float(grid.vdds[vi]),
+    for bi, ni, si, vi, ai, wi in np.argwhere(flips):
+        rec = {"metric": metric}
+        rec.update(_point_keys(grid, bi, si, vi, ai, wi))
+        rec.update({
             "n_low": int(grid.ns[ni]),
             "n_high": int(grid.ns[ni + 1]),
-            "domain_low": grid.domains[w[bi, ni, si, vi]],
-            "domain_high": grid.domains[w[bi, ni + 1, si, vi]],
+            "domain_low": grid.domains[w[bi, ni, si, vi, ai, wi]],
+            "domain_high": grid.domains[w[bi, ni + 1, si, vi, ai, wi]],
         })
+        out.append(rec)
     return out
 
 
 def winner_intervals(grid: DesignGrid, domain: str = "td",
                      metric: str = "e_mac") -> list[dict]:
-    """Per (bits, sigma, vdd): the [n_min, n_max] span where `domain` wins
-    (empty span -> record omitted).  Spans need not be contiguous; this
-    reports the hull plus the win count."""
+    """Per (bits, sigma, vdd, activity, sparsity): the [n_min, n_max] span
+    where `domain` wins (empty span -> record omitted).  Spans need not be
+    contiguous; this reports the hull plus the win count."""
     di = grid.domain_index(domain)
-    w = grid.winners(metric) == di               # (NB, Nn, Ns, Nv)
+    w = grid.winners(metric) == di               # (NB, Nn, Ns, Nv, Na, Nw)
     out = []
-    for bi in range(w.shape[0]):
-        for si in range(w.shape[2]):
-            for vi in range(w.shape[3]):
-                hits = np.flatnonzero(w[bi, :, si, vi])
-                if hits.size == 0:
-                    continue
-                out.append({
-                    "domain": domain, "metric": metric,
-                    "bits": int(grid.bit_widths[bi]),
-                    "sigma_max": float(grid.sigma_maxes[si]),
-                    "vdd": float(grid.vdds[vi]),
-                    "n_min": int(grid.ns[hits[0]]),
+    nb, _, ns_, nv, na, nw = w.shape
+    for bi, si, vi, ai, wi in np.ndindex(nb, ns_, nv, na, nw):
+        hits = np.flatnonzero(w[bi, :, si, vi, ai, wi])
+        if hits.size == 0:
+            continue
+        rec = {"domain": domain, "metric": metric}
+        rec.update(_point_keys(grid, bi, si, vi, ai, wi))
+        rec.update({"n_min": int(grid.ns[hits[0]]),
                     "n_max": int(grid.ns[hits[-1]]),
-                    "wins": int(hits.size),
-                })
+                    "wins": int(hits.size)})
+        out.append(rec)
     return out

@@ -12,25 +12,30 @@ The *exact* regime is sigma_max = ERR_EXACT_MAX / SIGMA_CONFIDENCE (Fig. 9),
 the *relaxed* regime uses sigma_array_max from noise-tolerance analysis of a
 quantized network (Fig. 10 -> Fig. 11).
 
-The scalar evaluators in this module are the per-point golden reference.
-Dense grids should use the batched engine (`sweep_batched`, re-exported from
-repro.core.design_grid): the full (domain x N x B x sigma x Vdd) product
-evaluates as one jitted JAX computation and returns a structure-of-arrays
-`DesignGrid` with Pareto-frontier and domain-crossover queries.
+The batched engine (`repro.core.design_grid`) is the ONLY evaluation path.
+The scalar-looking `evaluate_*` entry points below are size-1 wrappers over
+its elementwise jitted evaluators: they exist for ergonomic per-point
+queries and return the familiar `DesignPoint`, but run exactly the batched
+math (the duplicated per-point python solvers were retired after
+`tests/fixtures/design_space_golden.json` pinned their numbers -- the
+fixture remains the lock, see tests/test_design_space_golden.py and
+scripts/regen_golden.py).  `td_vdd_optimized` is a thin argmin query over a
+Vdd grid axis (`design_grid.minimize_over_vdd`), not a python loop.  Dense
+and scenario/corner sweeps go through `sweep_batched` and
+`repro.core.scenario.sweep_scenarios`.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Literal
 
-import numpy as np
-
-from repro.core import analog, cells, chain, digital, tdc
+from repro.core import chain
 from repro.core import constants as C
 from repro.core.design_grid import (DesignGrid, domain_crossovers,
+                                    evaluate_points, minimize_over_vdd,
                                     pareto_frontier, pareto_mask,
                                     sweep_batched, winner_intervals)
+from repro.core.scenario import PAPER_VDD_GRID
 
 Domain = Literal["td", "analog", "digital"]
 DOMAINS: tuple[Domain, ...] = ("td", "analog", "digital")
@@ -38,8 +43,8 @@ DOMAINS: tuple[Domain, ...] = ("td", "analog", "digital")
 __all__ = ["DesignPoint", "DesignGrid", "DOMAINS", "evaluate", "evaluate_td",
            "evaluate_analog", "evaluate_digital", "sweep", "sweep_batched",
            "best_domain", "td_vdd_optimized", "sigma_exact",
-           "tdc_coarsening_candidates", "pareto_frontier", "pareto_mask",
-           "domain_crossovers", "winner_intervals"]
+           "pareto_frontier", "pareto_mask", "domain_crossovers",
+           "winner_intervals", "minimize_over_vdd"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,91 +61,46 @@ class DesignPoint:
     aux: dict
 
 
-def tdc_coarsening_candidates(sigma_max: float) -> list[tuple[int, float]]:
-    """TD analogue of the ADC ENOB relaxation (paper Section IV applies it to
-    the analog ADC; the same error-budget argument applies to the TDC).
-
-    Counting in units of q delay steps adds ~(q^2 - 1)/12 quantization
-    variance and divides the TDC range (and thus counter/oscillator energy)
-    by q.  Returns the feasible (q, remaining_chain_sigma) pairs; the caller
-    jointly optimizes q against the redundancy R it forces.  In the exact
-    regime (sigma_max = 1/6) only q = 1 is feasible (no-op).
-    """
-    out = []
-    q = 1
-    while (q * q - 1) / 12.0 < sigma_max * sigma_max * 0.999:
-        sigma_chain = math.sqrt(max(sigma_max ** 2 - (q * q - 1) / 12.0, 1e-12))
-        out.append((q, sigma_chain))
-        q += 1
-    return out or [(1, sigma_max)]
+def _point(domain: str, res: dict, n: int, bits: int, m: int,
+           sigma_max: float, aux: dict) -> DesignPoint:
+    return DesignPoint(domain, n, bits, m, sigma_max,
+                       float(res["e_mac"]), float(res["throughput"]),
+                       float(res["area_per_mac"]),
+                       int(round(float(res["redundancy"]))), aux)
 
 
 def evaluate_td(n: int, bits: int, sigma_max: float, m: int = C.M_DEFAULT,
                 vdd: float = C.VDD_NOM, clip_range: bool = True,
-                tdc_arch: str = "hybrid", relax_tdc: bool = True) -> DesignPoint:
-    cands = (tdc_coarsening_candidates(sigma_max) if relax_tdc
-             else [(1, sigma_max)])
-    best = None
-    for q, sigma_chain in cands:
-        p = _evaluate_td_at(n, bits, sigma_max, sigma_chain, q, m, vdd,
-                            clip_range, tdc_arch)
-        if best is None or p.e_mac < best.e_mac:
-            best = p
-    return best
-
-
-def _evaluate_td_at(n: int, bits: int, sigma_max: float, sigma_chain: float,
-                    q: int, m: int, vdd: float, clip_range: bool,
-                    tdc_arch: str) -> DesignPoint:
-    r = chain.solve_redundancy(n, bits, sigma_chain, vdd)
-    e_cell = float(cells.cell_energy_per_mac(bits, r, vdd))
-    # TDC sees the range in coarse LSBs of q delay steps each
-    steps = tdc.effective_range_steps(n, bits, clip_range)
-    units = steps * r / q
-    if tdc_arch == "hybrid":
-        l_osc = tdc.optimal_l_osc(units, m, vdd)
-        e_tdc = tdc.hybrid_tdc_energy(units, l_osc, m, vdd)
-        t_tdc = tdc.hybrid_tdc_latency(units, l_osc, vdd)
-        a_tdc = tdc.hybrid_tdc_area(units, max(1, l_osc), m)
-    else:
-        l_osc = 0
-        b_tdc = tdc.range_bits(steps / q)
-        e_tdc = tdc.sar_tdc_energy(b_tdc, m, vdd)
-        t_tdc = tdc.sar_tdc_latency(b_tdc, vdd)
-        a_tdc = tdc.sar_tdc_area(b_tdc)
-    e_mac = e_cell + e_tdc / n                                   # Eq. 7
-    # latency: the edge traverses the chain (value in unit delays + bypass
-    # transit) then converts; M chains run in parallel.
-    tau = float(cells.delay_at_vdd(np.asarray(C.TAU_UNIT), np.asarray(vdd)))
-    t_chain = (steps * r + n * bits) * tau
-    throughput = n * m / (t_chain + t_tdc)
-    a_cell = float(cells.tdmac_area(bits, r))
-    area = a_cell + a_tdc / n
-    return DesignPoint("td", n, bits, m, sigma_max, e_mac, throughput, area,
-                       r, {"e_cell": e_cell, "e_tdc": e_tdc, "l_osc": l_osc,
-                           "latency": t_chain + t_tdc, "tdc_lsb_q": q,
-                           "sigma_chain_budget": sigma_chain})
+                tdc_arch: str = "hybrid", relax_tdc: bool = True
+                ) -> DesignPoint:
+    """Size-1 wrapper over the batched TD evaluator: the (R, q) co-solution
+    of Eq. 5-7 for one point."""
+    res = evaluate_points("td", n, sigma_max, vdd, bits=bits, m=m,
+                          clip_range=clip_range, tdc_arch=tdc_arch,
+                          relax_tdc=relax_tdc)
+    aux = {"e_cell": float(res["e_cell"]), "e_tdc": float(res["e_tdc"]),
+           "l_osc": int(round(float(res["l_osc"]))),
+           "latency": float(res["latency"]), "vdd": float(vdd),
+           "tdc_lsb_q": int(round(float(res["tdc_q"]))),
+           "sigma_chain_budget": float(res["sigma_chain"])}
+    return _point("td", res, n, bits, m, sigma_max, aux)
 
 
 def evaluate_analog(n: int, bits: int, sigma_max: float,
                     m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM,
                     clip_range: bool = True) -> DesignPoint:
-    res = analog.analog_energy_per_mac(n, bits, sigma_max, m, vdd, clip_range)
-    thr = analog.analog_throughput(n, bits, sigma_max, m, clip_range)
-    area = analog.analog_area(n, bits, sigma_max, m, clip_range)
-    return DesignPoint("analog", n, bits, m, sigma_max, res["e_mac"], thr,
-                       area, res["r"], {"enob": res["enob"],
-                                        "e_adc": res["e_adc"],
-                                        "e_cap": res["e_cap"]})
+    res = evaluate_points("analog", n, sigma_max, vdd, bits=bits, m=m,
+                          clip_range=clip_range)
+    aux = {"enob": float(res["enob"]), "e_adc": float(res["e_adc"]),
+           "e_cap": float(res["e_cap"])}
+    return _point("analog", res, n, bits, m, sigma_max, aux)
 
 
 def evaluate_digital(n: int, bits: int, sigma_max: float = 0.0,
                      m: int = C.M_DEFAULT,
                      vdd: float = C.VDD_NOM) -> DesignPoint:
-    e = digital.digital_energy_per_mac(n, bits, vdd)
-    thr = digital.digital_throughput(n, bits, m)
-    area = digital.digital_area(n, bits)
-    return DesignPoint("digital", n, bits, m, sigma_max, e, thr, area, 1, {})
+    res = evaluate_points("digital", n, sigma_max, vdd, bits=bits, m=m)
+    return _point("digital", res, n, bits, m, sigma_max, {})
 
 
 _EVAL = {"td": evaluate_td, "analog": evaluate_analog,
@@ -163,15 +123,27 @@ def sweep(domains=DOMAINS,
           ns=(16, 32, 64, 128, 256, 576, 1024, 2048, 4096),
           bit_widths=(1, 2, 4, 8),
           sigma_max: float | None = None,
-          m: int = C.M_DEFAULT, **kw) -> list[DesignPoint]:
-    """Full (domain x N x B) grid at a single error budget.
+          m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM,
+          **kw) -> list[DesignPoint]:
+    """Full (domain x N x B) grid at a single error budget, as a flat list
+    of DesignPoints (one sweep_batched call underneath).
     sigma_max=None means the exact regime of Fig. 9."""
     s = sigma_exact() if sigma_max is None else sigma_max
+    g = sweep_batched(domains=domains, ns=ns, bit_widths=bit_widths,
+                      sigma_maxes=s, vdds=vdd, m=m, **kw)
     out = []
-    for d in domains:
-        for n in ns:
-            for b in bit_widths:
-                out.append(evaluate(d, n, b, s, m, **kw))
+    for di, d in enumerate(g.domains):
+        for ni in range(len(g.ns)):
+            for bi in range(len(g.bit_widths)):
+                ix = (di, bi, ni, 0, 0, 0, 0)
+                res = {f: getattr(g, f)[ix]
+                       for f in ("e_mac", "throughput", "area_per_mac",
+                                 "redundancy")}
+                aux = {"tdc_lsb_q": int(g.tdc_q[ix]),
+                       "l_osc": int(round(float(g.l_osc[ix]))),
+                       "latency": float(g.latency[ix])}
+                out.append(_point(d, res, int(g.ns[ni]),
+                                  int(g.bit_widths[bi]), g.m, s, aux))
     return out
 
 
@@ -187,18 +159,16 @@ def best_domain(n: int, bits: int, sigma_max: float,
 
 def td_vdd_optimized(n: int, bits: int, sigma_max: float,
                      m: int = C.M_DEFAULT,
-                     vdd_grid=(0.80, 0.72, 0.65, 0.58, 0.52, 0.46, 0.40)
-                     ) -> DesignPoint:
+                     vdd_grid=PAPER_VDD_GRID) -> DesignPoint:
     """Beyond-paper knob: jointly pick (Vdd, R) for minimum TD energy.
 
     The paper notes TD's easy voltage scaling (design at nominal, scale down
     for error-tolerant workloads) but Fig. 11 relaxes only R.  Scaling Vdd
     degrades eta_ESNR, so R must grow; the optimum trades R * E_cell(V)
-    against V^2.
-    """
-    best = None
-    for v in vdd_grid:
-        p = evaluate_td(n, bits, sigma_max, m, vdd=v)
-        if best is None or p.e_mac < best.e_mac:
-            best = p
-    return best
+    against V^2.  Implemented as a grid argmin: Vdd is a minimized-over
+    axis of the batched grid (`minimize_over_vdd`), not a python loop."""
+    g = sweep_batched(domains=("td",), ns=(n,), bit_widths=(bits,),
+                      sigma_maxes=sigma_max, vdds=vdd_grid, m=m)
+    red = minimize_over_vdd(g)
+    v_star = float(red.vdd_opt[0, 0, 0, 0, 0, 0, 0])
+    return evaluate_td(n, bits, sigma_max, m, vdd=v_star)

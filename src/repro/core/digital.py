@@ -44,11 +44,22 @@ def _adder_bits_per_mac(n, bits: int):
     return bits * (1.0 - inv) + 2.0 - (depth + 2.0) * inv
 
 
-def digital_energy_per_mac(n, bits: int, vdd=C.VDD_NOM):
-    """Per-MAC energy of the single-cycle N-long 1xB VMM array."""
+def digital_energy_per_mac(n, bits: int, vdd=C.VDD_NOM,
+                           p_x_one=C.P_X_ONE,
+                           w_bit_sparsity=C.W_BIT_SPARSITY):
+    """Per-MAC energy of the single-cycle N-long 1xB VMM array.
+
+    ALPHA_SW_DIGITAL was synthesized at the paper's Section IV input
+    statistics (p_x_one = 0.5, 70 % weight-bit sparsity); other statistics
+    rescale the switching activity proportionally to the active-bit
+    probability p_x_one * (1 - w_bit_sparsity), so the defaults reproduce
+    the constant exactly."""
+    act = p_x_one * (1.0 - w_bit_sparsity)
+    act_base = C.P_X_ONE * (1.0 - C.W_BIT_SPARSITY)
+    alpha_sw = C.ALPHA_SW_DIGITAL * act / act_base
     scale = (vdd / C.VDD_NOM) ** 2
-    e_adder = _adder_bits_per_mac(n, bits) * C.E_FA_BIT * C.ALPHA_SW_DIGITAL
-    e_and = bits * 0.35e-15 * C.ALPHA_SW_DIGITAL          # AND gating stage
+    e_adder = _adder_bits_per_mac(n, bits) * C.E_FA_BIT * alpha_sw
+    e_and = bits * 0.35e-15 * alpha_sw                    # AND gating stage
     if _is_scalar(n):
         log2n = math.log2(max(2.0, n))
     else:

@@ -122,12 +122,41 @@ def probe_vectors(sigmas: Sequence[float], n_layers: int,
     return vecs
 
 
+def _run_probes(eval_fn, flat_v: jax.Array, flat_k: jax.Array,
+                chunk_size: int | None) -> jax.Array:
+    """Evaluate all (probe, key) pairs: one flat vmap, or -- with
+    `chunk_size` -- a lax.map over equal-size vmapped chunks so only
+    chunk_size evals are live at once."""
+    t = flat_v.shape[0]
+    if chunk_size is None or chunk_size >= t:
+        return jax.jit(jax.vmap(eval_fn))(flat_v, flat_k)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    pad = (-t) % chunk_size
+    if pad:
+        flat_v = jnp.concatenate(
+            [flat_v, jnp.broadcast_to(flat_v[:1], (pad,) + flat_v.shape[1:])])
+        flat_k = jnp.concatenate(
+            [flat_k, jnp.broadcast_to(flat_k[:1], (pad,) + flat_k.shape[1:])])
+    n_chunks = (t + pad) // chunk_size
+    cv = flat_v.reshape((n_chunks, chunk_size) + flat_v.shape[1:])
+    ck = flat_k.reshape((n_chunks, chunk_size) + flat_k.shape[1:])
+
+    @jax.jit
+    def run(cv, ck):
+        return jax.lax.map(lambda c: jax.vmap(eval_fn)(c[0], c[1]), (cv, ck))
+
+    return run(cv, ck).reshape(-1)[:t]
+
+
 def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
                            sigmas: Sequence[float],
                            key: jax.Array,
                            n_layers: int,
                            rel_drop_max: float = 0.01,
-                           n_repeats: int = 3) -> BatchedNoiseToleranceResult:
+                           n_repeats: int = 3,
+                           chunk_size: int | None = None
+                           ) -> BatchedNoiseToleranceResult:
     """Per-layer sigma_array_max for all layers in ONE vmapped+jitted call.
 
     eval_fn(sigma_vec, key) -> scalar accuracy must be jax-traceable, where
@@ -141,6 +170,12 @@ def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
     split(fold_in(key, l), S*R + 1), eval (i, r) uses keys[i*R + r] and the
     clean eval uses keys[-1] -- so a scalar `find_sigma_max` run of layer l
     with key fold_in(key, l) sees identical (sigma, key) pairs.
+
+    `chunk_size` bounds live memory for large (transformer-scale) evals:
+    the flat probe axis is processed `chunk_size` probes at a time via
+    `lax.map` over equal chunks (the tail is padded with repeats of the
+    first probe and discarded), each chunk vmapped -- still one jitted
+    device program, results bit-identical to the unchunked call.
     """
     sig = np.asarray(list(sigmas), np.float64)
     s, l, r = len(sig), int(n_layers), int(n_repeats)
@@ -150,7 +185,7 @@ def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
                                              per) for li in range(l)])
     flat_v = jnp.asarray(vecs.reshape(l * per, l), jnp.float32)
     flat_k = layer_keys.reshape((l * per,) + layer_keys.shape[2:])
-    accs = jax.jit(jax.vmap(eval_fn))(flat_v, flat_k)
+    accs = _run_probes(eval_fn, flat_v, flat_k, chunk_size)
     accs = np.asarray(accs, np.float64).reshape(l, per)
     acc_clean = accs[:, -1]
     acc = accs[:, : s * r].reshape(l, s, r).mean(axis=-1)

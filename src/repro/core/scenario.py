@@ -1,0 +1,233 @@
+"""Scenario engine: named (Vdd x sigma x activity x sparsity) sweeps with
+technology-corner presets on top of the batched design grid.
+
+The paper's central claim -- TD wins for small-to-medium arrays under
+error-tolerant workloads -- is a statement about *scenarios*: array size,
+precision, noise budget, supply voltage and input activity/sparsity.
+Related TD-VMM work (Bavandpour et al., arXiv:1711.10673; Mahmoodi et al.,
+arXiv:1905.09454) shows the winning design shifts with supply, activity and
+cell technology.  This module makes those axes first-class:
+
+  * `Scenario`   -- a frozen (hashable: valid config field / jit constant)
+                    spec of the grid axes to sweep,
+  * `Corner`     -- a technology-corner preset applied as an effective
+                    supply shift plus an error-budget derate (this container
+                    has no SPICE corners; see core.constants for the
+                    synthesized-but-anchored modelling policy),
+  * `sweep_scenarios` -- the whole scenario, every corner, each corner's
+                    full (domain x N x B x sigma x Vdd x p_x_one x
+                    w_bit_sparsity) product as ONE jitted call, optionally
+                    reduced over the Vdd axis (`minimize_over=("vdd",)`) so
+                    per-point supply optimization is a grid argmin, not a
+                    python loop,
+  * `optimal_td_vdds` -- the per-layer supply query tdsim.policy uses to
+                    resolve network policies for a named scenario/corner.
+
+Registries `SCENARIOS` / `CORNERS` back the `--scenario` / `--corner` CLI
+flags of the launchers and the design explorer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import chain, design_grid
+
+__all__ = ["Corner", "Scenario", "CORNERS", "SCENARIOS", "get_corner",
+           "get_scenario", "sweep_scenario", "sweep_scenarios",
+           "optimal_td_vdds", "PAPER_VDD_GRID"]
+
+# The beyond-paper Vdd-optimization grid (kept identical to the retired
+# td_vdd_optimized python loop so the grid argmin reproduces it exactly;
+# order matters: first minimum wins ties like the loop's strict <).
+PAPER_VDD_GRID = (0.80, 0.72, 0.65, 0.58, 0.52, 0.46, 0.40)
+
+
+# ---------------------------------------------------------------------------
+# Technology corners
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Corner:
+    """Process-corner preset, modelled on the scenario axes.
+
+    A slow (SS) corner raises the effective threshold -- at a given supply
+    the delay cells see less overdrive (modelled as a negative supply
+    shift) and systematic variation eats part of the error budget (sigma
+    derate < 1).  Fast (FF) is the mirror image.  TT is the identity: a TT
+    sweep is bit-identical to a plain `sweep_batched` over the same axes.
+    """
+    name: str
+    vdd_shift: float = 0.0      # V, added to every grid supply
+    sigma_derate: float = 1.0   # multiplies the error budget
+
+    def apply_vdds(self, vdds: Sequence[float]) -> tuple[float, ...]:
+        """Shifted supplies, floored at VDD_MIN (the lowest modelled
+        supply: below it the alpha-power mismatch model diverges)."""
+        return tuple(float(max(v + self.vdd_shift, C.VDD_MIN))
+                     for v in np.atleast_1d(np.asarray(vdds, np.float64)))
+
+    def apply_sigmas(self, sigma_maxes) -> tuple[float, ...] | None:
+        if sigma_maxes is None:
+            if self.sigma_derate == 1.0:
+                return None
+            sigma_maxes = (chain.sigma_max_exact(),)
+        return tuple(float(s * self.sigma_derate)
+                     for s in np.atleast_1d(np.asarray(sigma_maxes,
+                                                       np.float64)))
+
+
+CORNERS: dict[str, Corner] = {
+    "tt": Corner("tt"),
+    "ff": Corner("ff", vdd_shift=+0.04, sigma_derate=1.00),
+    "ss": Corner("ss", vdd_shift=-0.04, sigma_derate=0.90),
+}
+
+
+def get_corner(corner: str | Corner | None) -> Corner:
+    if corner is None:
+        return CORNERS["tt"]
+    if isinstance(corner, Corner):
+        return corner
+    try:
+        return CORNERS[corner]
+    except KeyError:
+        raise ValueError(f"unknown corner {corner!r} "
+                         f"(have {sorted(CORNERS)})") from None
+
+
+# ---------------------------------------------------------------------------
+# Scenario specs
+# ---------------------------------------------------------------------------
+_DEF_NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named design-space scenario: the grid axes plus corner presets.
+
+    All axes are tuples (hashable -> a Scenario is a valid frozen-config
+    field and jit constant).  `sigma_maxes=None` is the exact regime."""
+    name: str
+    ns: tuple[int, ...] = _DEF_NS
+    bit_widths: tuple[int, ...] = (1, 2, 4, 8)
+    sigma_maxes: tuple[float, ...] | None = (2.0,)
+    vdds: tuple[float, ...] = PAPER_VDD_GRID
+    p_x_ones: tuple[float, ...] = (C.P_X_ONE,)
+    w_bit_sparsities: tuple[float, ...] = (C.W_BIT_SPARSITY,)
+    corners: tuple[str, ...] = ("tt",)
+    m: int = C.M_DEFAULT
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+
+def _lin(lo: float, hi: float, n: int) -> tuple[float, ...]:
+    return tuple(float(v) for v in np.round(np.linspace(lo, hi, n), 4))
+
+
+SCENARIOS: dict[str, Scenario] = {
+    # the paper's Figs. 9/11 grids at nominal supply
+    "paper-exact": Scenario("paper-exact", sigma_maxes=None,
+                            vdds=(C.VDD_NOM,)),
+    "paper-relaxed": Scenario("paper-relaxed", sigma_maxes=(2.0,),
+                              vdds=(C.VDD_NOM,)),
+    # beyond-paper: joint (Vdd, R) optimization over the retired loop's grid
+    "vdd-opt": Scenario("vdd-opt", sigma_maxes=(2.0,)),
+    # error-tolerant edge workload: scaled supplies, relaxed budgets,
+    # activity/sparsity spread, all corners
+    "edge": Scenario("edge",
+                     ns=(16, 32, 64, 128, 256, 576, 1024),
+                     bit_widths=(2, 4),
+                     sigma_maxes=(0.5, 1.0, 2.0, 4.0),
+                     vdds=_lin(0.40, 0.80, 9),
+                     p_x_ones=(0.3, 0.5),
+                     w_bit_sparsities=(0.5, 0.7, 0.9),
+                     corners=("tt", "ff", "ss")),
+    # the dense winner-map sweep benched/gated in bench_scenarios (>= 1e5
+    # points per corner in one jitted call)
+    "dense": Scenario("dense",
+                      ns=tuple(int(x) for x in np.unique(np.round(
+                          np.geomspace(16, 4096, 24)).astype(int))),
+                      bit_widths=(1, 2, 4, 8),
+                      sigma_maxes=(0.25, 0.5, 1.0, 2.0, 4.0),
+                      vdds=_lin(0.40, 0.80, 12),
+                      p_x_ones=(0.3, 0.5),
+                      w_bit_sparsities=(0.5, 0.7, 0.9),
+                      corners=("tt", "ff", "ss")),
+}
+
+
+def get_scenario(scenario: str | Scenario) -> Scenario:
+    if isinstance(scenario, Scenario):
+        return scenario
+    try:
+        return SCENARIOS[scenario]
+    except KeyError:
+        raise ValueError(f"unknown scenario {scenario!r} "
+                         f"(have {sorted(SCENARIOS)})") from None
+
+
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+def _reduce(grid: design_grid.DesignGrid,
+            minimize_over: Sequence[str]) -> design_grid.DesignGrid:
+    for axis in minimize_over:
+        if axis != "vdd":
+            raise ValueError(f"cannot minimize over axis {axis!r} "
+                             "(only 'vdd' is a reducible axis)")
+        grid = design_grid.minimize_over_vdd(grid)
+    return grid
+
+
+def sweep_scenario(scenario: str | Scenario,
+                   corner: str | Corner | None = None,
+                   minimize_over: Sequence[str] = ()
+                   ) -> design_grid.DesignGrid:
+    """One corner of a scenario as ONE jitted grid call (plus the optional
+    numpy-side Vdd argmin reduction)."""
+    sc = get_scenario(scenario)
+    co = get_corner(corner)
+    grid = design_grid.sweep_batched(
+        ns=sc.ns, bit_widths=sc.bit_widths,
+        sigma_maxes=co.apply_sigmas(sc.sigma_maxes),
+        vdds=co.apply_vdds(sc.vdds),
+        p_x_ones=sc.p_x_ones, w_bit_sparsities=sc.w_bit_sparsities,
+        m=sc.m)
+    return _reduce(grid, minimize_over)
+
+
+def sweep_scenarios(scenario: str | Scenario,
+                    corners: Sequence[str | Corner] | None = None,
+                    minimize_over: Sequence[str] = ()
+                    ) -> dict[str, design_grid.DesignGrid]:
+    """All corners of a scenario: {corner_name: DesignGrid}.  Corners share
+    one compiled sweep (same grid shape; only the point values differ)."""
+    sc = get_scenario(scenario)
+    cos = [get_corner(c) for c in (corners if corners is not None
+                                   else sc.corners)]
+    return {co.name: sweep_scenario(sc, co, minimize_over) for co in cos}
+
+
+def optimal_td_vdds(n, sigma_max, *, bits: int,
+                    vdds: Sequence[float] = PAPER_VDD_GRID,
+                    m: int = C.M_DEFAULT,
+                    p_x_one: float = C.P_X_ONE,
+                    w_bit_sparsity: float = C.W_BIT_SPARSITY) -> np.ndarray:
+    """Energy-minimizing TD supply per (n, sigma_max) point over a Vdd grid:
+    one `evaluate_td_batched` call on the (points x Vdd) product, argmin
+    along Vdd (first minimum wins, like the retired python loop).
+
+    This is the scenario -> policy coupling: tdsim.policy feeds the layer
+    vector through it to pick each layer's operating point."""
+    n_a = np.atleast_1d(np.asarray(n, np.float64))
+    s_a = np.atleast_1d(np.asarray(sigma_max, np.float64))
+    n_a, s_a = np.broadcast_arrays(n_a, s_a)
+    v = np.asarray(list(vdds), np.float64)
+    res = design_grid.evaluate_td_batched(
+        n_a[..., None], s_a[..., None], v[None, :], bits=int(bits), m=int(m),
+        p_x_one=float(p_x_one), w_bit_sparsity=float(w_bit_sparsity))
+    return v[np.argmin(res["e_mac"], axis=-1)]

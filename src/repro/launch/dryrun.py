@@ -122,12 +122,15 @@ def _scan_corrections(arch, shape) -> dict:
 
 def run_cell(arch_name: str, shape_name: str, mesh, mesh_tag: str,
              td_mode: str = "precise", scan_layers: bool = False,
-             td_per_layer: str | None = None) -> dict:
+             td_per_layer: str | None = None,
+             scenario: str | None = None,
+             corner: str | None = None) -> dict:
     arch = cfgs.get(arch_name)
     if td_mode != "precise":
         arch = arch.replace(td=TDExecCfg(mode=td_mode))
-    if td_per_layer:
-        arch = td_cli.apply_td_args(arch, None, td_per_layer)
+    if td_per_layer or scenario or corner:
+        arch = td_cli.apply_td_args(arch, None, td_per_layer, scenario,
+                                    corner)
     if scan_layers:
         arch = arch.replace(model=dataclasses.replace(arch.model,
                                                       scan_layers=True))
@@ -241,6 +244,7 @@ def main():
                     help="heterogeneous per-layer TD policies: inline sigma "
                     "list '0.5,1.0,...' or '@per_layer_policies.json' from "
                     "the Fig. 10 batched noise-tolerance search")
+    td_cli.add_scenario_args(ap)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--scan-layers", action="store_true",
@@ -269,12 +273,15 @@ def main():
         tag = f"{arch_name}__{shape_name}__{mesh_tag}" + \
             (f"__{args.td}" if args.td != "precise" else "") + \
             ("__per_layer" if args.td_per_layer else "") + \
+            (f"__{args.scenario}" if args.scenario else "") + \
+            (f"__{args.corner}" if args.corner else "") + \
             ("__scan" if args.scan_layers else "")
         out_path = os.path.join(args.out, tag + ".json")
         try:
             res = run_cell(arch_name, shape_name, mesh, mesh_tag, args.td,
                            scan_layers=args.scan_layers,
-                           td_per_layer=args.td_per_layer)
+                           td_per_layer=args.td_per_layer,
+                           scenario=args.scenario, corner=args.corner)
             n_ok += 1
             print(f"[OK] {tag}: dominant={res['roofline']['dominant']} "
                   f"step={res['roofline']['step_s']:.4f}s "

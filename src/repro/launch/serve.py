@@ -66,16 +66,21 @@ def run(arch, batch: int, prompt_len: int, gen: int, seed: int = 0):
 
     # hardware energy accounting (the paper's axis) for this serving config;
     # with per-layer policies the first layer's policy sets the accounting
-    # bit widths / chain length
+    # bit widths / chain length.  A solved TD policy carries its own
+    # operating point (vdd + budget, e.g. from --scenario/--corner) and the
+    # meter runs at it; quant-mode policies fall back to the representative
+    # relaxed budget.
     shapes = matmul_shapes(cfg)
     pol0 = common.pol_at(pol, 0)
     pol_acct = pol0 if pol0.mode != "precise" else None
     if pol_acct is not None:
+        sigma_acct = None if pol_acct.sigma_max is not None else 2.0
         reports = energy_meter.compare_domains(shapes, pol_acct,
-                                               sigma_max=2.0)
+                                               sigma_max=sigma_acct)
         for dom, rep in reports.items():
             print(f"[energy] {dom:8s}: {rep.total_energy_per_token:.3e} "
-                  f"J/token over {rep.total_macs_per_token:.3e} MACs")
+                  f"J/token over {rep.total_macs_per_token:.3e} MACs "
+                  f"(vdd={pol_acct.vdd:.2f})")
     return gen_ids
 
 
@@ -92,9 +97,11 @@ def main():
                     help="heterogeneous per-layer TD policies: inline sigma "
                     "list '0.5,1.0,...' or '@per_layer_policies.json' from "
                     "the Fig. 10 batched noise-tolerance search")
+    td_cli.add_scenario_args(ap)
     args = ap.parse_args()
     arch = cfgs.get_smoke(args.arch) if args.smoke else cfgs.get(args.arch)
-    arch = td_cli.apply_td_args(arch, args.td, args.td_per_layer)
+    arch = td_cli.apply_td_args(arch, args.td, args.td_per_layer,
+                                args.scenario, args.corner)
     run(arch, args.batch, args.prompt_len, args.gen)
 
 

@@ -61,8 +61,13 @@ def parse_td_per_layer(spec: str, base: TDExecCfg,
 
 
 def apply_td_args(arch: ArchConfig, td: str | None,
-                  td_per_layer: str | None) -> ArchConfig:
-    """Shared --td / --td-per-layer handling for train/serve/dryrun CLIs."""
+                  td_per_layer: str | None,
+                  scenario: str | None = None,
+                  corner: str | None = None) -> ArchConfig:
+    """Shared --td / --td-per-layer / --scenario / --corner handling for
+    the train/serve/dryrun CLIs.  Scenario/corner names are validated
+    against the core.scenario registries here so a typo fails at the CLI,
+    not inside the first policy solve."""
     if td:
         arch = arch.replace(td=TDExecCfg(mode=td, n_chain=min(
             576, arch.model.d_model)))
@@ -71,4 +76,21 @@ def apply_td_args(arch: ArchConfig, td: str | None,
             mode="td", n_chain=min(576, arch.model.d_model))
         arch = arch.replace(td_per_layer=parse_td_per_layer(
             td_per_layer, base, arch.model.n_layers))
+    if scenario or corner:
+        from repro.core import scenario as scenario_mod
+        if scenario:
+            scenario_mod.get_scenario(scenario)
+        scenario_mod.get_corner(corner)
+        arch = arch.replace(scenario=scenario or "vdd-opt", corner=corner)
     return arch
+
+
+def add_scenario_args(ap) -> None:
+    """Register the shared --scenario/--corner argparse flags."""
+    ap.add_argument("--scenario", default=None,
+                    help="named design scenario (core.scenario.SCENARIOS) "
+                    "to resolve TD operating points for: corner-derated "
+                    "error budgets, grid-argmin supply per matmul")
+    ap.add_argument("--corner", default=None,
+                    help="technology corner preset (tt/ff/ss); implies the "
+                    "default 'vdd-opt' scenario when --scenario is absent")

@@ -27,10 +27,17 @@ def resolve_policy(td: TDExecCfg) -> td_policy.TDPolicy:
     return resolve_policies([td])[0]
 
 
-def resolve_policies(tds) -> list[td_policy.TDPolicy]:
+def resolve_policies(tds, scenario=None, corner=None
+                     ) -> list[td_policy.TDPolicy]:
     """Resolve many layer configs at once: all "td"-mode entries are solved
     by one batched (R, q, sigma) call per weight bit width instead of a
-    per-layer scalar solve."""
+    per-layer scalar solve.  A named `scenario`/`corner` (core.scenario)
+    resolves each "td" entry's operating point first: corner-derated error
+    budget, grid-argmin supply (`tdsim.policy.apply_scenario`).  A corner
+    without a scenario resolves against the default 'vdd-opt' supply grid
+    (same rule as the CLI) rather than being silently ignored."""
+    if corner is not None and scenario is None:
+        scenario = "vdd-opt"
     out: list[td_policy.TDPolicy | None] = [None] * len(tds)
     td_specs, td_idx = [], []
     for i, td in enumerate(tds):
@@ -45,6 +52,8 @@ def resolve_policies(tds) -> list[td_policy.TDPolicy]:
             td_idx.append(i)
         else:
             raise ValueError(f"unknown td mode {td.mode!r}")
+    if scenario is not None and td_specs:
+        td_specs = td_policy.apply_scenario(td_specs, scenario, corner)
     for i, pol in zip(td_idx, td_policy.solve_td_policies(td_specs)):
         out[i] = pol
     return out  # type: ignore[return-value]
@@ -57,9 +66,12 @@ def resolve_arch_policy(arch) -> td_policy.TDPolicy | td_policy.NetworkPolicy:
     Heterogeneous -> every per-layer TDExecCfg plus the top-level `td` go
     through ONE `resolve_policies` call (batched (R, q, sigma) solve per
     distinct weight bit width) and come back as a NetworkPolicy.
+    `arch.scenario`/`arch.corner` resolve every "td"-mode matmul's
+    operating point for that named scenario/corner.
     """
+    sc, co = getattr(arch, "scenario", None), getattr(arch, "corner", None)
     if arch.td_per_layer is None:
-        return resolve_policy(arch.td)
+        return resolve_policies([arch.td], scenario=sc, corner=co)[0]
     if arch.model.family != "decoder":
         raise ValueError("per-layer TD policies require a decoder-family "
                          f"model, got {arch.model.family!r}")
@@ -68,7 +80,8 @@ def resolve_arch_policy(arch) -> td_policy.TDPolicy | td_policy.NetworkPolicy:
         raise ValueError(
             f"td_per_layer has {len(arch.td_per_layer)} entries for "
             f"{n_layers}-layer model {arch.model.name!r}")
-    pols = resolve_policies(list(arch.td_per_layer) + [arch.td])
+    pols = resolve_policies(list(arch.td_per_layer) + [arch.td],
+                            scenario=sc, corner=co)
     return td_policy.NetworkPolicy(layers=tuple(pols[:-1]), top=pols[-1])
 
 

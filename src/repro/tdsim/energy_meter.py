@@ -47,14 +47,22 @@ def account(shapes: list[MatmulShape], pol: TDPolicy, domain: str = "td",
     Each (k, n_out) matmul maps to n_out hardware chains; a chain of length k
     is tiled into segments of pol.n_chain, evaluated at the segment length
     (that is the 'array dimension' axis of the paper's figures).
+
+    The accounting runs at the policy's operating point: `pol.vdd` (e.g. a
+    scenario grid-argmin supply) and, when `sigma_max` is not given, the
+    budget the policy was solved for (`pol.sigma_max`; exact regime when
+    the policy carries none).
     """
+    if sigma_max is None:
+        sigma_max = pol.sigma_max
     s_max = (design_space.sigma_exact() if sigma_max is None else sigma_max)
     per_layer = {}
     tot_macs = 0.0
     tot_e = 0.0
     for sh in shapes:
         n_eval = min(sh.k, pol.n_chain)
-        pt = design_space.evaluate(domain, n_eval, pol.bits_w, s_max, m)
+        pt = design_space.evaluate(domain, n_eval, pol.bits_w, s_max, m,
+                                   vdd=pol.vdd)
         macs = sh.k * sh.n_out * sh.calls_per_token
         # bit-serial activations: one pass per activation bit-plane
         passes = pol.bits_a if domain == "td" else 1

@@ -13,6 +13,13 @@ the Fig. 10 -> Fig. 11 coupling: it takes the per-layer sigma_array_max
 vector straight out of `core.noise_tolerance.find_sigma_max_batched` into
 `design_grid.evaluate_td_batched` and returns one `NetworkPolicy` with a
 heterogeneous per-layer (R, q, sigma_chain) solution.
+
+Scenario coupling: `apply_scenario` resolves each layer's operating point
+for a named scenario / technology corner (`core.scenario`): the corner
+derates the error budget and shifts the supply grid, and the layer's Vdd is
+picked by the grid argmin (`scenario.optimal_td_vdds`) instead of staying
+pinned at nominal.  `solve_network_policies(..., scenario=, corner=)` and
+the launchers' `--scenario/--corner` flags go through it.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import numpy as np
 from repro.core import chain as chain_mod
 from repro.core import constants as C
 from repro.core import design_grid
+from repro.core import scenario as scenario_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +45,9 @@ class TDPolicy:
     redundancy: int = 1          # R
     sigma_chain: float = 0.0     # injected per-chain noise std (LSB units)
     tdc_q: int = 1               # TDC LSB coarsening factor
+    vdd: float = C.VDD_NOM       # operating supply the (R, q) solve assumed
+    sigma_max: float | None = None   # error budget the solve ran at
+                                     # (None = exact regime / not solved)
     use_pallas: bool = False     # route through the Pallas kernel
 
     def replace(self, **kw) -> "TDPolicy":
@@ -48,11 +59,15 @@ PRECISE = TDPolicy(mode="precise")
 
 @dataclasses.dataclass(frozen=True)
 class TDLayerSpec:
-    """One matmul's hardware question: (B_w, N, sigma_max, Vdd) -> policy.
+    """One matmul's hardware question: (B_w, N, sigma_max, Vdd, input
+    stats) -> policy.
 
     sigma_max=None means the exact regime (3 sigma <= 0.5): the returned
     policy still injects the residual sigma_chain -- the point of the paper's
-    threshold is that this residual is harmless after rounding.
+    threshold is that this residual is harmless after rounding.  The input
+    statistics default to the paper's Section IV constants; scenario
+    resolution overrides them so the (R, q) solve runs under the same
+    workload model that picked the supply.
     """
     bits_a: int = 4
     bits_w: int = 4
@@ -60,6 +75,9 @@ class TDLayerSpec:
     sigma_max: float | None = None
     vdd: float = C.VDD_NOM
     use_pallas: bool = False
+    p_x_one: float = C.P_X_ONE
+    w_bit_sparsity: float = C.W_BIT_SPARSITY
+    m: int = C.M_DEFAULT
 
 
 def quant_policy(bits_a: int = 4, bits_w: int = 4) -> TDPolicy:
@@ -71,17 +89,21 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
     call per distinct weight bit width (the joint (R, q) solution is
     identical to design_space.evaluate_td)."""
     specs = list(specs)
-    order: dict[int, list[int]] = {}
+    order: dict[tuple[int, int], list[int]] = {}
     for i, sp in enumerate(specs):
-        order.setdefault(sp.bits_w, []).append(i)
+        order.setdefault((sp.bits_w, sp.m), []).append(i)
     out: list[TDPolicy | None] = [None] * len(specs)
-    for bits_w, idxs in order.items():
+    for (bits_w, m), idxs in order.items():
         n = np.array([specs[i].n_chain for i in idxs], np.float64)
         sig = np.array([chain_mod.sigma_max_exact()
                         if specs[i].sigma_max is None else specs[i].sigma_max
                         for i in idxs], np.float64)
         vdd = np.array([specs[i].vdd for i in idxs], np.float64)
-        res = design_grid.evaluate_td_batched(n, sig, vdd, bits=bits_w)
+        p1 = np.array([specs[i].p_x_one for i in idxs], np.float64)
+        wsp = np.array([specs[i].w_bit_sparsity for i in idxs], np.float64)
+        res = design_grid.evaluate_td_batched(n, sig, vdd, bits=bits_w,
+                                              m=m, p_x_one=p1,
+                                              w_bit_sparsity=wsp)
         for k, i in enumerate(idxs):
             sp = specs[i]
             out[i] = TDPolicy(
@@ -90,8 +112,56 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
                 redundancy=int(res["redundancy"][k]),
                 sigma_chain=float(res["sigma_chain_achieved"][k]),
                 tdc_q=int(res["tdc_q"][k]),
+                vdd=float(vdd[k]),
+                sigma_max=sp.sigma_max,
                 use_pallas=sp.use_pallas)
     return out  # type: ignore[return-value]
+
+
+def apply_scenario(specs: Sequence[TDLayerSpec],
+                   scenario, corner=None,
+                   minimize_vdd: bool = True) -> list[TDLayerSpec]:
+    """Resolve each layer spec's operating point for a scenario/corner.
+
+    The corner derates every error budget (an exact-regime layer derates
+    from sigma_max_exact) and shifts the scenario's supply grid; with
+    `minimize_vdd` each layer's supply is the energy-minimizing grid point
+    from one batched `optimal_td_vdds` call per distinct weight bit width,
+    otherwise the corner-shifted nominal supply is used.  The scenario's
+    leading activity/sparsity entries set the input statistics of the
+    argmin."""
+    sc = scenario_mod.get_scenario(scenario)
+    co = scenario_mod.get_corner(corner)
+    vdd_grid = co.apply_vdds(sc.vdds)
+    specs = list(specs)
+    # exact-regime layers derate from the explicit exact budget
+    sig_eff = [co.apply_sigmas((chain_mod.sigma_max_exact()
+                                if sp.sigma_max is None
+                                else sp.sigma_max,))[0]
+               for sp in specs]
+    if minimize_vdd:
+        vdds = np.empty(len(specs), np.float64)
+        order: dict[int, list[int]] = {}
+        for i, sp in enumerate(specs):
+            order.setdefault(sp.bits_w, []).append(i)
+        for bits_w, idxs in order.items():
+            v = scenario_mod.optimal_td_vdds(
+                [specs[i].n_chain for i in idxs],
+                [sig_eff[i] for i in idxs],
+                bits=bits_w, vdds=vdd_grid, m=sc.m,
+                p_x_one=sc.p_x_ones[0],
+                w_bit_sparsity=sc.w_bit_sparsities[0])
+            vdds[idxs] = v
+    else:
+        vdds = np.asarray(co.apply_vdds([sp.vdd for sp in specs]))
+    # the final (R, q, sigma_chain) solve must run under the same workload
+    # model the supply argmin assumed: input statistics AND chain count m
+    return [dataclasses.replace(sp, sigma_max=float(sig_eff[i]),
+                                vdd=float(vdds[i]),
+                                p_x_one=float(sc.p_x_ones[0]),
+                                w_bit_sparsity=float(sc.w_bit_sparsities[0]),
+                                m=int(sc.m))
+            for i, sp in enumerate(specs)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,7 +210,9 @@ def pol_top(pol) -> TDPolicy:
 def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
                            n_chain=C.N_BASELINE, vdd=C.VDD_NOM,
                            use_pallas: bool = False,
-                           top: TDPolicy = PRECISE) -> NetworkPolicy:
+                           top: TDPolicy = PRECISE,
+                           scenario=None, corner=None,
+                           minimize_vdd: bool = True) -> NetworkPolicy:
     """Per-layer sigma_array_max vector (Fig. 10) -> NetworkPolicy (Fig. 11).
 
     `sigma_max` is the (L,) output of `find_sigma_max_batched` (entries of
@@ -148,6 +220,11 @@ def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
     `n_chain` and `vdd` broadcast scalar-or-(L,).  All layers solve through
     `design_grid.evaluate_td_batched` in one batched call per distinct
     weight bit width.
+
+    With `scenario` (a name from `core.scenario.SCENARIOS` or a Scenario)
+    each layer resolves for that scenario/`corner`: the corner derates the
+    budgets and shifts the supply grid, and `minimize_vdd` picks each
+    layer's energy-minimizing supply by grid argmin (`apply_scenario`).
     """
     sig = np.asarray([np.nan if s is None else float(s) for s in
                       np.atleast_1d(np.asarray(sigma_max, object))],
@@ -164,6 +241,8 @@ def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
                          sigma_max=None if np.isnan(sig[i]) else sig[i],
                          vdd=float(vd[i]), use_pallas=use_pallas)
              for i in range(n_layers)]
+    if scenario is not None:
+        specs = apply_scenario(specs, scenario, corner, minimize_vdd)
     return NetworkPolicy(layers=tuple(solve_td_policies(specs)), top=top)
 
 

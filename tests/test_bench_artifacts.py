@@ -51,7 +51,7 @@ def test_design_grid_artifacts(tmp_path):
     assert hdr == bench_design_grid.INTERVAL_HEADER
     assert len(rows) >= 1
     for r in rows:
-        assert int(r[5]) <= int(r[6])    # n_min <= n_max
+        assert int(r[7]) <= int(r[8])    # n_min <= n_max
 
 
 def test_noise_tolerance_artifacts(tmp_path):
@@ -90,3 +90,25 @@ def test_noise_tolerance_artifacts(tmp_path):
     tds = td_cli.parse_td_per_layer(f"@{paths[2]}", TDExecCfg(mode="td"), 2)
     assert [t.sigma_max for t in tds] == [1.0, 1.8]
     assert [t.n_chain for t in tds] == [64, 64]
+
+
+def test_scenario_artifacts(tmp_path):
+    from benchmarks import bench_scenarios
+    from repro.core import design_grid, scenario as sc
+    spec = sc.Scenario("t", ns=(16, 64, 576), bit_widths=(1, 4),
+                       sigma_maxes=(2.0,), vdds=(0.6, 0.8),
+                       corners=("tt", "ss"))
+    grids = sc.sweep_scenarios(spec)
+    paths = bench_scenarios.write_artifacts(grids, str(tmp_path))
+    assert [os.path.basename(p) for p in paths] == \
+        ["winner_map.csv", "pareto_frontier.csv", "domain_crossovers.csv",
+         "grid.npz"] * 2
+    for corner, g in grids.items():
+        hdr, rows = _read_csv(os.path.join(tmp_path, corner,
+                                           "winner_map.csv"))
+        assert hdr == bench_scenarios.WINNER_HEADER
+        assert len(rows) == g.n_points // len(g.domains)
+        assert {r[7] for r in rows} <= set(g.domains)
+        rt = design_grid.DesignGrid.load_npz(
+            os.path.join(tmp_path, corner, "grid.npz"))
+        np.testing.assert_array_equal(rt.e_mac, g.e_mac)

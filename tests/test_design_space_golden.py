@@ -1,17 +1,18 @@
-"""Golden-fixture parity for the design-space engine (ROADMAP's
-prerequisite for scalar-path retirement).
+"""Golden-fixture lock for the design-space engine (the scalar path is
+RETIRED; this fixture is what made the retirement safe).
 
-`tests/fixtures/design_space_golden.json` pins the scalar
+`tests/fixtures/design_space_golden.json` pins the original float64 scalar
 `design_space.evaluate_*` outputs for the paper grids — the Fig. 9 exact
 regime and the Fig. 11/12 relaxed regime over (domain x N x B) — as checked
-in numbers.  Both the scalar golden path and the batched engine must match
-the fixture: the scalar path tightly (it generated the numbers), the
-batched path at the float32 parity tolerance with *exact* integer decisions
-(R, q) and winners.
+in numbers.  Both surviving entry tiers must match the fixture: the size-1
+`evaluate_*` wrappers and the full `sweep_batched` grid, each with *exact*
+integer decisions (R, q) and winners, continuous fields at the float32
+parity tolerance (both tiers run the one batched engine now).
 
-Regenerate (only when the hardware model itself intentionally changes):
+Regenerate ONLY when the hardware model itself intentionally changes
+(deliberate re-pin, never an accident):
 
-    PYTHONPATH=src python tests/test_design_space_golden.py
+    PYTHONPATH=src python scripts/regen_golden.py
 """
 import json
 import os
@@ -87,8 +88,9 @@ def test_fixture_checked_in():
 
 
 def test_scalar_path_matches_fixture(golden):
-    """The scalar reference reproduces its own pinned numbers (libm-level
-    tolerance only)."""
+    """The size-1 evaluate_* wrappers reproduce the retired float64 scalar
+    path's pinned numbers: R/q/winner bit-identical, continuous fields at
+    the float32 engine tolerance (measured worst deviation ~1e-6)."""
     points, winners = golden
     for regime, sigma in _regimes().items():
         for b in BITS:
@@ -100,7 +102,7 @@ def test_scalar_path_matches_fixture(golden):
                     assert int(p.aux.get("tdc_lsb_q", 1)) == ref["tdc_q"]
                     for f in ("e_mac", "throughput", "area_per_mac"):
                         np.testing.assert_allclose(
-                            getattr(p, f), ref[f], rtol=1e-6,
+                            getattr(p, f), ref[f], rtol=1e-4,
                             err_msg=f"{regime}/{d}/n={n}/B={b}/{f}")
                 assert min(pts, key=lambda d: pts[d].e_mac) == \
                     winners[(regime, n, b)], (regime, n, b)
@@ -119,14 +121,14 @@ def test_batched_path_matches_fixture(golden):
             for ni, n in enumerate(NS):
                 for di, d in enumerate(g.domains):
                     ref = points[(regime, d, n, b)]
-                    ix = (di, bi, ni, 0, 0)
+                    ix = (di, bi, ni, 0, 0, 0, 0)
                     assert g.redundancy[ix] == ref["redundancy"], (d, n, b)
                     assert g.tdc_q[ix] == ref["tdc_q"], (d, n, b)
                     for f in ("e_mac", "throughput", "area_per_mac"):
                         np.testing.assert_allclose(
                             getattr(g, f)[ix], ref[f], rtol=1e-4,
                             err_msg=f"{regime}/{d}/n={n}/B={b}/{f}")
-                assert names[bi, ni, 0, 0] == winners[(regime, n, b)], \
+                assert names[bi, ni, 0, 0, 0, 0] == winners[(regime, n, b)], \
                     (regime, n, b)
 
 

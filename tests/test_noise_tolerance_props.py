@@ -151,6 +151,24 @@ def test_batched_degenerate_endpoints():
     assert res.sigma_max[1] == SIGMAS[0]
 
 
+@settings(deadline=None, max_examples=8)
+@given(weights=st.lists(st.floats(1e-3, 0.5), min_size=1, max_size=4),
+       chunk=st.integers(1, 40))
+def test_chunked_matches_unchunked(weights, chunk):
+    """chunk_size (lax.map over vmapped chunks) is a pure memory knob: the
+    padded-tail chunking must reproduce the flat vmap bit-for-bit."""
+    eval_fn = _layered_eval(weights)
+    key = jax.random.PRNGKey(5)
+    full = nt.find_sigma_max_batched(eval_fn, SIGMAS, key,
+                                     n_layers=len(weights), n_repeats=2)
+    chunked = nt.find_sigma_max_batched(eval_fn, SIGMAS, key,
+                                        n_layers=len(weights), n_repeats=2,
+                                        chunk_size=chunk)
+    np.testing.assert_array_equal(full.sigma_max, chunked.sigma_max)
+    np.testing.assert_array_equal(full.rel_drop, chunked.rel_drop)
+    np.testing.assert_array_equal(full.acc_clean, chunked.acc_clean)
+
+
 def test_batched_keys_honoured():
     """A key-sensitive eval sees the scalar key schedule layer-by-layer."""
     def eval_fn(sigma_vec, key):

@@ -1,0 +1,72 @@
+"""`pareto_mask` chunking tests: the non-dominated mask must be independent
+of the chunk size, including the chunk-boundary cases (n_points % chunk ==
+0 and +-1), and must agree with the O(P^2) one-shot reference (chunk >= P).
+
+The randomized hypothesis property test needs the [test] extra; the
+deterministic boundary cases always run (tier-1)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core.design_grid import pareto_mask
+
+
+def _costs(rng, p, k):
+    # small-integer costs give duplicated rows + ties, exercising the
+    # <= / strict-< dominance edge
+    base = rng.integers(0, 6, size=(p, k)).astype(np.float64)
+    if p > 1:
+        base[rng.integers(0, p)] = base[rng.integers(0, p)]
+    return base
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=40)
+    @given(p=st.integers(1, 60), k=st.integers(1, 4),
+           chunk=st.integers(1, 70), seed=st.integers(0, 2 ** 16))
+    def test_chunked_matches_unchunked(p, k, chunk, seed):
+        costs = _costs(np.random.default_rng(seed), p, k)
+        ref = pareto_mask(costs, chunk=p + 1)          # single block
+        np.testing.assert_array_equal(pareto_mask(costs, chunk=chunk), ref)
+
+
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_chunk_boundary_cases(delta):
+    """n_points is exactly a multiple of chunk, one less, and one more."""
+    chunk = 8
+    p = 4 * chunk + delta
+    costs = _costs(np.random.default_rng(delta + 7), p, 3)
+    ref = pareto_mask(costs, chunk=p + 1)
+    np.testing.assert_array_equal(pareto_mask(costs, chunk=chunk), ref)
+    # and against a brute-force dominance check
+    brute = np.ones(p, bool)
+    for i in range(p):
+        le = (costs <= costs[i]).all(-1)
+        lt = (costs < costs[i]).any(-1)
+        brute[i] = not (le & lt).any()
+    np.testing.assert_array_equal(ref, brute)
+
+
+def test_mixed_scale_sum_ties():
+    """Regression: a huge constant objective (e.g. -throughput ~1e13) next
+    to a tiny one (e_mac ~1e-15) must not hide dominance.  A sum-sorted
+    sweep rounds the tiny differences away (sum ties put the dominator in
+    a later chunk); the lexicographic order is comparison-only and exact.
+    True frontier here is exactly one point, at every chunk size."""
+    p = 600
+    e = np.linspace(2e-15, 1e-15, p)                 # strictly decreasing
+    costs = np.stack([np.full(p, -3.7e13), e], axis=-1)
+    for chunk in (64, 256, p, p + 1, 2048):
+        mask = pareto_mask(costs, chunk=chunk)
+        assert mask.sum() == 1 and mask[-1], chunk
+
+
+def test_single_point_and_identical_rows():
+    assert pareto_mask(np.zeros((1, 2)), chunk=1).tolist() == [True]
+    # identical rows never dominate each other (no strict <)
+    assert pareto_mask(np.ones((5, 3)), chunk=2).all()
