@@ -12,7 +12,8 @@ from benchmarks import (bench_arch_energy, bench_design_grid,
                         bench_energy_exact, bench_energy_relaxed,
                         bench_eta_esnr, bench_noise_tolerance,
                         bench_output_range, bench_roofline, bench_scenarios,
-                        bench_tdc, bench_tdmac_cell, bench_throughput_area)
+                        bench_td_vmm, bench_tdc, bench_tdmac_cell,
+                        bench_throughput_area)
 
 SUITES = {
     "fig3c": bench_eta_esnr,
@@ -25,6 +26,7 @@ SUITES = {
     "fig12": bench_throughput_area,
     "grid": bench_design_grid,
     "scenarios": bench_scenarios,
+    "td_vmm": bench_td_vmm,
     "roofline": bench_roofline,
     "arch_energy": bench_arch_energy,
 }

@@ -34,11 +34,32 @@ architectures, where "accuracy" is next-token top-1).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# jitted probe-runners keyed by eval_fn (weak: dies with the eval), then by
+# chunk config — repeated sweeps over the same eval reuse the compiled
+# program instead of retracing per call
+_JIT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _jitted_runner(eval_fn, chunk_size):
+    per_fn = _JIT_CACHE.setdefault(eval_fn, {})
+    fn = per_fn.get(chunk_size)
+    if fn is None:
+        if chunk_size is None:
+            fn = jax.jit(jax.vmap(eval_fn))
+        else:
+            @jax.jit
+            def fn(cv, ck):
+                return jax.lax.map(
+                    lambda c: jax.vmap(eval_fn)(c[0], c[1]), (cv, ck))
+        per_fn[chunk_size] = fn
+    return fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,13 +144,24 @@ def probe_vectors(sigmas: Sequence[float], n_layers: int,
 
 
 def _run_probes(eval_fn, flat_v: jax.Array, flat_k: jax.Array,
-                chunk_size: int | None) -> jax.Array:
+                chunk_size: int | None, mesh=None) -> jax.Array:
     """Evaluate all (probe, key) pairs: one flat vmap, or -- with
     `chunk_size` -- a lax.map over equal-size vmapped chunks so only
-    chunk_size evals are live at once."""
+    chunk_size evals are live at once.
+
+    With `mesh`, the probe axis (the within-chunk axis when chunked) is
+    sharded over the mesh data axis (`launch.sharding.probe_spec`) before
+    the jitted call -- each probe is an independent eval, so the sweep
+    data-parallelizes across devices with no cross-probe collectives and
+    bit-identical per-probe results.
+    """
     t = flat_v.shape[0]
+    if mesh is not None:
+        from repro.launch import sharding as sharding_mod
     if chunk_size is None or chunk_size >= t:
-        return jax.jit(jax.vmap(eval_fn))(flat_v, flat_k)
+        if mesh is not None:
+            flat_v, flat_k = sharding_mod.shard_probes(mesh, (flat_v, flat_k))
+        return _jitted_runner(eval_fn, None)(flat_v, flat_k)
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
     pad = (-t) % chunk_size
@@ -141,12 +173,11 @@ def _run_probes(eval_fn, flat_v: jax.Array, flat_k: jax.Array,
     n_chunks = (t + pad) // chunk_size
     cv = flat_v.reshape((n_chunks, chunk_size) + flat_v.shape[1:])
     ck = flat_k.reshape((n_chunks, chunk_size) + flat_k.shape[1:])
-
-    @jax.jit
-    def run(cv, ck):
-        return jax.lax.map(lambda c: jax.vmap(eval_fn)(c[0], c[1]), (cv, ck))
-
-    return run(cv, ck).reshape(-1)[:t]
+    if mesh is not None:
+        # chunks run sequentially (lax.map bounds live memory); the
+        # within-chunk probe axis shards over data
+        cv, ck = sharding_mod.shard_probes(mesh, (cv, ck), axis=1)
+    return _jitted_runner(eval_fn, chunk_size)(cv, ck).reshape(-1)[:t]
 
 
 def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
@@ -155,7 +186,8 @@ def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
                            n_layers: int,
                            rel_drop_max: float = 0.01,
                            n_repeats: int = 3,
-                           chunk_size: int | None = None
+                           chunk_size: int | None = None,
+                           mesh=None
                            ) -> BatchedNoiseToleranceResult:
     """Per-layer sigma_array_max for all layers in ONE vmapped+jitted call.
 
@@ -176,6 +208,14 @@ def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
     `lax.map` over equal chunks (the tail is padded with repeats of the
     first probe and discarded), each chunk vmapped -- still one jitted
     device program, results bit-identical to the unchunked call.
+
+    `mesh` shards the probe batch over the mesh data axis (the big-LM
+    per-layer sweep becomes mesh-parallel): probes are independent evals,
+    so sharding composes with `chunk_size` (the within-chunk axis shards;
+    chunks stay sequential) and results are bit-identical to the unsharded
+    call.  Probe counts that do not divide the data-axis size replicate
+    (correct, just unsharded) -- pick chunk_size as a multiple of the data
+    axis for full utilization.
     """
     sig = np.asarray(list(sigmas), np.float64)
     s, l, r = len(sig), int(n_layers), int(n_repeats)
@@ -185,7 +225,7 @@ def find_sigma_max_batched(eval_fn: Callable[[jax.Array, jax.Array], jax.Array],
                                              per) for li in range(l)])
     flat_v = jnp.asarray(vecs.reshape(l * per, l), jnp.float32)
     flat_k = layer_keys.reshape((l * per,) + layer_keys.shape[2:])
-    accs = _run_probes(eval_fn, flat_v, flat_k, chunk_size)
+    accs = _run_probes(eval_fn, flat_v, flat_k, chunk_size, mesh)
     accs = np.asarray(accs, np.float64).reshape(l, per)
     acc_clean = accs[:, -1]
     acc = accs[:, : s * r].reshape(l, s, r).mean(axis=-1)

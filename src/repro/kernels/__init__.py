@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-td_vmm       bit-serial noisy TD-VMM (MXU int8 tiles + in-kernel hash noise)
+td_vmm       bit-serial noisy TD-VMM — the production TD execution engine:
+             fused offset/plane/TDC/correction tiles, runtime sigma & tdc_q
+             scalar operands (traced-sigma sweeps run one compiled program),
+             compiled by default on TPU (kernels.td_vmm.td_vmm
+             .default_interpret / REPRO_TD_VMM_INTERPRET)
 lsq_quant    fused LSQ fake-quantization (VPU)
 decode_gqa   fused GQA decode attention (flash-decode, memory-bound hot spot)
 flash_attn   causal GQA flash-attention forward (train/prefill score-traffic
@@ -8,5 +12,6 @@ flash_attn   causal GQA flash-attention forward (train/prefill score-traffic
 
 Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle).  Kernels are validated in
-interpret=True mode on CPU; on TPU the model path flips use_pallas=True.
+interpret=True mode on CPU; on a TPU backend td_vmm compiles automatically
+(no flag), the other kernels flip use_pallas=True in the model path.
 """

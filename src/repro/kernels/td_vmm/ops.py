@@ -1,46 +1,56 @@
-"""Jit'd wrapper: signed-code TD matmul via the Pallas kernel.
+"""Production entry points: signed-code TD matmul on the Pallas kernel.
 
-Handles offset encoding, contraction padding, batch flattening and the
-exact digital correction side-sums (popcount / static weight sum) around the
-unsigned kernel — mirroring how a real macro wraps its TD array with small
+``td_vmm`` is what ``tdsim.td_linear.td_matmul`` calls for every
+``mode == "td"`` matmul — traced and static sigma alike.  The wrapper only
+flattens leading batch dims, pads the contraction to whole chains and
+derives the noise seed; offset encoding, bit-plane extraction, TDC rounding
+and the digital correction side-sums are all fused into the kernel, so no
+``(Ba, ..., K)`` plane tensor (or offset copy of the operands) is ever
+materialized — mirroring how a real macro wraps its TD array with small
 digital logic.
+
+Semantics match ``tdsim.td_linear.td_matmul_int`` (including the tail
+segment's sqrt(live / n_chain) noise scale) with the kernel's counter-based
+noise in place of the threefry stream; at sigma = 0, tdc_q = 1 the two are
+bit-exact (tested).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.td_vmm import ref as td_ref
 from repro.kernels.td_vmm.td_vmm import td_vmm_pallas
-from repro.quant import bitserial
 
 
-def td_vmm(x_int: jnp.ndarray, w_int: jnp.ndarray, pol,
-           key: jax.Array, interpret: bool = True) -> jnp.ndarray:
-    """x_int (..., K) signed codes; w_int (K, N) signed codes.
-    Semantics match tdsim.td_linear.td_matmul_int but with the kernel's
-    counter-based noise."""
+def td_vmm_seeded(x_int: jnp.ndarray, w_int: jnp.ndarray, pol,
+                  seed: jnp.ndarray,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """x_int (..., K) signed codes; w_int (K, N) signed codes; ``seed`` an
+    already-derived uint32 noise seed (see ``ref.derive_seed``).
+    ``pol.sigma_chain`` / ``pol.tdc_q`` may be traced jax scalars — they ride
+    into the kernel as runtime SMEM operands."""
     k, n = w_int.shape
     lead = x_int.shape[:-1]
     m = 1
     for d in lead:
         m *= d
-    xu = bitserial.to_offset(x_int.reshape(m, k), pol.bits_a)
-    wu = bitserial.to_offset(w_int, pol.bits_w)
     n_seg = max(1, -(-k // pol.n_chain))
     k_pad = n_seg * pol.n_chain
-    xu_p = jnp.pad(xu, ((0, 0), (0, k_pad - k)))
-    wu_p = jnp.pad(wu, ((0, k_pad - k), (0, 0)))
-    seed = jax.random.key_data(key).ravel()[-1].astype(jnp.uint32) \
-        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) \
-        else jnp.asarray(key, jnp.uint32).ravel()[-1]
-
-    main = td_vmm_pallas(xu_p, wu_p, seed, bits_a=pol.bits_a,
-                         n_chain=pol.n_chain, sigma=float(pol.sigma_chain),
-                         tdc_q=int(pol.tdc_q), interpret=interpret)
-
-    ox = bitserial.offset_of(pol.bits_a)
-    ow = bitserial.offset_of(pol.bits_w)
-    corr_w = ox * wu.sum(0).astype(jnp.float32)
-    corr_x = ow * xu.sum(-1, keepdims=True).astype(jnp.float32)
-    out = main - corr_w[None, :] - corr_x + k * ox * ow
+    x2 = jnp.pad(x_int.reshape(m, k), ((0, 0), (0, k_pad - k)))
+    w2 = jnp.pad(w_int, ((0, k_pad - k), (0, 0)))
+    params = jnp.stack([jnp.asarray(pol.sigma_chain, jnp.float32),
+                        jnp.asarray(pol.tdc_q, jnp.float32)])
+    out = td_vmm_pallas(x2, w2, params, seed, bits_a=pol.bits_a,
+                        bits_w=pol.bits_w, n_chain=pol.n_chain, k_true=k,
+                        interpret=interpret)
     return out.reshape(*lead, n)
+
+
+def td_vmm(x_int: jnp.ndarray, w_int: jnp.ndarray, pol,
+           key: jax.Array, interpret: bool | None = None) -> jnp.ndarray:
+    """Key-taking convenience wrapper: derives the per-call noise seed from
+    BOTH halves of ``key`` (typed or raw uint32; ``ref.derive_seed``) and
+    runs the fused kernel."""
+    return td_vmm_seeded(x_int, w_int, pol, td_ref.derive_seed(key),
+                         interpret=interpret)

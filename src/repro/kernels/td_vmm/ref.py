@@ -4,6 +4,23 @@ Defines the *exact* semantics the Pallas kernel must reproduce, including
 the counter-based noise (hash -> Box-Muller) so kernel and oracle are
 bit-comparable.  The statistical properties of the hash noise (N(0, sigma))
 are asserted separately in tests.
+
+Two tiers:
+
+  * ``td_vmm_ref``         -- unsigned (offset-code) core: bit-serial planes,
+                              per-segment hash noise with the same
+                              sqrt(live / n_chain) tail scaling as
+                              ``tdsim.td_linear.td_matmul_int``, runtime
+                              sigma / tdc_q values.
+  * ``td_vmm_signed_ref``  -- full fused semantics of ``ops.td_vmm``: signed
+                              codes in, offset encoding + contraction padding
+                              + digital correction side-sums around the core.
+
+``derive_seed`` is the oracle for the per-call kernel seed: it folds BOTH
+halves of the PRNG key (typed or raw uint32) through the avalanching hash,
+so calls keyed by ``fold_in(key, l)`` -- the batched noise search's layer
+schedule -- land on distinct noise streams (the old scheme read only the
+last word and threw half the fold-in structure away).
 """
 from __future__ import annotations
 
@@ -38,35 +55,90 @@ def gauss_noise(idx: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
     return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
 
 
+def derive_seed(key) -> jnp.ndarray:
+    """Per-call uint32 noise seed from a PRNG key (typed or raw uint32).
+
+    Mixes BOTH key words through ``hash32`` (GOLDEN-salted) so the seed
+    tracks the full ``fold_in`` structure: fold_in changes both halves, and
+    either half changing changes the seed.  Works on tracers (the batched
+    noise search vmaps over per-probe keys).
+    """
+    if isinstance(key, jax.Array) and jnp.issubdtype(key.dtype,
+                                                     jax.dtypes.prng_key):
+        data = jax.random.key_data(key)
+    else:
+        data = jnp.asarray(key, jnp.uint32)
+    flat = data.reshape(-1).astype(jnp.uint32)
+    k0, k1 = flat[0], flat[-1]
+    return hash32(k0 ^ GOLDEN) ^ k1
+
+
+def _seg_scale(n_seg: int, n_chain: int, k_true: int) -> jnp.ndarray:
+    """(n_seg,) noise scale sqrt(live / n_chain): the tail segment holds
+    k_true - (n_seg - 1) * n_chain live cells (Eq. 5's sigma ~ sqrt(N)),
+    matching ``td_matmul_int`` exactly."""
+    live = jnp.minimum(
+        jnp.full((n_seg,), n_chain, jnp.float32),
+        jnp.maximum(k_true - jnp.arange(n_seg) * n_chain, 1).astype(jnp.float32))
+    return jnp.sqrt(live / n_chain)
+
+
 def td_vmm_ref(xu: jnp.ndarray, wu: jnp.ndarray, *, bits_a: int,
-               n_chain: int, sigma: float, tdc_q: int,
-               seed: jnp.ndarray) -> jnp.ndarray:
+               n_chain: int, sigma, tdc_q,
+               seed: jnp.ndarray, k_true: int | None = None) -> jnp.ndarray:
     """Bit-serial noisy VMM on *offset-encoded* (unsigned) operands.
 
     xu: (M, K) uint codes in [0, 2^bits_a); wu: (K, N) uint codes.
     Returns (M, N) float32:  sum_seg sum_b 2^b TDCround(plane_b @ w_seg + eps).
-    K must already be padded to a multiple of n_chain.
+    K must already be padded to a multiple of n_chain; ``k_true`` (default K)
+    sets the tail segment's live-cell count for the noise scale.
+    ``sigma`` / ``tdc_q`` may be python floats or traced jax scalars -- the
+    noise and TDC branches are always evaluated (sigma = 0 adds exactly 0,
+    tdc_q <= 1 rounds to the unit LSB), so the same program serves the
+    whole (sigma, q) sweep without recompiling.
     """
     m, k = xu.shape
     n = wu.shape[1]
     n_seg = k // n_chain
+    if k_true is None:
+        k_true = k
+    sigma = jnp.asarray(sigma, jnp.float32)
+    q = jnp.maximum(jnp.asarray(tdc_q, jnp.float32), 1.0)
+    scale = _seg_scale(n_seg, n_chain, k_true)            # (n_seg,)
     w_seg = wu.reshape(n_seg, n_chain, n).astype(jnp.float32)
     out = jnp.zeros((m, n), jnp.float32)
     for b in range(bits_a):
         plane = ((xu >> b) & 1).reshape(m, n_seg, n_chain).astype(jnp.float32)
         partial = jnp.einsum("msk,skn->msn", plane, w_seg)
-        if sigma > 0.0:
-            # linear noise index: ((b*n_seg + seg)*M + row)*N + col
-            seg_i = jnp.arange(n_seg, dtype=jnp.uint32)
-            row_i = jnp.arange(m, dtype=jnp.uint32)
-            col_i = jnp.arange(n, dtype=jnp.uint32)
-            idx = ((jnp.uint32(b) * n_seg + seg_i[None, :, None])
-                   * jnp.uint32(m) + row_i[:, None, None]) \
-                * jnp.uint32(n) + col_i[None, None, :]
-            partial = partial + sigma * gauss_noise(idx, seed)
-        if tdc_q > 1:
-            partial = tdc_q * jnp.round(partial / tdc_q)
-        else:
-            partial = jnp.round(partial)
+        # linear noise index: ((b*n_seg + seg)*M + row)*N + col
+        seg_i = jnp.arange(n_seg, dtype=jnp.uint32)
+        row_i = jnp.arange(m, dtype=jnp.uint32)
+        col_i = jnp.arange(n, dtype=jnp.uint32)
+        idx = ((jnp.uint32(b) * n_seg + seg_i[None, :, None])
+               * jnp.uint32(m) + row_i[:, None, None]) \
+            * jnp.uint32(n) + col_i[None, None, :]
+        partial = partial + (sigma * scale)[None, :, None] \
+            * gauss_noise(idx, seed)
+        partial = q * jnp.round(partial / q)
         out = out + (2.0 ** b) * partial.sum(1)
     return out
+
+
+def td_vmm_signed_ref(x_int: jnp.ndarray, w_int: jnp.ndarray, *, bits_a: int,
+                      bits_w: int, n_chain: int, sigma, tdc_q,
+                      seed: jnp.ndarray) -> jnp.ndarray:
+    """Fused-wrapper oracle: signed codes in, exact offset-encoding /
+    correction side-sum semantics of ``ops.td_vmm`` (padding handled by
+    masking the contraction tail to code 0, i.e. zero offset weight)."""
+    m, k = x_int.shape
+    n = w_int.shape[1]
+    ox, ow = 2 ** (bits_a - 1), 2 ** (bits_w - 1)
+    n_seg = max(1, -(-k // n_chain))
+    k_pad = n_seg * n_chain
+    xu = jnp.pad(x_int + ox, ((0, 0), (0, k_pad - k)))
+    wu = jnp.pad(w_int + ow, ((0, k_pad - k), (0, 0)))
+    main = td_vmm_ref(xu, wu, bits_a=bits_a, n_chain=n_chain, sigma=sigma,
+                      tdc_q=tdc_q, seed=seed, k_true=k)
+    corr_w = ox * wu.sum(0).astype(jnp.float32)
+    corr_x = ow * xu.sum(-1, keepdims=True).astype(jnp.float32)
+    return main - corr_w[None, :] - corr_x + k * ox * ow

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel for the bit-serial noisy TD-VMM.
+"""Pallas TPU kernel for the bit-serial noisy TD-VMM — the production TD
+execution engine (every ``mode == "td"`` matmul runs here).
 
 Hardware mapping (TPU adaptation of the paper's scheme — DESIGN.md §2):
 one chain segment (length n_chain) of one output column is a "hardware
@@ -7,19 +8,47 @@ MXU once per activation bit-plane, adds the per-chain Gaussian error from a
 counter-based hash (no HBM RNG traffic), applies TDC rounding, and
 accumulates 2^b-weighted partials into the fp32 output tile held in VMEM.
 
+Fused wrapper semantics: the kernel takes *signed* LSQ codes and performs
+offset encoding, contraction-tail masking (padding), bit-plane extraction
+and the exact digital correction side-sums (popcount / static weight sum)
+per tile — no offset tensor, no (Ba, ..., K) plane tensor and no
+correction intermediates are ever materialized in HBM.
+
+Runtime operands: ``sigma`` (chain noise std) and ``tdc_q`` (TDC LSB
+coarsening) arrive as a (2,) float32 SMEM scalar operand, NOT as
+compile-time constants — the noise and TDC branches are always traced
+(sigma = 0 adds exactly 0; q <= 1 rounds to the unit LSB), so one compiled
+program serves the whole noise-tolerance sweep with traced sigma under
+vmap, with zero recompiles.  The per-bit plane loop is a
+``lax.fori_loop``, keeping trace size constant up to bits_a = 8.
+
 Grid: (M/bm, N/bn, K/n_chain) — K innermost so the output tile is revisited
-and accumulated in place.  BlockSpecs keep all three tiles in VMEM; the
-operand tiles are int8-ranged (codes), so the MXU dot runs at int8 density
-on real hardware (dot with preferred_element_type=float32).
+and accumulated in place.
+
+Interpret policy: ``interpret=None`` (the default) compiles on a TPU
+backend and falls back to interpret mode elsewhere (CPU CI); the env var
+``REPRO_TD_VMM_INTERPRET=0|1`` overrides both.  In interpret mode the
+default tile is the whole (padded) output — the interpreter pays per grid
+step, not per byte of VMEM — while the compiled default is the MXU-shaped
+128 x 128.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+try:  # pltpu is importable without a TPU; guard for exotic builds anyway
+    from jax.experimental.pallas import tpu as pltpu
+    _SCALAR_SPACE = pltpu.SMEM
+except Exception:  # pragma: no cover
+    _SCALAR_SPACE = pl.ANY
+
+# GOLDEN salts the second Box-Muller hash stream and the seed derivation
+# (ref.derive_seed) so one uint32 seed yields independent streams.
 GOLDEN = 0x9E3779B9
 
 
@@ -37,83 +66,144 @@ def _uniform(bits):
         + (0.5 / (1 << 24))
 
 
-def _td_vmm_kernel(x_ref, w_ref, seed_ref, o_ref, *, bits_a: int,
-                   sigma: float, tdc_q: int, n_seg: int,
-                   m_total: int, n_total: int, bm: int, bn: int):
-    """One (bm, bn) output tile, one chain segment (k-step)."""
+def default_interpret() -> bool:
+    """Interpret policy: env override, else compile iff a TPU backend is up."""
+    env = os.environ.get("REPRO_TD_VMM_INTERPRET")
+    if env is not None:
+        return env.strip().lower() in ("1", "true", "yes")
+    return jax.default_backend() != "tpu"
+
+
+def _td_vmm_kernel(par_ref, seed_ref, x_ref, w_ref, o_ref, *, bits_a: int,
+                   bits_w: int, n_chain: int, n_seg: int, m_total: int,
+                   n_total: int, k_true: int, bm: int, bn: int):
+    """One (bm, bn) output tile, one chain segment (k-step), signed codes."""
     seg = pl.program_id(2)
     i = pl.program_id(0)
     j = pl.program_id(1)
+    ox = 2 ** (bits_a - 1)
+    ow = 2 ** (bits_w - 1)
 
     @pl.when(seg == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        # the +K*ox*ow term of the offset-correction identity
+        o_ref[...] = jnp.full(o_ref.shape, jnp.float32(k_true * ox * ow))
 
-    x = x_ref[...].astype(jnp.int32)            # (bm, n_chain) offset codes
-    w = w_ref[...].astype(jnp.float32)          # (n_chain, bn)
+    sigma = par_ref[0]                          # runtime scalar operands
+    q = jnp.maximum(par_ref[1], 1.0)
     seed = seed_ref[0]
 
-    acc = jnp.zeros(o_ref.shape, jnp.float32)
-    for b in range(bits_a):
+    # offset-encode in tile; contraction positions past k_true encode 0
+    # (zero offset weight) so padding contributes nothing to dot or side-sums
+    kpos = seg * n_chain + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (1, n_chain), 1)
+    live = kpos < k_true
+    x = jnp.where(live, x_ref[...] + ox, 0)                  # (bm, n_chain)
+    w = jnp.where(live.reshape(n_chain, 1),
+                  (w_ref[...] + ow).astype(jnp.float32), 0.0)  # (n_chain, bn)
+
+    # tail segment holds k_true - (n_seg-1)*n_chain live cells: Eq. 5's
+    # sigma ~ sqrt(N) scaling, identical to td_matmul_int / the ref oracle
+    n_live = jnp.minimum(
+        jnp.float32(n_chain),
+        jnp.maximum(jnp.float32(k_true) - seg.astype(jnp.float32) * n_chain,
+                    1.0))
+    sig_seg = sigma * jnp.sqrt(n_live / jnp.float32(n_chain))
+
+    # noise indices use the TRUE (m, n): identical to the ref oracle; padded
+    # rows/cols may collide but are sliced away by the wrapper.
+    row = (jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 0)
+           + jnp.uint32(bm) * i.astype(jnp.uint32))
+    col = (jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 1)
+           + jnp.uint32(bn) * j.astype(jnp.uint32))
+
+    def plane_step(b, acc):
+        bu = b.astype(jnp.uint32)
         plane = ((x >> b) & 1).astype(jnp.float32)
         partial = jax.lax.dot(plane, w,
                               preferred_element_type=jnp.float32)
-        if sigma > 0.0:
-            row = (jax.lax.broadcasted_iota(jnp.uint32, partial.shape, 0)
-                   + jnp.uint32(i * bm))
-            col = (jax.lax.broadcasted_iota(jnp.uint32, partial.shape, 1)
-                   + jnp.uint32(j * bn))
-            idx = ((jnp.uint32(b) * jnp.uint32(n_seg)
-                    + jnp.uint32(seg)) * jnp.uint32(m_total) + row) \
-                * jnp.uint32(n_total) + col
-            h1 = _hash32(idx ^ seed)
-            h2 = _hash32(idx ^ seed ^ jnp.uint32(GOLDEN))
-            z = jnp.sqrt(-2.0 * jnp.log(_uniform(h1))) \
-                * jnp.cos(2.0 * jnp.pi * _uniform(h2))
-            partial = partial + sigma * z
-        if tdc_q > 1:
-            partial = tdc_q * jnp.round(partial * (1.0 / tdc_q))
-        else:
-            partial = jnp.round(partial)
-        acc = acc + (2.0 ** b) * partial
-    o_ref[...] += acc
+        idx = ((bu * jnp.uint32(n_seg) + seg.astype(jnp.uint32))
+               * jnp.uint32(m_total) + row) * jnp.uint32(n_total) + col
+        h1 = _hash32(idx ^ seed)
+        h2 = _hash32(idx ^ seed ^ jnp.uint32(GOLDEN))
+        z = jnp.sqrt(-2.0 * jnp.log(_uniform(h1))) \
+            * jnp.cos(2.0 * jnp.pi * _uniform(h2))
+        partial = partial + sig_seg * z
+        partial = q * jnp.round(partial / q)
+        w2b = jax.lax.shift_left(jnp.int32(1), b).astype(jnp.float32)
+        return acc + w2b * partial
+
+    acc = jax.lax.fori_loop(0, bits_a, plane_step,
+                            jnp.zeros(o_ref.shape, jnp.float32))
+
+    # fused digital corrections: per-segment popcount / static weight sums
+    # accumulate to the exact -ox*sum(w') - ow*sum(x') side terms
+    corr = jnp.float32(ow) * x.astype(jnp.float32).sum(1, keepdims=True) \
+        + jnp.float32(ox) * w.sum(0, keepdims=True)
+    o_ref[...] += acc - corr
 
 
-@functools.partial(jax.jit, static_argnames=("bits_a", "n_chain", "sigma",
-                                             "tdc_q", "bm", "bn",
+def td_vmm_pallas(x_int: jnp.ndarray, w_int: jnp.ndarray,
+                  params: jnp.ndarray, seed: jnp.ndarray, *, bits_a: int,
+                  bits_w: int, n_chain: int, k_true: int | None = None,
+                  bm: int | None = None, bn: int | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """x_int (M, K) / w_int (K, N) SIGNED codes; K % n_chain == 0 (pad with
+    anything — positions >= k_true are masked in-kernel).  ``params`` is the
+    (2,) float32 runtime scalar operand [sigma_chain, tdc_q]; ``seed`` a
+    uint32 scalar (see ref.derive_seed).  M, N are padded up to tile
+    multiples internally.  ``interpret=None`` resolves via
+    ``default_interpret()`` here, OUTSIDE the jit, so the env override is
+    honoured on every call (resolved values are the jit cache key)."""
+    m = x_int.shape[0]
+    n = w_int.shape[1]
+    if interpret is None:
+        interpret = default_interpret()
+    if k_true is None:
+        k_true = x_int.shape[1]
+    # interpret mode pays per grid step, not per byte of VMEM: default to
+    # whole-output tiles (grid = segments only); compiled mode to MXU tiles
+    if bm is None:
+        bm = m if interpret else 128
+    if bn is None:
+        bn = n if interpret else 128
+    return _td_vmm_call(x_int, w_int, params, seed, bits_a=bits_a,
+                        bits_w=bits_w, n_chain=n_chain, k_true=k_true,
+                        bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits_a", "bits_w", "n_chain",
+                                             "k_true", "bm", "bn",
                                              "interpret"))
-def td_vmm_pallas(xu: jnp.ndarray, wu: jnp.ndarray, seed: jnp.ndarray,
-                  *, bits_a: int, n_chain: int, sigma: float, tdc_q: int,
-                  bm: int = 128, bn: int = 128,
-                  interpret: bool = True) -> jnp.ndarray:
-    """xu (M, K) / wu (K, N) offset-encoded codes; K % n_chain == 0.
-    M, N are padded up to tile multiples internally."""
-    m, k = xu.shape
-    n = wu.shape[1]
+def _td_vmm_call(x_int: jnp.ndarray, w_int: jnp.ndarray,
+                 params: jnp.ndarray, seed: jnp.ndarray, *, bits_a: int,
+                 bits_w: int, n_chain: int, k_true: int,
+                 bm: int, bn: int, interpret: bool) -> jnp.ndarray:
+    m, k = x_int.shape
+    n = w_int.shape[1]
     assert k % n_chain == 0, "pad K to a multiple of n_chain first"
     n_seg = k // n_chain
     m_pad = -(-m // bm) * bm
     n_pad = -(-n // bn) * bn
-    xu_p = jnp.pad(xu, ((0, m_pad - m), (0, 0))).astype(jnp.int32)
-    wu_p = jnp.pad(wu, ((0, 0), (0, n_pad - n))).astype(jnp.int32)
-    seed_arr = jnp.asarray([seed], jnp.uint32) if jnp.ndim(seed) == 0 \
-        else seed.astype(jnp.uint32).reshape(1)
+    x_p = jnp.pad(x_int, ((0, m_pad - m), (0, 0))).astype(jnp.int32)
+    w_p = jnp.pad(w_int, ((0, 0), (0, n_pad - n))).astype(jnp.int32)
+    params = jnp.asarray(params, jnp.float32).reshape(2)
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1)
 
-    # noise indices use the TRUE (m, n): identical to the ref oracle; padded
-    # rows/cols may collide but are sliced away below.
     kern = functools.partial(
-        _td_vmm_kernel, bits_a=bits_a, sigma=sigma, tdc_q=tdc_q,
-        n_seg=n_seg, m_total=m, n_total=n, bm=bm, bn=bn)
+        _td_vmm_kernel, bits_a=bits_a, bits_w=bits_w, n_chain=n_chain,
+        n_seg=n_seg, m_total=m, n_total=n, k_true=k_true, bm=bm, bn=bn)
     out = pl.pallas_call(
         kern,
         grid=(m_pad // bm, n_pad // bn, n_seg),
         in_specs=[
+            pl.BlockSpec(memory_space=_SCALAR_SPACE),
+            pl.BlockSpec(memory_space=_SCALAR_SPACE),
             pl.BlockSpec((bm, n_chain), lambda i, j, s: (i, s)),
             pl.BlockSpec((n_chain, bn), lambda i, j, s: (s, j)),
-            pl.BlockSpec(memory_space=pl.ANY),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
         interpret=interpret,
-    )(xu_p, wu_p, seed_arr)
+    )(params, seed_arr, x_p, w_p)
     return out[:m, :n]

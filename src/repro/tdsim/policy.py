@@ -48,7 +48,9 @@ class TDPolicy:
     vdd: float = C.VDD_NOM       # operating supply the (R, q) solve assumed
     sigma_max: float | None = None   # error budget the solve ran at
                                      # (None = exact regime / not solved)
-    use_pallas: bool = False     # route through the Pallas kernel
+    use_pallas: bool = True      # vestigial: every "td" matmul runs the
+                                 # Pallas kernel (kernels.td_vmm.ops);
+                                 # kept for config compatibility only
 
     def replace(self, **kw) -> "TDPolicy":
         return dataclasses.replace(self, **kw)
@@ -74,7 +76,7 @@ class TDLayerSpec:
     n_chain: int = C.N_BASELINE
     sigma_max: float | None = None
     vdd: float = C.VDD_NOM
-    use_pallas: bool = False
+    use_pallas: bool = True      # vestigial, see TDPolicy.use_pallas
     p_x_one: float = C.P_X_ONE
     w_bit_sparsity: float = C.W_BIT_SPARSITY
     m: int = C.M_DEFAULT
@@ -209,7 +211,7 @@ def pol_top(pol) -> TDPolicy:
 
 def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
                            n_chain=C.N_BASELINE, vdd=C.VDD_NOM,
-                           use_pallas: bool = False,
+                           use_pallas: bool = True,
                            top: TDPolicy = PRECISE,
                            scenario=None, corner=None,
                            minimize_vdd: bool = True) -> NetworkPolicy:
@@ -250,7 +252,7 @@ def solve_td_policy(bits_a: int = 4, bits_w: int = 4,
                     n_chain: int = C.N_BASELINE,
                     sigma_max: float | None = None,
                     vdd: float = C.VDD_NOM,
-                    use_pallas: bool = False) -> TDPolicy:
+                    use_pallas: bool = True) -> TDPolicy:
     """Single-layer wrapper over the batched solver."""
     return solve_td_policies([TDLayerSpec(bits_a, bits_w, n_chain, sigma_max,
                                           vdd, use_pallas)])[0]

@@ -3,34 +3,45 @@ the paper's time-domain hardware would.
 
 Pipeline (mode == "td"):
   1. LSQ-quantize x (bits_a, signed) and w (bits_w, signed) to integer codes.
-  2. Offset-encode both (TD hardware has no negative delays).
-  3. For each activation bit-plane b (bit-serial, LSB first):
-       for each chain segment s of length n_chain along the contraction dim:
-         partial[b, s] = x_b[s] . w'[s]  +  eps,  eps ~ N(0, sigma_chain^2)
-         partial      <- tdc_q * round(partial / tdc_q)      (TDC conversion)
-  4. Recompose: y_int = sum_b 2^b sum_s partial[b, s], apply the exact
-     offset-correction side-sums, dequantize with s_a * s_w.
-  5. Straight-through gradients: y = y_fq + stop_grad(y_td - y_fq) where
-     y_fq is the differentiable LSQ fake-quant matmul.
+  2. Run the fused Pallas kernel (`kernels.td_vmm.ops.td_vmm`): offset
+     encoding, bit-serial planes (LSB first), per-chain-segment noise
+     eps ~ N(0, sigma_chain^2) from the in-kernel counter hash, TDC rounding
+     partial <- tdc_q * round(partial / tdc_q), 2^b recomposition and the
+     exact offset-correction side-sums — all in one kernel launch.
+  3. Dequantize with s_a * s_w.
+  4. Straight-through gradients via `jax.custom_vjp`: the forward is the
+     Pallas value alone; the backward is the fake-quant LSQ matmul's
+     gradient (recomputed in the bwd pass), so inference and the noisy
+     forward never pay for the fake-quant matmul.
 
-With sigma_chain == 0 and tdc_q == 1 the result is bit-exact equal to the
-fake-quant matmul (tested).  The per-segment noise std scales with
-sqrt(segment_len / n_chain) for the (shorter) tail segment, matching
-Eq. 5's sigma ~ sqrt(N).
+The Pallas kernel is the ONE TD execution engine: `sigma_chain` and `tdc_q`
+ride into it as runtime scalar operands, so a *traced* sigma (a policy
+built inside a jitted/vmapped function via `pol.replace(sigma_chain=x)`)
+runs the exact same compiled kernel — this is what lets
+`core.noise_tolerance.find_sigma_max_batched` sweep the whole
+(layer x sigma x repeat) grid in one compiled program with zero recompiles.
+Such trace-local policies must not be used as jit static arguments or dict
+keys (the array field is unhashable).
 
-`pol.sigma_chain` may also be a *traced* jax scalar (a policy built inside a
-jitted/vmapped function via `pol.replace(sigma_chain=x)`): the noise branch
-is then taken unconditionally and the injected std follows the traced value.
-This is what lets `core.noise_tolerance.find_sigma_max_batched` sweep the
-whole (layer x sigma x repeat) grid in one compiled program instead of
-recompiling per sigma.  Such trace-local policies must not be used as jit
-static arguments or dict keys (the array field is unhashable).
+`td_matmul_int` remains as the pure-jnp reference simulator (threefry
+noise, materialized bit planes) for tests, moment checks and the
+`bench_td_vmm` speed gate — it is no longer on any runtime path.
+
+With sigma_chain == 0 and tdc_q == 1 the kernel result is bit-exact equal
+to the integer fake-quant product (tested).  The per-segment noise std
+scales with sqrt(segment_len / n_chain) for the (shorter) tail segment,
+matching Eq. 5's sigma ~ sqrt(N) on both engines.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.td_vmm import ops as td_ops
+from repro.kernels.td_vmm import ref as td_ref
 from repro.quant import bitserial, lsq
 from repro.tdsim.policy import TDPolicy
 
@@ -49,8 +60,11 @@ def _segment(k: int, n_chain: int) -> tuple[int, int]:
 
 def td_matmul_int(x_int: jnp.ndarray, w_int: jnp.ndarray, pol: TDPolicy,
                   key: jax.Array) -> jnp.ndarray:
-    """Integer-domain noisy TD matmul.  x_int (..., K) and w_int (K, N) are
-    *signed* LSQ codes; returns the (noisy) integer product (..., N)."""
+    """Integer-domain noisy TD matmul — pure-jnp REFERENCE simulator
+    (threefry noise, materialized planes; the runtime path is the Pallas
+    kernel via `kernels.td_vmm.ops.td_vmm`).  x_int (..., K) and w_int
+    (K, N) are *signed* LSQ codes; returns the (noisy) integer product
+    (..., N)."""
     k, n_out = w_int.shape
     n_seg, k_pad = _segment(k, pol.n_chain)
     ox = bitserial.offset_of(pol.bits_a)
@@ -97,35 +111,66 @@ def td_matmul_int(x_int: jnp.ndarray, w_int: jnp.ndarray, pol: TDPolicy,
     return main - corr_w - corr_x + k * ox * ow
 
 
+def _fq_matmul(x, w, s_a, s_w, bits_a: int, bits_w: int):
+    """Differentiable fake-quant LSQ matmul — the STE backward function."""
+    x_fq = lsq.lsq_fake_quant(x, s_a, bits_a, signed=True)
+    w_fq = lsq.lsq_fake_quant(w, s_w, bits_w, signed=True)
+    return x_fq @ w_fq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _td_matmul_ste(pol_static: TDPolicy, x, w, s_a, s_w, sigma, seed):
+    """Pallas forward / fake-quant backward.  ``pol_static`` is the hashable
+    policy skeleton (sigma_chain stripped to 0.0); the live sigma rides in
+    as the traced ``sigma`` operand, the noise seed as uint32 ``seed``."""
+    x_int = lsq.lsq_quantize_int(x, s_a, pol_static.bits_a, signed=True)
+    w_int = lsq.lsq_quantize_int(w, s_w, pol_static.bits_w, signed=True)
+    pol = pol_static.replace(sigma_chain=sigma)
+    y_int = td_ops.td_vmm_seeded(x_int, w_int, pol, seed)
+    y = y_int * (jnp.maximum(s_a, 1e-8) * jnp.maximum(s_w, 1e-8))
+    return y.astype(jnp.result_type(x, w))
+
+
+def _td_matmul_ste_fwd(pol_static, x, w, s_a, s_w, sigma, seed):
+    y = _td_matmul_ste(pol_static, x, w, s_a, s_w, sigma, seed)
+    return y, (x, w, s_a, s_w)
+
+
+def _td_matmul_ste_bwd(pol_static, res, g):
+    x, w, s_a, s_w = res
+    _, vjp = jax.vjp(
+        lambda a, b, c, d: _fq_matmul(a, b, c, d, pol_static.bits_a,
+                                      pol_static.bits_w),
+        x, w, s_a, s_w)
+    gx, gw, gsa, gsw = vjp(g.astype(jnp.result_type(x, w)))
+    return (gx, gw, gsa, gsw, jnp.zeros((), jnp.float32),
+            np.zeros((), jax.dtypes.float0))
+
+
+_td_matmul_ste.defvjp(_td_matmul_ste_fwd, _td_matmul_ste_bwd)
+
+
 def td_matmul(x: jnp.ndarray, w: jnp.ndarray,
               s_a: jnp.ndarray, s_w: jnp.ndarray,
               pol: TDPolicy, key: jax.Array | None = None) -> jnp.ndarray:
     """Full TD-simulated matmul with LSQ scales and STE gradients.
 
     x: (..., K) activations; w: (K, N) weights; s_a/s_w: LSQ step sizes.
+    In "td" mode the forward is the fused Pallas kernel (traced or static
+    sigma alike — no jnp-simulator path) and the backward is the fake-quant
+    gradient via `custom_vjp`.
     """
     if pol.mode == "precise":
         return x @ w
-    x_fq = lsq.lsq_fake_quant(x, s_a, pol.bits_a, signed=True)
-    w_fq = lsq.lsq_fake_quant(w, s_w, pol.bits_w, signed=True)
-    y_fq = x_fq @ w_fq
     if pol.mode == "quant":
-        return y_fq
+        return _fq_matmul(x, w, s_a, s_w, pol.bits_a, pol.bits_w)
     assert pol.mode == "td", pol.mode
     if key is None:
         key = jax.random.PRNGKey(0)
-    x_int = lsq.lsq_quantize_int(x, s_a, pol.bits_a, signed=True)
-    w_int = lsq.lsq_quantize_int(w, s_w, pol.bits_w, signed=True)
-    if pol.use_pallas and not isinstance(pol.sigma_chain, jax.Array):
-        # the pallas kernel bakes sigma in as a compile-time float; traced
-        # sigma (noise-tolerance sweeps) routes through the jnp simulator
-        from repro.kernels.td_vmm import ops as td_ops
-        y_int = td_ops.td_vmm(x_int, w_int, pol, key)
-    else:
-        y_int = td_matmul_int(x_int, w_int, pol, key)
-    y_td = y_int * (jnp.maximum(s_a, 1e-8) * jnp.maximum(s_w, 1e-8))
-    # straight-through: exact td forward, fake-quant backward
-    return y_fq + jax.lax.stop_gradient(y_td.astype(y_fq.dtype) - y_fq)
+    seed = td_ref.derive_seed(key)
+    sigma = jnp.asarray(pol.sigma_chain, jnp.float32)
+    pol_static = pol.replace(sigma_chain=0.0)
+    return _td_matmul_ste(pol_static, x, w, s_a, s_w, sigma, seed)
 
 
 def linear(params: dict, x: jnp.ndarray, pol: TDPolicy,

@@ -17,35 +17,66 @@ from repro.kernels.td_vmm.td_vmm import td_vmm_pallas
 
 class TestTdVmmKernel:
     @pytest.mark.parametrize("m,k,n,n_chain,bm,bn", [
-        (16, 32, 16, 32, 16, 16),
-        (48, 96, 40, 32, 16, 16),
-        (33, 64, 17, 64, 16, 16),      # non-divisible M/N -> padding
-        (128, 576, 64, 576, 64, 64),   # paper-baseline chain length
+        (16, 32, 16, 32, 16, 128),
+        (48, 96, 40, 32, 16, 128),
+        (33, 64, 17, 64, 16, 128),     # non-divisible M/N -> padding
+        (128, 576, 64, 576, 64, 128),  # paper-baseline chain length
+        (16, 70, 12, 32, 16, 128),     # ragged K -> masked tail segment
     ])
     @pytest.mark.parametrize("sigma,q", [(0.0, 1), (1.5, 1), (2.5, 3)])
-    def test_matches_ref(self, m, k, n, n_chain, bm, bn, sigma, q):
+    def test_matches_signed_ref(self, m, k, n, n_chain, bm, bn, sigma, q):
+        """Runtime (sigma, q) operands against the fused signed oracle."""
         key = jax.random.PRNGKey(m * 1000 + n)
         kx, kw = jax.random.split(key)
-        xu = jax.random.randint(kx, (m, k), 0, 16, jnp.int32)
-        wu = jax.random.randint(kw, (k, n), 0, 16, jnp.int32)
+        xi = jax.random.randint(kx, (m, k), -8, 8, jnp.int32)
+        wi = jax.random.randint(kw, (k, n), -8, 8, jnp.int32)
         seed = jnp.uint32(77)
-        r = td_ref.td_vmm_ref(xu, wu, bits_a=4, n_chain=n_chain, sigma=sigma,
-                              tdc_q=q, seed=seed)
-        p = td_vmm_pallas(xu, wu, seed, bits_a=4, n_chain=n_chain,
-                          sigma=sigma, tdc_q=q, bm=bm, bn=bn)
+        r = td_ref.td_vmm_signed_ref(xi, wi, bits_a=4, bits_w=4,
+                                     n_chain=n_chain, sigma=sigma, tdc_q=q,
+                                     seed=seed)
+        n_seg = -(-k // n_chain)
+        xi_p = jnp.pad(xi, ((0, 0), (0, n_seg * n_chain - k)))
+        wi_p = jnp.pad(wi, ((0, n_seg * n_chain - k), (0, 0)))
+        p = td_vmm_pallas(xi_p, wi_p,
+                          jnp.asarray([sigma, q], jnp.float32), seed,
+                          bits_a=4, bits_w=4, n_chain=n_chain, k_true=k,
+                          bm=bm, bn=bn)
         np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
 
     @pytest.mark.parametrize("bits_a", [1, 2, 4, 8])
     def test_bit_widths(self, bits_a):
         key = jax.random.PRNGKey(bits_a)
         kx, kw = jax.random.split(key)
-        xu = jax.random.randint(kx, (8, 64), 0, 2 ** bits_a, jnp.int32)
-        wu = jax.random.randint(kw, (64, 8), 0, 16, jnp.int32)
-        r = td_ref.td_vmm_ref(xu, wu, bits_a=bits_a, n_chain=32, sigma=0.5,
-                              tdc_q=1, seed=jnp.uint32(3))
-        p = td_vmm_pallas(xu, wu, jnp.uint32(3), bits_a=bits_a, n_chain=32,
-                          sigma=0.5, tdc_q=1, bm=8, bn=8)
+        lo, hi = -(2 ** (bits_a - 1)), 2 ** (bits_a - 1)
+        xi = jax.random.randint(kx, (8, 64), lo, hi, jnp.int32)
+        wi = jax.random.randint(kw, (64, 8), -8, 8, jnp.int32)
+        r = td_ref.td_vmm_signed_ref(xi, wi, bits_a=bits_a, bits_w=4,
+                                     n_chain=32, sigma=0.5, tdc_q=1,
+                                     seed=jnp.uint32(3))
+        p = td_vmm_pallas(xi, wi, jnp.asarray([0.5, 1.0], jnp.float32),
+                          jnp.uint32(3), bits_a=bits_a, bits_w=4,
+                          n_chain=32, bm=8, bn=128)
         np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+    def test_runtime_sigma_q_one_program(self):
+        """sigma / tdc_q are runtime operands: sweeping them must not leave
+        the first compiled program (same static shapes -> same jit cache
+        entry), and each point must match the oracle."""
+        key = jax.random.PRNGKey(5)
+        kx, kw = jax.random.split(key)
+        xi = jax.random.randint(kx, (16, 64), -8, 8, jnp.int32)
+        wi = jax.random.randint(kw, (64, 16), -8, 8, jnp.int32)
+        seed = jnp.uint32(11)
+        from repro.kernels.td_vmm.td_vmm import _td_vmm_call
+        misses0 = _td_vmm_call._cache_size()
+        for sigma, q in [(0.0, 1.0), (0.7, 1.0), (2.0, 4.0)]:
+            p = td_vmm_pallas(xi, wi, jnp.asarray([sigma, q], jnp.float32),
+                              seed, bits_a=4, bits_w=4, n_chain=32)
+            r = td_ref.td_vmm_signed_ref(xi, wi, bits_a=4, bits_w=4,
+                                         n_chain=32, sigma=sigma, tdc_q=q,
+                                         seed=seed)
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+        assert _td_vmm_call._cache_size() - misses0 <= 1
 
     def test_hash_noise_is_standard_normal(self):
         idx = jnp.arange(100000, dtype=jnp.uint32)
