@@ -34,13 +34,14 @@ SCALAR_SAMPLE = 48
 OUT_DIR = os.path.join("artifacts", "design_grid")
 
 PARETO_HEADER = ["domain", "n", "bits", "sigma_max", "vdd", "p_x_one",
-                 "w_bit_sparsity", "m", "e_mac", "throughput",
+                 "w_bit_sparsity", "m", "tdc_arch", "e_mac", "throughput",
                  "area_per_mac", "redundancy", "tdc_q", "latency"]
 CROSSOVER_HEADER = ["metric", "bits", "sigma_max", "vdd", "p_x_one",
-                    "w_bit_sparsity", "n_low", "n_high", "domain_low",
-                    "domain_high"]
+                    "w_bit_sparsity", "m", "tdc_arch", "n_low", "n_high",
+                    "domain_low", "domain_high"]
 INTERVAL_HEADER = ["domain", "metric", "bits", "sigma_max", "vdd",
-                   "p_x_one", "w_bit_sparsity", "n_min", "n_max", "wins"]
+                   "p_x_one", "w_bit_sparsity", "m", "tdc_arch", "n_min",
+                   "n_max", "wins"]
 
 
 def write_artifacts(grid, out_dir: str = OUT_DIR) -> list[str]:
@@ -96,7 +97,7 @@ def run() -> list[str]:
         for d in ds.DOMAINS:
             pts[d] = ds.evaluate(d, n, b, SIGMA, vdd=v)
         w_scalar = min(pts, key=lambda d: pts[d].e_mac)
-        ix = (BITS.index(b), NS.index(n), 0, VDDS.index(v), 0, 0)
+        ix = (BITS.index(b), NS.index(n), 0, VDDS.index(v), 0, 0, 0, 0)
         mismatch += w_scalar != g.winner_names()[ix]
     t_scalar_sample = time.perf_counter() - t0
     t_scalar = t_scalar_sample / (len(sample) * len(ds.DOMAINS)) * n_pts

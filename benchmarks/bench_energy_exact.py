@@ -20,14 +20,14 @@ def run() -> list[str]:
     total = 0
     for ni, n in enumerate(NS):
         for bi, b in enumerate(BITS):
-            w = winners[bi, ni, 0, 0, 0, 0]
+            w = winners[bi, ni, 0, 0, 0, 0, 0, 0]
             digital_wins += w == "digital"
             total += 1
             cells = ",".join(
-                f"{d}_J={g.e_mac[di, bi, ni, 0, 0, 0, 0]:.3e}"
+                f"{d}_J={g.e_mac[di, bi, ni, 0, 0, 0, 0, 0, 0]:.3e}"
                 for di, d in enumerate(g.domains))
             rows.append(f"fig9_energy_exact,N={n},B={b},{cells},"
-                        f"td_R={g.redundancy[0, bi, ni, 0, 0, 0, 0]},winner={w}")
+                        f"td_R={g.redundancy[0, bi, ni, 0, 0, 0, 0, 0, 0]},winner={w}")
     us = dt * 1e6 / total
     rows.append(f"fig9_energy_exact,us_per_call={us:.1f},"
                 f"derived=digital_win_fraction={digital_wins/total:.2f}"

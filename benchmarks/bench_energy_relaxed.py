@@ -23,16 +23,16 @@ def run() -> list[str]:
     regions = {}
     for ni, n in enumerate(NS):
         for bi, b in enumerate(BITS):
-            w = winners[bi, ni, 0, 0, 0, 0]
+            w = winners[bi, ni, 0, 0, 0, 0, 0, 0]
             if b == 4:
                 regions[n] = w
             cells = ",".join(
-                f"{d}_J={g.e_mac[di, bi, ni, 0, 0, 0, 0]:.3e}"
+                f"{d}_J={g.e_mac[di, bi, ni, 0, 0, 0, 0, 0, 0]:.3e}"
                 for di, d in enumerate(g.domains))
             rows.append(
                 f"fig11_energy_relaxed,N={n},B={b},{cells},"
-                f"td_R={g.redundancy[td_i, bi, ni, 0, 0, 0, 0]},"
-                f"td_q={g.tdc_q[td_i, bi, ni, 0, 0, 0, 0]},winner={w}")
+                f"td_R={g.redundancy[td_i, bi, ni, 0, 0, 0, 0, 0, 0]},"
+                f"td_q={g.tdc_q[td_i, bi, ni, 0, 0, 0, 0, 0, 0]},winner={w}")
     # the paper's qualitative claim as a queryable crossover record
     for x in ds.domain_crossovers(g):
         if x["bits"] == 4:

@@ -2,16 +2,22 @@
 
 Gates:
   * the `dense` scenario -- the full (domain x N x B x sigma x Vdd x
-    activity x sparsity) product, >= 10^5 grid points per corner --
-    evaluates as ONE jitted call, timed in steady state;
+    activity x sparsity x m x tdc_arch) product, >= 10^5 grid points per
+    corner -- evaluates as ONE jitted call, timed in steady state;
   * `td_vdd_optimized` is reproduced exactly by the grid argmin
     (`minimize_over_vdd`) on the `vdd-opt` scenario: same winning supply,
-    same energy, for every sampled (N, B) point.
+    same energy, for every sampled (N, B) point;
+  * corner *device physics* diverges the winner maps: sweeping the same
+    axes against the ss/ff corner-resolved technology libraries
+    (`Corner.apply_lib` -- no supply shift, no budget derate) must produce
+    winner maps that differ from the tt/default library, i.e. corners are
+    no longer just a supply shift.
 
 Artifacts (consumed by EXPERIMENTS.md, uploaded by the slow CI job) under
-``artifacts/scenarios/<corner>/``: the per-corner winner map, the Pareto
-frontier and domain-crossover CSVs, and the full grid as a compressed
-``.npz`` (`DesignGrid.save_npz` -- the practical format at 10^5+ points).
+``artifacts/scenarios/<corner>/``: the per-corner winner map (now keyed by
+m and tdc_arch too), the Pareto frontier and domain-crossover CSVs, and
+the full grid as a compressed ``.npz`` (`DesignGrid.save_npz` -- the
+practical format at 10^5+ points).
 
 ``REPRO_SCENARIO_SMOKE=1`` shrinks the sweep for CI smoke / tests; the
 >=10^5 gate is only asserted on the full grid.
@@ -22,6 +28,7 @@ import time
 
 import numpy as np
 
+from benchmarks import bench_design_grid
 from repro.core import design_grid, design_space as ds
 from repro.core import scenario as sc
 
@@ -30,8 +37,9 @@ VDD_OPT_SAMPLES = ((64, 4), (576, 4), (2048, 2), (576, 8))
 OUT_DIR = os.path.join("artifacts", "scenarios")
 
 WINNER_HEADER = ["corner", "bits", "n", "sigma_max", "vdd", "p_x_one",
-                 "w_bit_sparsity", "winner", "e_mac_td", "e_mac_analog",
-                 "e_mac_digital", "vdd_td", "vdd_analog", "vdd_digital"]
+                 "w_bit_sparsity", "m", "tdc_arch", "winner", "e_mac_td",
+                 "e_mac_analog", "e_mac_digital", "vdd_td", "vdd_analog",
+                 "vdd_digital"]
 
 
 def _smoke() -> bool:
@@ -47,7 +55,9 @@ def _scenario() -> sc.Scenario:
                             sigma_maxes=(0.5, 2.0),
                             vdds=sc.PAPER_VDD_GRID,
                             p_x_ones=(0.5,),
-                            w_bit_sparsities=(0.5, 0.7))
+                            w_bit_sparsities=(0.5, 0.7),
+                            ms=(8, 16),
+                            tdc_archs=("hybrid", "sar"))
     return spec
 
 
@@ -58,23 +68,52 @@ def write_winner_map(grid, corner: str, path: str) -> str:
     `vdd` is the shared grid-axis supply (nan on a `minimize_over_vdd`
     reduction); the per-domain `vdd_<domain>` columns report each domain's
     actual operating supply at that point, which differ after a reduction
-    (every domain argmins its own axis)."""
+    (every domain argmins its own axis).  The `m`/`tdc_arch` columns are
+    the *winning* domain's per-point values (identical across domains on
+    an unreduced grid; each domain's own argmin after a
+    `minimize_over_m`/`minimize_over_tdc_arch` reduction)."""
     w = grid.winner_names()
     di = {d: grid.domain_index(d) for d in grid.domains}
     with open(path, "w", newline="") as f:
         wr = csv.writer(f)
         wr.writerow(WINNER_HEADER)
         for ix in np.ndindex(*w.shape):
-            bi, ni, si, vi, ai, wi = ix
+            bi, ni, si, vi, ai, wi, mi, ti = ix
+            win_ix = (di[str(w[ix])],) + ix
             wr.writerow([
                 corner, int(grid.bit_widths[bi]), int(grid.ns[ni]),
                 float(grid.sigma_maxes[si]), float(grid.vdds[vi]),
                 float(grid.p_x_ones[ai]),
-                float(grid.w_bit_sparsities[wi]), w[ix],
+                float(grid.w_bit_sparsities[wi]),
+                grid.point_m(win_ix), grid.point_tdc_arch(win_ix),
+                w[ix],
                 *(float(grid.e_mac[(di[d],) + ix]) for d in grid.domains),
                 *(grid.point_vdd((di[d],) + ix) for d in grid.domains),
             ])
     return path
+
+
+def _check_corner_physics(spec: sc.Scenario,
+                          g_tt: design_grid.DesignGrid) -> dict:
+    """Winner maps must diverge from TT by *device physics alone*: same
+    supplies, same budgets, same axes -- only the corner-resolved library
+    differs (Corner.apply_lib).  Returns per-corner flip fractions.
+
+    The TT reference is a slice of the already-computed tt grid (the tt
+    corner is the identity on supplies/budgets/library), so only the ss/ff
+    physics sweeps cost a jitted call."""
+    axes = dict(ns=spec.ns, bit_widths=spec.bit_widths,
+                sigma_maxes=spec.sigma_maxes, vdds=spec.vdds,
+                p_x_ones=spec.p_x_ones[:1],
+                w_bit_sparsities=spec.w_bit_sparsities[:1],
+                m=spec.ms, tdc_arch=spec.tdc_archs)
+    w_tt = g_tt.winner_names()[:, :, :, :, :1, :1, :, :]
+    out = {}
+    for corner in ("ss", "ff"):
+        lib = sc.get_corner(corner).apply_lib(spec.techlib)
+        w_co = ds.sweep_batched(**axes, lib=lib).winner_names()
+        out[corner] = float((w_co != w_tt).mean())
+    return out
 
 
 def write_artifacts(grids: dict, out_dir: str = OUT_DIR) -> list[str]:
@@ -103,9 +142,7 @@ def write_artifacts(grids: dict, out_dir: str = OUT_DIR) -> list[str]:
         xs = ds.domain_crossovers(g)
         with open(p, "w", newline="") as f:
             wr = csv.DictWriter(f, fieldnames=list(xs[0]) if xs else
-                                ["metric", "bits", "sigma_max", "vdd",
-                                 "p_x_one", "w_bit_sparsity", "n_low",
-                                 "n_high", "domain_low", "domain_high"])
+                                bench_design_grid.CROSSOVER_HEADER)
             wr.writeheader()
             wr.writerows(xs)
         paths.append(p)
@@ -127,7 +164,7 @@ def _check_vdd_argmin() -> tuple[bool, float]:
     for n, b in VDD_OPT_SAMPLES:
         ni = list(red.ns).index(n)
         bi = list(red.bit_widths).index(b)
-        ix = (tdi, bi, ni, 0, 0, 0, 0)
+        ix = (tdi, bi, ni, 0, 0, 0, 0, 0, 0)
         p = ds.td_vdd_optimized(n, b, float(spec.sigma_maxes[0]))
         rel = abs(red.e_mac[ix] - p.e_mac) / p.e_mac
         worst = max(worst, rel)
@@ -163,6 +200,15 @@ def run() -> list[str]:
         xo = ds.domain_crossovers(g)
         rows.append(f"scenarios,corner={corner},td_win_fraction="
                     f"{frac_td:.3f},crossovers={len(xo)}")
+    # corner *device physics* must move the winner maps on its own (same
+    # axes, only the corner-resolved TechLib differs)
+    flips = _check_corner_physics(spec, grids["tt"])
+    diverges = all(v > 0.0 for v in flips.values())
+    rows.append("scenarios,corner_physics_flip_fraction="
+                + ",".join(f"{c}={v:.4f}" for c, v in flips.items())
+                + f",derived=corner_physics_diverges={diverges}")
+    assert diverges, ("ss/ff corner libraries did not change any winner: "
+                      "corners degenerated back to a supply shift")
     for p in write_artifacts(grids):
         rows.append(f"scenarios,artifact={p}")
 

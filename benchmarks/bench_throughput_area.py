@@ -20,15 +20,15 @@ def run() -> list[str]:
     area_w = g.winner_names("area_per_mac")
     for ni, n in enumerate(NS):
         for bi, b in enumerate(BITS):
-            macs = ",".join(f"{d}_macs={g.throughput[di, bi, ni, 0, 0, 0, 0]:.3e}"
+            macs = ",".join(f"{d}_macs={g.throughput[di, bi, ni, 0, 0, 0, 0, 0, 0]:.3e}"
                             for di, d in enumerate(g.domains))
-            m2 = ",".join(f"{d}_m2={g.area_per_mac[di, bi, ni, 0, 0, 0, 0]:.3e}"
+            m2 = ",".join(f"{d}_m2={g.area_per_mac[di, bi, ni, 0, 0, 0, 0, 0, 0]:.3e}"
                           for di, d in enumerate(g.domains))
             rows.append(f"fig12_throughput_area,N={n},B={b},{macs},{m2},"
-                        f"thr_winner={thr_w[bi, ni, 0, 0, 0, 0]},"
-                        f"area_winner={area_w[bi, ni, 0, 0, 0, 0]}")
+                        f"thr_winner={thr_w[bi, ni, 0, 0, 0, 0, 0, 0]},"
+                        f"area_winner={area_w[bi, ni, 0, 0, 0, 0, 0, 0]}")
     b4 = BITS.index(4)
-    digital_thr = all(thr_w[b4, NS.index(n), 0, 0, 0, 0] == "digital"
+    digital_thr = all(thr_w[b4, NS.index(n), 0, 0, 0, 0, 0, 0] == "digital"
                       for n in (576, 4096))
     us = dt * 1e6 / (len(NS) * len(BITS))
     rows.append(f"fig12_throughput_area,us_per_call={us:.1f},"

@@ -1,12 +1,16 @@
 """Design-space explorer CLI over the batched engine.
 
-Evaluates an arbitrary (N x B x sigma x Vdd x activity x sparsity) grid for
-all three domains as one jitted call and emits a winner map (table), CSV or
-JSON, plus the domain-crossover boundaries the paper's Figs. 9/11 read off
-qualitatively.  Named scenarios and technology corners come from the
-scenario engine (`repro.core.scenario`), and `--minimize-vdd` folds the
-supply axis into a per-point argmin (the retired `td_vdd_optimized` loop as
-a grid reduction).
+Evaluates an arbitrary (N x B x sigma x Vdd x activity x sparsity x m x
+tdc_arch) grid for all three domains as one jitted call and emits a winner
+map (table), CSV or JSON, plus the domain-crossover boundaries the paper's
+Figs. 9/11 read off qualitatively.  Named scenarios and technology corners
+come from the scenario engine (`repro.core.scenario`): a corner shifts the
+supply grid, derates the budget AND perturbs the device tables themselves
+(`--techlib` picks the base library the corner is applied to).
+`--minimize-vdd` folds the supply axis into a per-point argmin (the
+retired `td_vdd_optimized` loop as a grid reduction); `--minimize-m` /
+`--minimize-tdc-arch` do the same for the periphery axes opened by
+`--sweep-m` / `--sweep-tdc-arch`.
 
     PYTHONPATH=src python examples/hw_design_explorer.py
     PYTHONPATH=src python examples/hw_design_explorer.py \
@@ -14,11 +18,14 @@ a grid reduction).
         --format csv --out grid.csv
     PYTHONPATH=src python examples/hw_design_explorer.py \
         --scenario edge --corner ss --minimize-vdd
+    PYTHONPATH=src python examples/hw_design_explorer.py \
+        --grid n=64,576 bits=4 sigma=2.0 --sweep-m 2,8,32 \
+        --sweep-tdc-arch --corner ss --techlib 22fdx
 
 Grid axis syntax: `key=v1,v2,...` (explicit list) or `key=lo..hi[:count]`
 (range; geometric with integer rounding for n, linear otherwise).  Axes:
 n, bits, sigma, vdd, px (activation activity p_x_one), wsp (weight bit
-sparsity).
+sparsity), m (delay-line parallelism), tdc (TDC architecture names).
 """
 import argparse
 import csv
@@ -30,12 +37,15 @@ import numpy as np
 from repro.core import constants as C
 from repro.core import design_space as ds
 from repro.core import scenario as sc
+from repro.core import techlib as tl
 
 DEFAULT_NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
 DEFAULT_BITS = (1, 2, 4, 8)
 
 
 def _parse_axis(key: str, spec: str):
+    if key == "tdc":
+        return tuple(spec.split(","))
     try:
         if ".." in spec:
             lohi, _, cnt = spec.partition(":")
@@ -46,7 +56,7 @@ def _parse_axis(key: str, spec: str):
                 vals = np.unique(np.round(np.geomspace(lo, hi, count))
                                  .astype(int))
                 return tuple(int(v) for v in vals)
-            if key == "bits":
+            if key in ("bits", "m"):
                 vals = np.unique(np.round(np.linspace(lo, hi, count))
                                  .astype(int))
                 return tuple(int(v) for v in vals)
@@ -55,19 +65,20 @@ def _parse_axis(key: str, spec: str):
     except ValueError as e:
         raise SystemExit(f"bad --grid axis {key}={spec!r}: {e} "
                          f"(want `a,b,c` or `lo..hi[:count]`)") from None
-    if key in ("n", "bits"):
+    if key in ("n", "bits", "m"):
         return tuple(int(v) for v in vals)
     return tuple(vals)
 
 
 def parse_grid(tokens) -> dict:
     axes = {"n": DEFAULT_NS, "bits": DEFAULT_BITS, "sigma": None,
-            "vdd": (0.80,), "px": (C.P_X_ONE,), "wsp": (C.W_BIT_SPARSITY,)}
+            "vdd": (0.80,), "px": (C.P_X_ONE,), "wsp": (C.W_BIT_SPARSITY,),
+            "m": (C.M_DEFAULT,), "tdc": ("hybrid",)}
     for tok in tokens or ():
         key, eq, spec = tok.partition("=")
         if not eq or key not in axes:
             raise SystemExit(f"bad --grid token {tok!r} "
-                             f"(want n=|bits=|sigma=|vdd=|px=|wsp=)")
+                             f"(want n=|bits=|sigma=|vdd=|px=|wsp=|m=|tdc=)")
         axes[key] = _parse_axis(key, spec)
     return axes
 
@@ -77,6 +88,15 @@ def _vdd_label(g, vi: int) -> str:
     return "opt" if np.isnan(v) else f"{v:.2f}"
 
 
+def _m_label(g, mi: int) -> str:
+    m = int(g.ms[mi])
+    return "opt" if m < 0 else str(m)
+
+
+def _tdc_label(g, ti: int) -> str:
+    return g.tdc_archs[ti]
+
+
 def print_winner_map(g, metric: str) -> None:
     tag = {"td": "T", "analog": "A", "digital": "D"}
     w = g.winner_names(metric)
@@ -84,17 +104,23 @@ def print_winner_map(g, metric: str) -> None:
         for vi in range(len(g.vdds)):
             for ai, a in enumerate(g.p_x_ones):
                 for wi, ws in enumerate(g.w_bit_sparsities):
-                    print(f"winner map, metric={metric}, sigma_max={s:.3f}, "
-                          f"vdd={_vdd_label(g, vi)}, p_x_one={a:.2f}, "
-                          f"w_sparsity={ws:.2f} "
-                          f"(T=time-domain A=analog D=digital)")
-                    print("        " + " ".join(f"B={b}"
-                                                for b in g.bit_widths))
-                    for ni, n in enumerate(g.ns):
-                        row = "".join(
-                            f"  {tag[w[bi, ni, si, vi, ai, wi]]} "
-                            for bi in range(len(g.bit_widths)))
-                        print(f"N={n:5d}" + row)
+                    for mi in range(len(g.ms)):
+                        for ti in range(len(g.tdc_archs)):
+                            print(f"winner map, metric={metric}, "
+                                  f"sigma_max={s:.3f}, "
+                                  f"vdd={_vdd_label(g, vi)}, "
+                                  f"p_x_one={a:.2f}, "
+                                  f"w_sparsity={ws:.2f}, "
+                                  f"m={_m_label(g, mi)}, "
+                                  f"tdc={_tdc_label(g, ti)} "
+                                  f"(T=time-domain A=analog D=digital)")
+                            print("        " + " ".join(
+                                f"B={b}" for b in g.bit_widths))
+                            for ni, n in enumerate(g.ns):
+                                row = "".join(
+                                    f"  {tag[w[bi, ni, si, vi, ai, wi, mi, ti]]} "
+                                    for bi in range(len(g.bit_widths)))
+                                print(f"N={n:5d}" + row)
 
 
 def print_detail(g) -> None:
@@ -102,14 +128,16 @@ def print_detail(g) -> None:
         return
     ni = list(g.ns).index(576)
     print("\nper-point detail at the paper baseline N=576 "
-          f"(sigma={g.sigma_maxes[0]:.3f}, vdd={_vdd_label(g, 0)}):")
+          f"(sigma={g.sigma_maxes[0]:.3f}, vdd={_vdd_label(g, 0)}, "
+          f"m={_m_label(g, 0)}, tdc={_tdc_label(g, 0)}):")
     for bi, b in enumerate(g.bit_widths):
         for di, d in enumerate(g.domains):
-            ix = (di, bi, ni, 0, 0, 0, 0)
+            ix = (di, bi, ni, 0, 0, 0, 0, 0, 0)
             print(f"  B={b} {d:8s} {g.e_mac[ix]*1e15:9.2f} fJ/MAC  "
                   f"R={g.redundancy[ix]:4d}  thr={g.throughput[ix]:.2e}  "
                   f"area={g.area_per_mac[ix]*1e12:.2f} um^2  "
-                  f"vdd={g.point_vdd(ix):.2f}")
+                  f"vdd={g.point_vdd(ix):.2f}  m={g.point_m(ix)}  "
+                  f"tdc={g.point_tdc_arch(ix)}")
 
 
 def main():
@@ -125,10 +153,28 @@ def main():
                          "(overrides --grid axes)")
     ap.add_argument("--corner", default=None,
                     help=f"technology corner ({'/'.join(sc.CORNERS)}; "
-                         "default tt)")
+                         "default tt).  Shifts the supply grid, derates "
+                         "the budget and perturbs the device tables")
+    ap.add_argument("--techlib", default=None,
+                    help=f"base technology library "
+                         f"({'/'.join(sorted(tl.TECHLIBS))}; default "
+                         "22fdx) the corner multipliers are applied to")
+    ap.add_argument("--sweep-m", default=None, metavar="M1,M2,...",
+                    help="sweep the delay-line parallelism m over these "
+                         "values (shorthand for --grid m=...)")
+    ap.add_argument("--sweep-tdc-arch", action="store_true",
+                    help="sweep the TDC architecture axis over "
+                         "hybrid and sar (shorthand for --grid "
+                         "tdc=hybrid,sar)")
     ap.add_argument("--minimize-vdd", action="store_true",
                     help="reduce the Vdd axis to each point's "
                          "energy-minimizing supply (grid argmin)")
+    ap.add_argument("--minimize-m", action="store_true",
+                    help="reduce the m axis to each point's optimum "
+                         "(records m_opt per point)")
+    ap.add_argument("--minimize-tdc-arch", action="store_true",
+                    help="reduce the TDC-architecture axis to each "
+                         "point's optimum (records tdc_arch_opt)")
     ap.add_argument("--metric", default="e_mac",
                     choices=["e_mac", "throughput", "area_per_mac"])
     ap.add_argument("--format", default="table",
@@ -139,10 +185,24 @@ def main():
                     help="also print domain-crossover boundaries")
     args = ap.parse_args()
 
-    minimize = ("vdd",) if args.minimize_vdd else ()
+    minimize = tuple(ax for ax, on in (("vdd", args.minimize_vdd),
+                                       ("m", args.minimize_m),
+                                       ("tdc_arch", args.minimize_tdc_arch))
+                     if on)
+    sweep_m = _parse_axis("m", args.sweep_m) if args.sweep_m else None
+    sweep_tdc = ("hybrid", "sar") if args.sweep_tdc_arch else None
     if args.scenario:
-        g = sc.sweep_scenario(args.scenario, args.corner,
-                              minimize_over=minimize)
+        spec = sc.get_scenario(args.scenario)
+        over = {}
+        if sweep_m:
+            over["ms"] = sweep_m
+        if sweep_tdc:
+            over["tdc_archs"] = sweep_tdc
+        if args.techlib:
+            over["techlib"] = args.techlib
+        if over:
+            spec = spec.replace(**over)
+        g = sc.sweep_scenario(spec, args.corner, minimize_over=minimize)
     else:
         axes = parse_grid(args.grid)
         sigma = axes["sigma"]
@@ -151,7 +211,10 @@ def main():
         corner = sc.get_corner(args.corner)
         spec = sc.Scenario("cli", ns=axes["n"], bit_widths=axes["bits"],
                            sigma_maxes=sigma, vdds=axes["vdd"],
-                           p_x_ones=axes["px"], w_bit_sparsities=axes["wsp"])
+                           p_x_ones=axes["px"], w_bit_sparsities=axes["wsp"],
+                           ms=sweep_m or axes["m"],
+                           tdc_archs=sweep_tdc or axes["tdc"],
+                           techlib=args.techlib or "22fdx")
         g = sc.sweep_scenario(spec, corner, minimize_over=minimize)
 
     if args.format == "table":
@@ -180,7 +243,8 @@ def main():
               file=sys.stderr)
         for x in xs[:40]:
             print(f"  B={x['bits']} sigma={x['sigma_max']:.3f} "
-                  f"vdd={x['vdd']:.2f}: {x['domain_low']} -> "
+                  f"vdd={x['vdd']:.2f} m={x['m']} tdc={x['tdc_arch']}: "
+                  f"{x['domain_low']} -> "
                   f"{x['domain_high']} between N={x['n_low']} "
                   f"and N={x['n_high']}", file=sys.stderr)
         if len(xs) > 40:

@@ -49,7 +49,6 @@ class TDExecCfg:
     bits_w: int = 4
     n_chain: int = 576               # hardware chain length (paper baseline)
     sigma_max: float | None = None   # None = exact regime
-    use_pallas: bool = True          # vestigial: "td" always runs the kernel
 
 
 @dataclasses.dataclass(frozen=True)

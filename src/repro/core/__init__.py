@@ -3,19 +3,22 @@
 Modules
 -------
 constants        synthesized-but-anchored 22nm FD-SOI calibration tables
+techlib          TechLib: frozen per-corner device tables (at_corner)
 cells            delay elements, eta_ESNR (Eq. 1), TD-MAC cell (Fig. 4)
 chain            chain error statistics (Eq. 2-6) + redundancy solver
 tdc              SAR + hybrid TDC (Eq. 8-10), L_osc optimizer
 analog           charge-domain model (Eq. 11-13)
 digital          adder-tree reference
 design_space     the Figs. 9/11/12 comparison engine (size-1 grid wrappers)
-design_grid      batched sweep engine: DesignGrid, Pareto, crossovers
+design_grid      batched sweep engine: DesignGrid, Pareto, crossovers,
+                 m/tdc_arch axes + minimize_over_* reductions
 scenario         named scenario / technology-corner sweeps over the grid
 noise_tolerance  Fig. 10 sigma_array_max search
 """
 from repro.core import (analog, cells, chain, constants, design_grid,
                         design_space, digital, noise_tolerance, scenario,
-                        tdc)
+                        tdc, techlib)
 
 __all__ = ["analog", "cells", "chain", "constants", "design_grid",
-           "design_space", "digital", "noise_tolerance", "scenario", "tdc"]
+           "design_space", "digital", "noise_tolerance", "scenario", "tdc",
+           "techlib"]

@@ -13,7 +13,9 @@ Like the TD model, a redundancy factor R repeats unit capacitors once the
 mismatch error exceeds the error budget (cap mismatch averages ~ 1/sqrt(R)).
 
 All entry points are array-polymorphic: python scalars keep the original
-float math (scalar golden path), arrays broadcast elementwise.
+float math (scalar golden path), arrays broadcast elementwise.  ADC fit,
+cap and mismatch tables come from a `core.techlib.TechLib` (``lib=``
+keyword, default bit-identical to the historical constants).
 """
 from __future__ import annotations
 
@@ -23,15 +25,16 @@ import jax.numpy as jnp
 
 from repro.core import constants as C
 from repro.core import tdc
+from repro.core.techlib import DEFAULT_LIB, TechLib
 
 
 def _is_scalar(*xs) -> bool:
     return all(isinstance(x, (int, float)) for x in xs)
 
 
-def adc_energy(enob):
+def adc_energy(enob, lib: TechLib = DEFAULT_LIB):
     """Eq. 12 with k1 = 0.66 pJ, k2 = 0.241 aJ."""
-    return C.K1_ADC * enob + C.K2_ADC * 4.0 ** enob
+    return lib.k1_adc * enob + lib.k2_adc * 4.0 ** enob
 
 
 def enob_for_sigma(range_steps, sigma_max_steps):
@@ -49,94 +52,100 @@ def enob_for_sigma(range_steps, sigma_max_steps):
     return jnp.maximum(1.0, (snr_db - 1.76) / 6.02)
 
 
-def analog_cell_sigma(bits: int, redundancy):
+def analog_cell_sigma(bits: int, redundancy, lib: TechLib = DEFAULT_LIB):
     """Per-MAC mismatch sigma in output-LSB units from unit-cap mismatch.
 
     Binary-weighted cap-DAC cell: dominant MSB cap (2^(B-1) units) has
-    relative mismatch SIG_CAP_REL / sqrt(2^(B-1) * R); expressed against the
-    1-LSB step the per-cell sigma is ~ SIG_CAP_REL * sqrt((2^B - 1) / R).
+    relative mismatch sig_cap_rel / sqrt(2^(B-1) * R); expressed against the
+    1-LSB step the per-cell sigma is ~ sig_cap_rel * sqrt((2^B - 1) / R).
     """
     if _is_scalar(redundancy):
-        return C.SIG_CAP_REL * math.sqrt((2.0 ** bits - 1.0) / redundancy)
+        return lib.sig_cap_rel * math.sqrt((2.0 ** bits - 1.0) / redundancy)
     r = jnp.asarray(redundancy, jnp.float32)
-    return C.SIG_CAP_REL * jnp.sqrt((2.0 ** bits - 1.0) / r)
+    return lib.sig_cap_rel * jnp.sqrt((2.0 ** bits - 1.0) / r)
 
 
-def solve_analog_redundancy(n, bits: int, sigma_max, r_max: int = 4096):
+def solve_analog_redundancy(n, bits: int, sigma_max, r_max: int = 4096,
+                            lib: TechLib = DEFAULT_LIB):
     """Smallest integer R with sqrt(N) * sigma_cell(R) <= sigma_max."""
     if _is_scalar(n, sigma_max):
         s_cell_needed = sigma_max / math.sqrt(n)
-        r = (C.SIG_CAP_REL ** 2 * (2.0 ** bits - 1.0)) \
+        r = (lib.sig_cap_rel ** 2 * (2.0 ** bits - 1.0)) \
             / max(s_cell_needed, 1e-12) ** 2
         return min(r_max, max(1, int(math.ceil(r))))
     nf = jnp.asarray(n, jnp.float32)
     s_cell = jnp.maximum(jnp.asarray(sigma_max, jnp.float32) / jnp.sqrt(nf),
                          1e-12)
-    r = C.SIG_CAP_REL ** 2 * (2.0 ** bits - 1.0) / s_cell ** 2
+    r = lib.sig_cap_rel ** 2 * (2.0 ** bits - 1.0) / s_cell ** 2
     return jnp.clip(jnp.ceil(r), 1.0, float(r_max)).astype(jnp.int32)
 
 
 def cap_energy_per_mac(bits: int, redundancy,
                        vdd=C.VDD_NOM,
                        p_x_one=C.P_X_ONE,
-                       w_bit_sparsity=C.W_BIT_SPARSITY):
+                       w_bit_sparsity=C.W_BIT_SPARSITY,
+                       lib: TechLib = DEFAULT_LIB):
     """Expected charge-redistribution energy of one 1xB MAC: active unit caps
     (bit set in w, x = 1) switch ~ C_u V^2 each; half of it is recovered on
     average by the redistribution (factor 0.5)."""
     p_act = p_x_one * (1.0 - w_bit_sparsity)
     n_units = (2.0 ** bits - 1.0) * redundancy
-    e_unit = C.C_UNIT * vdd * vdd * 0.5
-    return p_act * n_units * e_unit * (1.0 + C.LEAKAGE_FRACTION)
+    e_unit = lib.c_unit * vdd * vdd * 0.5
+    return p_act * n_units * e_unit * (1.0 + lib.leakage_fraction)
 
 
 def analog_energy_per_mac(n, bits: int, sigma_max,
                           m=C.M_DEFAULT, vdd=C.VDD_NOM,
                           clip_range: bool = True,
                           p_x_one=C.P_X_ONE,
-                          w_bit_sparsity=C.W_BIT_SPARSITY) -> dict:
+                          w_bit_sparsity=C.W_BIT_SPARSITY,
+                          lib: TechLib = DEFAULT_LIB) -> dict:
     """Eq. 11 with the R/ENOB co-solution for a given error budget.
 
     `p_x_one`/`w_bit_sparsity` set the cap-switching activity (defaults are
     the paper's Section IV statistics); like every other entry they accept
     scalars or broadcastable arrays."""
-    r = solve_analog_redundancy(n, bits, sigma_max)
+    r = solve_analog_redundancy(n, bits, sigma_max, lib=lib)
     steps = tdc.effective_range_steps(n, bits, clip_range)
     enob = enob_for_sigma(steps, sigma_max)
-    e_cap = cap_energy_per_mac(bits, r, vdd, p_x_one, w_bit_sparsity)
-    e_adc = adc_energy(enob)
-    e_mac = e_cap + C.E_PASS_LOGIC + e_adc / n
+    e_cap = cap_energy_per_mac(bits, r, vdd, p_x_one, w_bit_sparsity, lib)
+    e_adc = adc_energy(enob, lib)
+    e_mac = e_cap + lib.e_pass_logic + e_adc / n
     return {"e_mac": e_mac, "e_cap": e_cap, "e_adc": e_adc,
             "enob": enob, "r": r}
 
 
-def adc_rate(enob):
+def adc_rate(enob, lib: TechLib = DEFAULT_LIB):
     """Conversion-rate envelope from the [12] survey (energy-filtered):
-    f = F_ADC_BASE * 2^(-F_ADC_DECAY * (ENOB - 6))."""
-    return C.F_ADC_BASE * 2.0 ** (-C.F_ADC_DECAY * (enob - 6.0))
+    f = f_adc_base * 2^(-f_adc_decay * (ENOB - 6))."""
+    return lib.f_adc_base * 2.0 ** (-lib.f_adc_decay * (enob - 6.0))
 
 
 def analog_throughput(n, bits: int, sigma_max,
-                      m=C.M_DEFAULT, clip_range: bool = True):
+                      m=C.M_DEFAULT, clip_range: bool = True,
+                      lib: TechLib = DEFAULT_LIB):
     """MAC/s of M chains sharing one ADC: the ADC serializes M conversions,
     each conversion retires N MACs -> throughput = N * f_ADC (M cancels)."""
     steps = tdc.effective_range_steps(n, bits, clip_range)
     enob = enob_for_sigma(steps, sigma_max)
-    return n * adc_rate(enob)
+    return n * adc_rate(enob, lib)
 
 
 def analog_area(n, bits: int, sigma_max,
-                m=C.M_DEFAULT, clip_range: bool = True):
+                m=C.M_DEFAULT, clip_range: bool = True,
+                lib: TechLib = DEFAULT_LIB):
     """Per-MAC area: cap array + pass logic + amortized ADC.
 
     ADC area scales with ENOB (long-channel devices, Section IV-A)."""
-    r = solve_analog_redundancy(n, bits, sigma_max)
+    r = solve_analog_redundancy(n, bits, sigma_max, lib=lib)
     steps = tdc.effective_range_steps(n, bits, clip_range)
     enob = enob_for_sigma(steps, sigma_max)
     # MOSCAP unit area ~ 0.30 um^2 incl. wiring; pass transistor 1 pitch/bit
     a_cell = (2.0 ** bits - 1.0) * r * 0.30e-12 + bits * C.AREA_PER_PITCH
     if _is_scalar(n, sigma_max):
-        a_adc = C.ADC_AREA_BASE * C.ADC_AREA_PER_ENOB ** max(0.0, enob - 6.0)
+        a_adc = lib.adc_area_base \
+            * lib.adc_area_per_enob ** max(0.0, enob - 6.0)
     else:
-        a_adc = C.ADC_AREA_BASE \
-            * C.ADC_AREA_PER_ENOB ** jnp.maximum(0.0, enob - 6.0)
+        a_adc = lib.adc_area_base \
+            * lib.adc_area_per_enob ** jnp.maximum(0.0, enob - 6.0)
     return a_cell + a_adc / (n * m)

@@ -7,6 +7,12 @@ Implements:
     variance, and per-MAC energy, all as functions of (B, R, input stats).
 
 Everything is pure jnp and vmap-able over design grids.
+
+Device tables (energies, delays, mismatch sigmas) come from a
+`core.techlib.TechLib` -- every entry point takes ``lib=`` (default
+`DEFAULT_LIB`, bit-identical to the historical module constants), so a
+technology corner that perturbs the tables themselves is just a different
+library value.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import constants as C
+from repro.core.techlib import DEFAULT_LIB, TechLib
 
 
 # ---------------------------------------------------------------------------
@@ -57,9 +64,10 @@ def eta_esnr(sig_rel: jnp.ndarray, energy: jnp.ndarray) -> jnp.ndarray:
     return snr_cell(sig_rel) / jnp.sqrt(energy)
 
 
-def eta_esnr_vs_vdd(cell_name: str, vdd: jnp.ndarray) -> jnp.ndarray:
+def eta_esnr_vs_vdd(cell_name: str, vdd: jnp.ndarray,
+                    lib: TechLib = DEFAULT_LIB) -> jnp.ndarray:
     """Fig. 3c: eta_ESNR of a library delay element across supply voltage."""
-    spec = C.DELAY_CELLS[cell_name]
+    spec = lib.cell(cell_name)
     sig = sig_rel_at_vdd(jnp.asarray(spec.sig_rel), vdd)
     e = energy_at_vdd(jnp.asarray(spec.energy), vdd)
     return eta_esnr(sig, e)
@@ -93,7 +101,8 @@ def _bit_planes(bits: int) -> jnp.ndarray:
     return ((w[:, None] >> jnp.arange(bits)[None, :]) & 1).astype(jnp.float32)
 
 
-def inl_table(bits: int, redundancy) -> jnp.ndarray:
+def inl_table(bits: int, redundancy,
+              lib: TechLib = DEFAULT_LIB) -> jnp.ndarray:
     """INL(x, w) of the TD-MAC cell in delay-step units, shape (*S, 2, 2^B)
     for `redundancy` of shape S (scalar redundancy gives the plain (2, 2^B)).
 
@@ -110,8 +119,9 @@ def inl_table(bits: int, redundancy) -> jnp.ndarray:
     n_bypass = (1.0 - planes).sum(-1)                 # bypassed subcells | x=1
     # systematic residue of active cascades: sub-linear stack-up ~ sqrt(len)
     active_residue = (planes * jnp.sqrt(pow2)[None, :]).sum(-1)
-    raw_x1 = C.DELTA_NAND_STEPS * (n_bypass - n_bypass.mean()) \
-        + 0.35 * C.DELTA_NAND_STEPS * (active_residue - active_residue.mean())
+    raw_x1 = lib.delta_nand_steps * (n_bypass - n_bypass.mean()) \
+        + 0.35 * lib.delta_nand_steps * (active_residue
+                                         - active_residue.mean())
     # x = 0: every subcell bypasses; deviation is the same for all w, and the
     # common mode is calibrated, so INL(0, w) = const offset ~ 0 after cal.
     raw_x0 = jnp.zeros_like(raw_x1)
@@ -122,7 +132,8 @@ def inl_table(bits: int, redundancy) -> jnp.ndarray:
 
 
 def cell_delay_variance(bits: int, redundancy,
-                        vdd=C.VDD_NOM) -> jnp.ndarray:
+                        vdd=C.VDD_NOM,
+                        lib: TechLib = DEFAULT_LIB) -> jnp.ndarray:
     """Var(err_cell | x, w) in delay-step^2 units, shape (*S, 2, 2^B) for
     `redundancy`/`vdd` broadcasting to shape S (scalars give (2, 2^B)).
 
@@ -131,8 +142,10 @@ def cell_delay_variance(bits: int, redundancy,
     Bypass contributes a single TD-NAND: (sig_nand / R)^2.
     """
     r = jnp.asarray(redundancy, jnp.float32)[..., None]
-    sig_u = sig_rel_at_vdd(jnp.asarray(C.SIG_U_REL), jnp.asarray(vdd))[..., None]
-    sig_n = sig_rel_at_vdd(jnp.asarray(C.SIG_NAND_REL), jnp.asarray(vdd))[..., None]
+    sig_u = sig_rel_at_vdd(jnp.asarray(lib.sig_u_rel),
+                           jnp.asarray(vdd))[..., None]
+    sig_n = sig_rel_at_vdd(jnp.asarray(lib.sig_nand_rel),
+                           jnp.asarray(vdd))[..., None]
     planes = _bit_planes(bits)                        # (2^B, B)
     pow2 = 2.0 ** jnp.arange(bits)
     var_active = (planes * pow2[None, :]).sum(-1) * sig_u ** 2 / r
@@ -161,7 +174,8 @@ def input_distribution(bits: int,
 def cell_energy_per_mac(bits: int, redundancy,
                         vdd=C.VDD_NOM,
                         p_x_one=C.P_X_ONE,
-                        w_bit_sparsity=C.W_BIT_SPARSITY
+                        w_bit_sparsity=C.W_BIT_SPARSITY,
+                        lib: TechLib = DEFAULT_LIB
                         ) -> jnp.ndarray:
     """E_cell of Eq. 7: expected energy of one 1xB TD MAC-OP; shape S for
     batched `redundancy`/`vdd`/input stats broadcasting to shape S.
@@ -170,13 +184,15 @@ def cell_energy_per_mac(bits: int, redundancy,
     TD-AND cascade (R * 2^i cells) when x & w_i, else through the TD-NAND.
     """
     r = jnp.asarray(redundancy, jnp.float32)[..., None]
-    e_and = energy_at_vdd(jnp.asarray(C.E_TD_AND), jnp.asarray(vdd))[..., None]
-    e_nand = energy_at_vdd(jnp.asarray(C.E_TD_NAND), jnp.asarray(vdd))[..., None]
+    e_and = energy_at_vdd(jnp.asarray(lib.e_td_and),
+                          jnp.asarray(vdd))[..., None]
+    e_nand = energy_at_vdd(jnp.asarray(lib.e_td_nand),
+                           jnp.asarray(vdd))[..., None]
     p_act = (jnp.asarray(p_x_one)
              * (1.0 - jnp.asarray(w_bit_sparsity)))[..., None]
     pow2 = 2.0 ** jnp.arange(bits)
     e_bit = p_act * r * pow2 * e_and + (1 - p_act) * e_nand
-    return e_bit.sum(-1) * (1.0 + C.LEAKAGE_FRACTION)
+    return e_bit.sum(-1) * (1.0 + lib.leakage_fraction)
 
 
 def tdmac_area(bits: int, redundancy) -> jnp.ndarray:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import cells
 from repro.core import constants as C
+from repro.core.techlib import DEFAULT_LIB, TechLib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,17 +40,19 @@ class CellStats:
 @functools.lru_cache(maxsize=65536)
 def cell_stats(bits: int, redundancy: float, vdd: float = C.VDD_NOM,
                p_x_one: float = C.P_X_ONE,
-               w_bit_sparsity: float = C.W_BIT_SPARSITY) -> CellStats:
+               w_bit_sparsity: float = C.W_BIT_SPARSITY,
+               lib: TechLib = DEFAULT_LIB) -> CellStats:
     """Combine the input-dependent cell statistics with the input statistics
     via the laws of total expectation / total variance (Eq. 2-3).
 
     Memoized on the (hashable scalar) arguments — the R/q solvers call this
-    in tight loops over a small set of (B, R) points.
+    in tight loops over a small set of (B, R) points.  `lib` (hashable) is
+    part of the cache key, so corner libraries memoize independently.
     """
     p_x, p_w = cells.input_distribution(bits, p_x_one, w_bit_sparsity)
     pxw = p_x[:, None] * p_w[None, :]                      # (2, 2^B)
-    inl = cells.inl_table(bits, redundancy)                # (2, 2^B)
-    var = cells.cell_delay_variance(bits, redundancy, vdd) # (2, 2^B)
+    inl = cells.inl_table(bits, redundancy, lib)           # (2, 2^B)
+    var = cells.cell_delay_variance(bits, redundancy, vdd, lib)  # (2, 2^B)
     mu = (inl * pxw).sum()
     evpv = (var * pxw).sum()
     # VHM = Var(INL) under pxw = E[INL^2] - (E[INL])^2
@@ -87,7 +90,8 @@ class CellVarCoeffs:
 
 def cell_var_coeffs(bits: int, vdd=C.VDD_NOM,
                     p_x_one=C.P_X_ONE,
-                    w_bit_sparsity=C.W_BIT_SPARSITY) -> CellVarCoeffs:
+                    w_bit_sparsity=C.W_BIT_SPARSITY,
+                    lib: TechLib = DEFAULT_LIB) -> CellVarCoeffs:
     """Coefficients of the exact var_cell(R) = a1/R + c/R^2 model, batched
     over (vdd, p_x_one, w_bit_sparsity).  Derivation: the active-path
     variance is R*2^i unit cells -> 2^i sig_u^2/R per step; every bypass and
@@ -95,14 +99,16 @@ def cell_var_coeffs(bits: int, vdd=C.VDD_NOM,
     """
     p_x, p_w = cells.input_distribution(bits, p_x_one, w_bit_sparsity)
     pxw = p_x[..., :, None] * p_w[..., None, :]            # (*S, 2, 2^B)
-    inl1 = cells.inl_table(bits, 1.0)                      # (2, 2^B)
+    inl1 = cells.inl_table(bits, 1.0, lib)                 # (2, 2^B)
     mu1 = (inl1 * pxw).sum((-2, -1))
     m2_1 = (inl1 ** 2 * pxw).sum((-2, -1))
     planes = cells._bit_planes(bits)                       # (2^B, B)
     act = (planes * 2.0 ** jnp.arange(bits)[None, :]).sum(-1)
     n_byp = (1.0 - planes).sum(-1)
-    sig_u = cells.sig_rel_at_vdd(jnp.asarray(C.SIG_U_REL), jnp.asarray(vdd))
-    sig_n = cells.sig_rel_at_vdd(jnp.asarray(C.SIG_NAND_REL), jnp.asarray(vdd))
+    sig_u = cells.sig_rel_at_vdd(jnp.asarray(lib.sig_u_rel),
+                                 jnp.asarray(vdd))
+    sig_n = cells.sig_rel_at_vdd(jnp.asarray(lib.sig_nand_rel),
+                                 jnp.asarray(vdd))
     p1, p0 = p_x[..., 1], p_x[..., 0]
     a1 = p1 * (p_w * act).sum(-1) * sig_u ** 2
     k_byp = p1 * (p_w * n_byp).sum(-1) + p0 * bits
@@ -113,17 +119,19 @@ def cell_var_coeffs(bits: int, vdd=C.VDD_NOM,
 def chain_sigma(n: jnp.ndarray, bits: int, redundancy: jnp.ndarray,
                 vdd=C.VDD_NOM,
                 p_x_one=C.P_X_ONE,
-                w_bit_sparsity=C.W_BIT_SPARSITY) -> jnp.ndarray:
+                w_bit_sparsity=C.W_BIT_SPARSITY,
+                lib: TechLib = DEFAULT_LIB) -> jnp.ndarray:
     """sigma_err,chain in delay steps, batched over (n, redundancy, vdd)."""
-    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity)
+    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity, lib)
     return jnp.sqrt(jnp.asarray(n, jnp.float32) * co.var(redundancy))
 
 
 @functools.lru_cache(maxsize=65536)
 def _var_coeffs_scalar(bits: int, vdd: float, p_x_one: float,
-                       w_bit_sparsity: float) -> tuple[float, float]:
+                       w_bit_sparsity: float,
+                       lib: TechLib = DEFAULT_LIB) -> tuple[float, float]:
     """(a1, c) as python floats, memoized -- the scalar solver hot path."""
-    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity)
+    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity, lib)
     return float(co.a1), float(co.c)
 
 
@@ -132,7 +140,8 @@ def solve_redundancy(n, bits: int,
                      vdd=C.VDD_NOM,
                      r_max: int = 4096,
                      p_x_one=C.P_X_ONE,
-                     w_bit_sparsity=C.W_BIT_SPARSITY):
+                     w_bit_sparsity=C.W_BIT_SPARSITY,
+                     lib: TechLib = DEFAULT_LIB):
     """Smallest integer R with sigma_chain(N, B, R) <= sigma_max, batched
     over (n, sigma_max, vdd) (scalar inputs return a python int).
 
@@ -146,7 +155,7 @@ def solve_redundancy(n, bits: int,
     if all(isinstance(x, (int, float))
            for x in (n, sigma_max, vdd, p_x_one, w_bit_sparsity)):
         a1, c = _var_coeffs_scalar(bits, float(vdd), float(p_x_one),
-                                   float(w_bit_sparsity))
+                                   float(w_bit_sparsity), lib)
         nf, s2 = float(n), float(sigma_max) ** 2
         root = (nf * a1 + math.sqrt((nf * a1) ** 2 + 4.0 * s2 * nf * c)) \
             / (2.0 * s2)
@@ -158,7 +167,7 @@ def solve_redundancy(n, bits: int,
         return min(max(r0 + 1, 1), r_max)
     scalar = (jnp.ndim(n) == 0 and jnp.ndim(sigma_max) == 0
               and jnp.ndim(vdd) == 0)
-    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity)
+    co = cell_var_coeffs(bits, vdd, p_x_one, w_bit_sparsity, lib)
     nf = jnp.asarray(n, jnp.float32)
     s2 = jnp.asarray(sigma_max, jnp.float32) ** 2
     root = (nf * co.a1
@@ -189,7 +198,8 @@ def simulate_chain_errors(key: jax.Array, n: int, bits: int,
                           redundancy: float, n_mc: int,
                           vdd: float = C.VDD_NOM,
                           p_x_one: float = C.P_X_ONE,
-                          w_bit_sparsity: float = C.W_BIT_SPARSITY
+                          w_bit_sparsity: float = C.W_BIT_SPARSITY,
+                          lib: TechLib = DEFAULT_LIB
                           ) -> jnp.ndarray:
     """Draw n_mc chain error samples: random (x, w) per cell from the input
     distribution, cell error = INL(x,w) + N(0, Var(x,w))."""
@@ -197,7 +207,7 @@ def simulate_chain_errors(key: jax.Array, n: int, bits: int,
     p_x, p_w = cells.input_distribution(bits, p_x_one, w_bit_sparsity)
     xs = jax.random.bernoulli(kx, p_x[1], (n_mc, n)).astype(jnp.int32)
     ws = jax.random.categorical(kw, jnp.log(p_w + 1e-30), shape=(n_mc, n))
-    inl = cells.inl_table(bits, redundancy)[xs, ws]
-    var = cells.cell_delay_variance(bits, redundancy, vdd)[xs, ws]
+    inl = cells.inl_table(bits, redundancy, lib)[xs, ws]
+    var = cells.cell_delay_variance(bits, redundancy, vdd, lib)[xs, ws]
     noise = jax.random.normal(ke, (n_mc, n)) * jnp.sqrt(var)
     return (inl + noise).sum(-1)

@@ -1,12 +1,12 @@
 """Batched three-domain design-space engine (vectorized Figs. 9, 11, 12).
 
 `sweep_batched` evaluates the full (domain x N x B x sigma_max x Vdd x
-p_x_one x w_bit_sparsity) grid as one jitted JAX computation and returns a
-structure-of-arrays `DesignGrid`.  This is the ONLY evaluation path: the
-scalar `design_space.evaluate_*` functions are size-1 wrappers over the
-elementwise entries below (the per-point python solvers were retired once
-the golden fixture pinned their numbers).  Every per-point loop is a
-batched axis:
+p_x_one x w_bit_sparsity x m x tdc_arch) grid as one jitted JAX computation
+and returns a structure-of-arrays `DesignGrid`.  This is the ONLY
+evaluation path: the scalar `design_space.evaluate_*` functions are size-1
+wrappers over the elementwise entries below (the per-point python solvers
+were retired once the golden fixture pinned their numbers).  Every
+per-point loop is a batched axis:
 
   * the q (TDC LSB coarsening) candidate loop      -> a leading q axis + argmin
   * the integer R refinement loop                  -> closed form + monotone
@@ -17,12 +17,27 @@ batched axis:
   * the Vdd optimization loop (td_vdd_optimized)   -> `minimize_over_vdd`
                                                       grid reduction (argmin
                                                       along the Vdd axis)
+  * the delay-line parallelism m and the TDC
+    architecture (counter-hybrid vs SAR)           -> static-unrolled trailing
+                                                      axes (like B) with
+                                                      `minimize_over_m` /
+                                                      `minimize_over_tdc_arch`
+                                                      argmin reductions
+                                                      recording `m_opt` /
+                                                      `tdc_arch_opt`
 
 B (the weight bit width) sets table shapes and therefore stays a static,
-trace-time axis: one jit call traces all requested bit widths.  The input
-statistics p_x_one (activation activity) and w_bit_sparsity (weight bit
-sparsity) are *traced point arrays* like N/sigma/Vdd — scenario sweeps vary
-them densely without recompiling.
+trace-time axis: one jit call traces all requested bit widths.  `m` and
+`tdc_arch` select periphery sharing / TDC structure, so they unroll the
+same way; the input statistics p_x_one (activation activity) and
+w_bit_sparsity (weight bit sparsity) are *traced point arrays* like
+N/sigma/Vdd — scenario sweeps vary them densely without recompiling.
+
+Device tables come from a `core.techlib.TechLib` (``lib=``; hashable, so it
+is a static jit argument — one compiled sweep per distinct library).  The
+default library reproduces the historical module-constant numbers
+bit-identically; `core.scenario` resolves per-corner libraries
+(`TechLib.at_corner`) so each corner sweeps its *own* physics.
 
 Downstream queries -- Pareto frontiers and the paper's "TD wins for
 small-to-medium N" domain-crossover boundaries -- are first-class results
@@ -41,21 +56,24 @@ import numpy as np
 
 from repro.core import analog, cells, chain, digital, tdc
 from repro.core import constants as C
+from repro.core.techlib import TechLib, get_techlib
 
 DOMAINS: tuple[str, ...] = ("td", "analog", "digital")
+TDC_ARCHS: tuple[str, ...] = ("hybrid", "sar")
 
 _FIELDS = ("e_mac", "throughput", "area_per_mac", "redundancy", "tdc_q",
            "l_osc", "sigma_chain", "latency")
 
 # grid axis order of every DesignGrid field array
-_AXES = ("domain", "bits", "n", "sigma", "vdd", "p_x_one", "w_bit_sparsity")
+_AXES = ("domain", "bits", "n", "sigma", "vdd", "p_x_one", "w_bit_sparsity",
+         "m", "tdc_arch")
 
 
 # ---------------------------------------------------------------------------
 # Per-domain batched evaluators over a flat point axis (bits static)
 # ---------------------------------------------------------------------------
 def _eval_td_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits, m, q_max,
-               clip_range, tdc_arch) -> dict:
+               clip_range, tdc_arch, lib: TechLib) -> dict:
     """TD evaluation of flat (P,) point arrays with the (R, q) co-solution.
 
     Every q in [1, q_max] is evaluated on a leading axis, infeasible ones
@@ -77,25 +95,25 @@ def _eval_td_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits, m, q_max,
                                        1e-12))
     r = chain.solve_redundancy(n[None, :], bits, sigma_chain, vdd[None, :],
                                p_x_one=p1[None, :],
-                               w_bit_sparsity=wsp[None, :])
+                               w_bit_sparsity=wsp[None, :], lib=lib)
     rf = r.astype(jnp.float32)
     e_cell = cells.cell_energy_per_mac(bits, rf, vdd[None, :],
-                                       p1[None, :], wsp[None, :])
+                                       p1[None, :], wsp[None, :], lib)
     steps = tdc.effective_range_steps(n, bits, clip_range)  # (P,)
     units = steps[None, :] * rf / qq[:, None]
     if tdc_arch == "hybrid":
-        l_osc = tdc.optimal_l_osc(units, m, vdd[None, :])
-        e_tdc = tdc.hybrid_tdc_energy(units, l_osc, m, vdd[None, :])
-        t_tdc = tdc.hybrid_tdc_latency(units, l_osc, vdd[None, :])
+        l_osc = tdc.optimal_l_osc(units, m, vdd[None, :], lib)
+        e_tdc = tdc.hybrid_tdc_energy(units, l_osc, m, vdd[None, :], lib)
+        t_tdc = tdc.hybrid_tdc_latency(units, l_osc, vdd[None, :], lib)
         a_tdc = tdc.hybrid_tdc_area(units, jnp.maximum(1.0, l_osc), m)
     else:
         l_osc = jnp.zeros_like(units)
         b_tdc = tdc.range_bits(steps[None, :] / qq[:, None])
-        e_tdc = tdc.sar_tdc_energy(b_tdc, m, vdd[None, :])
-        t_tdc = tdc.sar_tdc_latency(b_tdc, vdd[None, :])
+        e_tdc = tdc.sar_tdc_energy(b_tdc, m, vdd[None, :], lib)
+        t_tdc = tdc.sar_tdc_latency(b_tdc, vdd[None, :], lib)
         a_tdc = tdc.sar_tdc_area(b_tdc) * jnp.ones_like(units)
     e_mac = e_cell + e_tdc / n[None, :]                     # Eq. 7
-    tau = cells.delay_at_vdd(jnp.asarray(C.TAU_UNIT), vdd)  # (P,)
+    tau = cells.delay_at_vdd(jnp.asarray(lib.tau_unit), vdd)  # (P,)
     t_chain = (steps[None, :] * rf + n[None, :] * bits) * tau[None, :]
     latency = t_chain + t_tdc
     throughput = n[None, :] * m / latency
@@ -116,14 +134,15 @@ def _eval_td_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits, m, q_max,
 
 
 def _eval_analog_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits, m,
-                   clip_range) -> dict:
+                   clip_range, lib: TechLib) -> dict:
     n = jnp.asarray(n, jnp.float32)
     res = analog.analog_energy_per_mac(n, bits, sigma, m, vdd, clip_range,
                                        p_x_one=p_x_one,
-                                       w_bit_sparsity=w_bit_sparsity)
-    thr = analog.analog_throughput(n, bits, sigma, m, clip_range)
-    area = analog.analog_area(n, bits, sigma, m, clip_range)
-    rate = analog.adc_rate(res["enob"])
+                                       w_bit_sparsity=w_bit_sparsity,
+                                       lib=lib)
+    thr = analog.analog_throughput(n, bits, sigma, m, clip_range, lib)
+    area = analog.analog_area(n, bits, sigma, m, clip_range, lib)
+    rate = analog.adc_rate(res["enob"], lib)
     one = jnp.ones_like(n)
     return {"e_mac": res["e_mac"] * one, "throughput": thr * one,
             "area_per_mac": area * one,
@@ -135,48 +154,69 @@ def _eval_analog_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits, m,
 
 
 def _eval_digital_b(n, sigma, vdd, p_x_one, w_bit_sparsity, *, bits,
-                    m) -> dict:
+                    m, lib: TechLib) -> dict:
     n = jnp.asarray(n, jnp.float32)
     vdd = jnp.asarray(vdd, jnp.float32)
     e = digital.digital_energy_per_mac(n, bits, vdd, p_x_one=p_x_one,
-                                       w_bit_sparsity=w_bit_sparsity)
-    thr = digital.digital_throughput(n, bits, m)
-    area = digital.digital_area(n, bits)
+                                       w_bit_sparsity=w_bit_sparsity,
+                                       lib=lib)
+    thr = digital.digital_throughput(n, bits, m, lib)
+    area = digital.digital_area(n, bits, lib)
     one = jnp.ones_like(n)
     return {"e_mac": e * one, "throughput": thr * one,
             "area_per_mac": area * one, "redundancy": one, "tdc_q": one,
             "l_osc": 0.0 * one, "sigma_chain": 0.0 * one,
-            "latency": (1.0 / C.F_DIG) * one}
+            "latency": (1.0 / lib.f_dig) * one}
 
 
 def _eval_domain_b(domain: str, n, sigma, vdd, p1, wsp, *, bits, m, q_max,
-                   clip_range, tdc_arch) -> dict:
+                   clip_range, tdc_arch, lib: TechLib) -> dict:
     if domain == "td":
         return _eval_td_b(n, sigma, vdd, p1, wsp, bits=bits, m=m,
                           q_max=q_max, clip_range=clip_range,
-                          tdc_arch=tdc_arch)
+                          tdc_arch=tdc_arch, lib=lib)
     if domain == "analog":
         return _eval_analog_b(n, sigma, vdd, p1, wsp, bits=bits, m=m,
-                              clip_range=clip_range)
+                              clip_range=clip_range, lib=lib)
     if domain == "digital":
-        return _eval_digital_b(n, sigma, vdd, p1, wsp, bits=bits, m=m)
+        return _eval_digital_b(n, sigma, vdd, p1, wsp, bits=bits, m=m,
+                               lib=lib)
     raise ValueError(f"unknown domain {domain!r}")
 
 
 @functools.partial(
-    jax.jit, static_argnames=("domains", "bit_widths", "m", "q_max",
-                              "clip_range", "tdc_arch"))
-def _sweep_jit(n, sigma, vdd, p1, wsp, *, domains, bit_widths, m, q_max,
-               clip_range, tdc_arch) -> dict:
+    jax.jit, static_argnames=("domains", "bit_widths", "ms", "tdc_archs",
+                              "q_max", "clip_range", "lib"))
+def _sweep_jit(n, sigma, vdd, p1, wsp, *, domains, bit_widths, ms,
+               tdc_archs, q_max, clip_range, lib) -> dict:
     """One traced computation for the whole grid: flat (P,) point arrays in,
-    dict of (D, NB, P) field arrays out.  bit_widths/domains unroll at trace
-    time (table shapes depend on B); the five point axes are traced."""
+    dict of (D, NB, Nm, Nt, P) field arrays out.  domains/bit_widths/ms/
+    tdc_archs unroll at trace time (table shapes depend on B; m and the TDC
+    architecture select periphery structure); the five point axes are
+    traced.  Only the TD domain depends on tdc_arch — analog/digital
+    evaluate once per (B, m) and broadcast along the tdc_arch axis."""
     per_domain = []
     for d in domains:
-        per_b = [_eval_domain_b(d, n, sigma, vdd, p1, wsp, bits=b, m=m,
-                                q_max=q_max, clip_range=clip_range,
-                                tdc_arch=tdc_arch)
-                 for b in bit_widths]
+        per_b = []
+        for b in bit_widths:
+            per_m = []
+            for m in ms:
+                if d == "td":
+                    per_t = [_eval_domain_b(d, n, sigma, vdd, p1, wsp,
+                                            bits=b, m=m, q_max=q_max,
+                                            clip_range=clip_range,
+                                            tdc_arch=t, lib=lib)
+                             for t in tdc_archs]
+                else:
+                    one = _eval_domain_b(d, n, sigma, vdd, p1, wsp, bits=b,
+                                         m=m, q_max=q_max,
+                                         clip_range=clip_range,
+                                         tdc_arch=tdc_archs[0], lib=lib)
+                    per_t = [one] * len(tdc_archs)
+                per_m.append({f: jnp.stack([pt[f] for pt in per_t])
+                              for f in _FIELDS})
+            per_b.append({f: jnp.stack([pm[f] for pm in per_m])
+                          for f in _FIELDS})
         per_domain.append({f: jnp.stack([pb[f] for pb in per_b])
                            for f in _FIELDS})
     return {f: jnp.stack([pd[f] for pd in per_domain]) for f in _FIELDS}
@@ -184,15 +224,15 @@ def _sweep_jit(n, sigma, vdd, p1, wsp, *, domains, bit_widths, m, q_max,
 
 @functools.partial(
     jax.jit, static_argnames=("domain", "bits", "m", "q_max", "clip_range",
-                              "tdc_arch"))
+                              "tdc_arch", "lib"))
 def _eval_points_jit(n, sigma, vdd, p1, wsp, *, domain, bits, m, q_max,
-                     clip_range, tdc_arch) -> dict:
+                     clip_range, tdc_arch, lib) -> dict:
     out = _eval_domain_b(domain, n, sigma, vdd, p1, wsp, bits=bits, m=m,
                          q_max=q_max, clip_range=clip_range,
-                         tdc_arch=tdc_arch)
+                         tdc_arch=tdc_arch, lib=lib)
     if domain == "td":
         out["sigma_chain_achieved"] = chain.chain_sigma(
-            n, bits, out["redundancy"], vdd, p1, wsp)
+            n, bits, out["redundancy"], vdd, p1, wsp, lib)
     return out
 
 
@@ -210,10 +250,13 @@ def evaluate_points(domain: str, n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
                     m: int = C.M_DEFAULT, clip_range: bool = True,
                     tdc_arch: str = "hybrid", relax_tdc: bool = True,
                     p_x_one=C.P_X_ONE,
-                    w_bit_sparsity=C.W_BIT_SPARSITY) -> dict:
+                    w_bit_sparsity=C.W_BIT_SPARSITY,
+                    lib: TechLib | str | None = None) -> dict:
     """Elementwise evaluation of same-length point arrays (no grid product)
     for one domain: one jitted call solving every point.  All of
     (n, sigma_max, vdd, p_x_one, w_bit_sparsity) broadcast together.
+    `lib` selects the technology library (None = default; a registry name
+    or a TechLib value, e.g. a corner-resolved `TechLib.at_corner`).
     Returns a dict of numpy arrays keyed like _FIELDS plus domain extras
     (td: e_cell/e_tdc/sigma_chain_achieved; analog: enob/e_adc/e_cap)."""
     n_a, s_a, v_a, p_a, w_a = np.broadcast_arrays(
@@ -230,7 +273,7 @@ def evaluate_points(domain: str, n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
                            jnp.asarray(w_a.ravel(), jnp.float32),
                            domain=str(domain), bits=int(bits), m=int(m),
                            q_max=q_max, clip_range=bool(clip_range),
-                           tdc_arch=str(tdc_arch))
+                           tdc_arch=str(tdc_arch), lib=get_techlib(lib))
     return {k: np.asarray(v, np.float64).reshape(n_a.shape)
             for k, v in out.items()}
 
@@ -239,7 +282,8 @@ def evaluate_td_batched(n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
                         m: int = C.M_DEFAULT, clip_range: bool = True,
                         tdc_arch: str = "hybrid", relax_tdc: bool = True,
                         p_x_one=C.P_X_ONE,
-                        w_bit_sparsity=C.W_BIT_SPARSITY) -> dict:
+                        w_bit_sparsity=C.W_BIT_SPARSITY,
+                        lib: TechLib | str | None = None) -> dict:
     """TD evaluation of same-length point arrays: one jitted call solving
     (R, q) for every point.  This is the batch entry used by tdsim.policy to
     solve all layers of a network at once.  Returns a dict of numpy arrays
@@ -248,7 +292,7 @@ def evaluate_td_batched(n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
     return evaluate_points("td", n, sigma_max, vdd, bits=bits, m=m,
                            clip_range=clip_range, tdc_arch=tdc_arch,
                            relax_tdc=relax_tdc, p_x_one=p_x_one,
-                           w_bit_sparsity=w_bit_sparsity)
+                           w_bit_sparsity=w_bit_sparsity, lib=lib)
 
 
 # ---------------------------------------------------------------------------
@@ -256,13 +300,15 @@ def evaluate_td_batched(n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class DesignGrid:
-    """Dense (domain x B x N x sigma x Vdd x p_x_one x w_bit_sparsity)
-    design grid, SoA layout.
+    """Dense (domain x B x N x sigma x Vdd x p_x_one x w_bit_sparsity x m x
+    tdc_arch) design grid, SoA layout.
 
-    Field arrays have shape (D, NB, Nn, Ns, Nv, Na, Nw) and float64-safe
-    numpy dtypes; `redundancy` and `tdc_q` are integral-valued.  A grid
-    produced by `minimize_over_vdd` has a length-1 Vdd axis with
-    `vdds == [nan]` and the per-point winning supply in `vdd_opt`.
+    Field arrays have shape (D, NB, Nn, Ns, Nv, Na, Nw, Nm, Nt) and
+    float64-safe numpy dtypes; `redundancy` and `tdc_q` are
+    integral-valued.  A grid produced by a `minimize_over_*` reduction has
+    a length-1 reduced axis with the per-point winning value recorded in
+    `vdd_opt` / `m_opt` / `tdc_arch_opt` (the reduced axis labels become
+    [nan] / [-1] / ("opt",) respectively).
     """
     domains: tuple[str, ...]
     ns: np.ndarray
@@ -271,7 +317,8 @@ class DesignGrid:
     vdds: np.ndarray
     p_x_ones: np.ndarray
     w_bit_sparsities: np.ndarray
-    m: int
+    ms: np.ndarray
+    tdc_archs: tuple[str, ...]
     e_mac: np.ndarray
     throughput: np.ndarray
     area_per_mac: np.ndarray
@@ -280,8 +327,10 @@ class DesignGrid:
     l_osc: np.ndarray
     sigma_chain: np.ndarray
     latency: np.ndarray
-    # per-point optimal supply after a minimize_over_vdd reduction
+    # per-point optimal values after minimize_over_* reductions
     vdd_opt: np.ndarray | None = None
+    m_opt: np.ndarray | None = None
+    tdc_arch_opt: np.ndarray | None = None
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -291,11 +340,20 @@ class DesignGrid:
     def n_points(self) -> int:
         return int(np.prod(self.shape))
 
+    @property
+    def m(self) -> int:
+        """Single-valued m axis as a scalar (legacy accessor; raises on a
+        swept or reduced m axis — use `ms`/`point_m` there)."""
+        if len(self.ms) != 1 or int(self.ms[0]) < 0:
+            raise ValueError("grid sweeps m; use .ms or .point_m(ix)")
+        return int(self.ms[0])
+
     def domain_index(self, domain: str) -> int:
         return self.domains.index(domain)
 
     def winners(self, metric: str = "e_mac") -> np.ndarray:
-        """(NB, Nn, Ns, Nv, Na, Nw) int array of the winning domain index."""
+        """(NB, Nn, Ns, Nv, Na, Nw, Nm, Nt) int array of the winning domain
+        index."""
         arr = getattr(self, metric)
         return (np.argmax(arr, axis=0) if metric == "throughput"
                 else np.argmin(arr, axis=0))
@@ -309,11 +367,24 @@ class DesignGrid:
             return float(self.vdd_opt[ix])
         return float(self.vdds[ix[4]])
 
+    def point_m(self, ix: tuple) -> int:
+        """Delay-line parallelism of one grid point (honours m_opt)."""
+        if self.m_opt is not None:
+            return int(self.m_opt[ix])
+        return int(self.ms[ix[7]])
+
+    def point_tdc_arch(self, ix: tuple) -> str:
+        """TDC architecture of one grid point (honours tdc_arch_opt)."""
+        if self.tdc_arch_opt is not None:
+            return str(self.tdc_arch_opt[ix])
+        return self.tdc_archs[ix[8]]
+
     def records(self) -> Iterable[dict]:
         """Flat per-point dict rows (CSV/JSON friendly), row-major over
-        (domain, bits, n, sigma, vdd, p_x_one, w_bit_sparsity)."""
+        (domain, bits, n, sigma, vdd, p_x_one, w_bit_sparsity, m,
+        tdc_arch)."""
         for ix in np.ndindex(*self.shape):
-            di, bi, ni, si, vi, ai, wi = ix
+            di, bi, ni, si, vi, ai, wi, mi, ti = ix
             yield {
                 "domain": self.domains[di], "n": int(self.ns[ni]),
                 "bits": int(self.bit_widths[bi]),
@@ -321,7 +392,8 @@ class DesignGrid:
                 "vdd": self.point_vdd(ix),
                 "p_x_one": float(self.p_x_ones[ai]),
                 "w_bit_sparsity": float(self.w_bit_sparsities[wi]),
-                "m": self.m,
+                "m": self.point_m(ix),
+                "tdc_arch": self.point_tdc_arch(ix),
                 "e_mac": float(self.e_mac[ix]),
                 "throughput": float(self.throughput[ix]),
                 "area_per_mac": float(self.area_per_mac[ix]),
@@ -340,27 +412,41 @@ class DesignGrid:
             "sigma_maxes": self.sigma_maxes, "vdds": self.vdds,
             "p_x_ones": self.p_x_ones,
             "w_bit_sparsities": self.w_bit_sparsities,
-            "m": np.asarray(self.m),
+            "ms": self.ms, "tdc_archs": np.asarray(self.tdc_archs),
         }
         for f in _FIELDS:
             payload[f] = getattr(self, f)
-        if self.vdd_opt is not None:
-            payload["vdd_opt"] = self.vdd_opt
+        for opt in ("vdd_opt", "m_opt", "tdc_arch_opt"):
+            v = getattr(self, opt)
+            if v is not None:
+                payload[opt] = v
         np.savez_compressed(path, **payload)
         return path
 
     @classmethod
     def load_npz(cls, path: str) -> "DesignGrid":
         with np.load(path, allow_pickle=False) as z:
-            fields = {f: z[f] for f in _FIELDS}
+            # pre-m/tdc_arch archives stored a scalar "m" and 7-axis
+            # fields: migrate by expanding the two trailing length-1 axes
+            legacy = "ms" not in z
+
+            def field(a: np.ndarray) -> np.ndarray:
+                return a[..., None, None] if legacy else a
+
+            fields = {f: field(z[f]) for f in _FIELDS}
+            opts = {opt: field(z[opt]) if opt in z else None
+                    for opt in ("vdd_opt", "m_opt", "tdc_arch_opt")}
+            ms = (np.atleast_1d(np.asarray(z["m"], np.int64)) if legacy
+                  else z["ms"])
+            archs = (("hybrid",) if legacy
+                     else tuple(str(t) for t in z["tdc_archs"]))
             return cls(domains=tuple(str(d) for d in z["domains"]),
                        ns=z["ns"], bit_widths=z["bit_widths"],
                        sigma_maxes=z["sigma_maxes"], vdds=z["vdds"],
                        p_x_ones=z["p_x_ones"],
                        w_bit_sparsities=z["w_bit_sparsities"],
-                       m=int(z["m"]),
-                       vdd_opt=z["vdd_opt"] if "vdd_opt" in z else None,
-                       **fields)
+                       ms=ms, tdc_archs=archs,
+                       **opts, **fields)
 
 
 def sweep_batched(domains: Sequence[str] = DOMAINS,
@@ -372,13 +458,16 @@ def sweep_batched(domains: Sequence[str] = DOMAINS,
                   p_x_ones: Sequence[float] | float = C.P_X_ONE,
                   w_bit_sparsities: Sequence[float] | float
                   = C.W_BIT_SPARSITY,
-                  m: int = C.M_DEFAULT,
+                  m: Sequence[int] | int = C.M_DEFAULT,
                   clip_range: bool = True,
-                  tdc_arch: str = "hybrid",
-                  relax_tdc: bool = True) -> DesignGrid:
+                  tdc_arch: Sequence[str] | str = "hybrid",
+                  relax_tdc: bool = True,
+                  lib: TechLib | str | None = None) -> DesignGrid:
     """Evaluate the full (domain x N x B x sigma x Vdd x p_x_one x
-    w_bit_sparsity) grid in one jitted call.  sigma_maxes=None means the
-    exact regime of Fig. 9."""
+    w_bit_sparsity x m x tdc_arch) grid in one jitted call.
+    sigma_maxes=None means the exact regime of Fig. 9.  `m` and `tdc_arch`
+    accept a scalar (the historical single-point behaviour) or a sequence
+    (a swept trailing axis, static-unrolled like B)."""
     if sigma_maxes is None:
         sigma_maxes = chain.sigma_max_exact()
     sig = np.atleast_1d(np.asarray(sigma_maxes, np.float64))
@@ -386,46 +475,99 @@ def sweep_batched(domains: Sequence[str] = DOMAINS,
     p1 = np.atleast_1d(np.asarray(p_x_ones, np.float64))
     wsp = np.atleast_1d(np.asarray(w_bit_sparsities, np.float64))
     ns_a = np.atleast_1d(np.asarray(ns, np.int64))
+    ms = tuple(int(v) for v in np.atleast_1d(np.asarray(m, np.int64)))
+    archs = ((tdc_arch,) if isinstance(tdc_arch, str)
+             else tuple(str(t) for t in tdc_arch))
+    for t in archs:
+        if t not in TDC_ARCHS:
+            raise ValueError(f"unknown TDC arch {t!r} (have {TDC_ARCHS})")
     grids = np.meshgrid(ns_a, sig, vdd, p1, wsp, indexing="ij")
     out = _sweep_jit(*(jnp.asarray(g.ravel(), jnp.float32) for g in grids),
                      domains=tuple(domains), bit_widths=tuple(bit_widths),
-                     m=int(m), q_max=_q_ceiling(sig, relax_tdc),
-                     clip_range=bool(clip_range), tdc_arch=str(tdc_arch))
-    full = (len(domains), len(bit_widths), len(ns_a), len(sig), len(vdd),
-            len(p1), len(wsp))
-    fields = {f: np.asarray(out[f], np.float64).reshape(full)
+                     ms=ms, tdc_archs=archs,
+                     q_max=_q_ceiling(sig, relax_tdc),
+                     clip_range=bool(clip_range), lib=get_techlib(lib))
+    # jit output is (D, NB, Nm, Nt, P); expand P and move (m, tdc_arch) to
+    # the trailing axes of the public layout
+    pre = (len(domains), len(bit_widths), len(ms), len(archs),
+           len(ns_a), len(sig), len(vdd), len(p1), len(wsp))
+    fields = {f: np.moveaxis(np.asarray(out[f], np.float64).reshape(pre),
+                             (2, 3), (7, 8))
               for f in _FIELDS}
     fields["redundancy"] = np.rint(fields["redundancy"]).astype(np.int64)
     fields["tdc_q"] = np.rint(fields["tdc_q"]).astype(np.int64)
     return DesignGrid(domains=tuple(domains), ns=ns_a,
                       bit_widths=np.asarray(bit_widths, np.int64),
                       sigma_maxes=sig, vdds=vdd, p_x_ones=p1,
-                      w_bit_sparsities=wsp, m=int(m), **fields)
+                      w_bit_sparsities=wsp,
+                      ms=np.asarray(ms, np.int64), tdc_archs=archs,
+                      **fields)
 
 
 # ---------------------------------------------------------------------------
-# Grid reductions: Vdd as a minimized-over axis
+# Grid reductions: Vdd / m / tdc_arch as minimized-over axes
 # ---------------------------------------------------------------------------
 _VDD_AXIS = _AXES.index("vdd")
+_M_AXIS = _AXES.index("m")
+_TDC_AXIS = _AXES.index("tdc_arch")
+
+_OPT_FIELDS = ("vdd_opt", "m_opt", "tdc_arch_opt")
+
+
+def _minimize_axis(grid: DesignGrid, axis_name: str,
+                   metric: str = "e_mac") -> DesignGrid:
+    """Shared argmin reduction: collapse one grid axis to each
+    domain-point's optimum of `metric` (argmax for throughput), recording
+    the winning axis value per point.  First occurrence wins ties, exactly
+    like the retired `td_vdd_optimized` python loop's strict <."""
+    axis = _AXES.index(axis_name)
+    arr = getattr(grid, metric)
+    pick = np.argmax if metric == "throughput" else np.argmin
+    idx = pick(arr, axis=axis)
+    idx_e = np.expand_dims(idx, axis)
+    fields = {f: np.take_along_axis(getattr(grid, f), idx_e, axis=axis)
+              for f in _FIELDS}
+    # carry every already-recorded per-point optimum through the reduction
+    opts = {o: np.take_along_axis(getattr(grid, o), idx_e, axis=axis)
+            for o in _OPT_FIELDS if getattr(grid, o) is not None}
+    if axis_name == "vdd":
+        if "vdd_opt" not in opts:          # first reduction of this axis
+            opts["vdd_opt"] = grid.vdds[idx_e]
+        axes_repl = {"vdds": np.asarray([np.nan])}
+    elif axis_name == "m":
+        if "m_opt" not in opts:
+            opts["m_opt"] = grid.ms[idx_e]
+        axes_repl = {"ms": np.asarray([-1], np.int64)}
+    elif axis_name == "tdc_arch":
+        if "tdc_arch_opt" not in opts:
+            opts["tdc_arch_opt"] = np.asarray(grid.tdc_archs)[idx_e]
+        axes_repl = {"tdc_archs": ("opt",)}
+    else:
+        raise ValueError(f"cannot minimize over axis {axis_name!r} "
+                         "(reducible axes: vdd, m, tdc_arch)")
+    return dataclasses.replace(grid, **axes_repl, **opts, **fields)
 
 
 def minimize_over_vdd(grid: DesignGrid, metric: str = "e_mac") -> DesignGrid:
     """Reduce the Vdd axis to each domain-point's optimal supply (argmin of
     `metric`; argmax for throughput), recording the winning Vdd per point in
-    `vdd_opt`.  First occurrence wins ties, exactly like the retired
-    `td_vdd_optimized` python loop's strict <.  Returns a grid with a
-    length-1 Vdd axis (`vdds == [nan]`: the supply is per-point now)."""
-    arr = getattr(grid, metric)
-    pick = np.argmax if metric == "throughput" else np.argmin
-    idx = pick(arr, axis=_VDD_AXIS)                   # (D, NB, Nn, Ns, Na, Nw)
-    idx_e = np.expand_dims(idx, _VDD_AXIS)
-    fields = {f: np.take_along_axis(getattr(grid, f), idx_e, axis=_VDD_AXIS)
-              for f in _FIELDS}
-    vdd_opt = grid.vdds[idx_e]
-    if grid.vdd_opt is not None:                      # already reduced: keep
-        vdd_opt = np.take_along_axis(grid.vdd_opt, idx_e, axis=_VDD_AXIS)
-    return dataclasses.replace(grid, vdds=np.asarray([np.nan]),
-                               vdd_opt=vdd_opt, **fields)
+    `vdd_opt`.  Returns a grid with a length-1 Vdd axis (`vdds == [nan]`:
+    the supply is per-point now)."""
+    return _minimize_axis(grid, "vdd", metric)
+
+
+def minimize_over_m(grid: DesignGrid, metric: str = "e_mac") -> DesignGrid:
+    """Reduce the delay-line-parallelism axis to each point's optimal m
+    (recorded per point in `m_opt`; the m axis label becomes [-1])."""
+    return _minimize_axis(grid, "m", metric)
+
+
+def minimize_over_tdc_arch(grid: DesignGrid,
+                           metric: str = "e_mac") -> DesignGrid:
+    """Reduce the TDC-architecture axis to each point's optimal converter
+    (recorded per point in `tdc_arch_opt`; the axis label becomes
+    ("opt",))."""
+    return _minimize_axis(grid, "tdc_arch", metric)
 
 
 # ---------------------------------------------------------------------------
@@ -488,13 +630,21 @@ def pareto_frontier(grid: DesignGrid,
     return pareto_mask(np.stack(cols, axis=-1)).reshape(grid.shape)
 
 
-def _point_keys(grid: DesignGrid, bi, si, vi, ai, wi) -> dict:
+def _point_keys(grid: DesignGrid, di, bi, ni, si, vi, ai, wi, mi,
+                ti) -> dict:
+    """Axis keys of one (domain, point): the per-point optimum (vdd_opt /
+    m_opt / tdc_arch_opt of domain `di`) on reduced axes, the axis label
+    otherwise -- query records never carry the [-1]/"opt"/nan reduction
+    sentinels."""
+    ix = (di, bi, ni, si, vi, ai, wi, mi, ti)
     return {
         "bits": int(grid.bit_widths[bi]),
         "sigma_max": float(grid.sigma_maxes[si]),
-        "vdd": float(grid.vdds[vi]),
+        "vdd": grid.point_vdd(ix),
         "p_x_one": float(grid.p_x_ones[ai]),
         "w_bit_sparsity": float(grid.w_bit_sparsities[wi]),
+        "m": grid.point_m(ix),
+        "tdc_arch": grid.point_tdc_arch(ix),
     }
 
 
@@ -503,19 +653,24 @@ def domain_crossovers(grid: DesignGrid,
     """Where the winning domain flips along the N axis -- the paper's
     "TD wins for small-to-medium N" boundary as a queryable result.
 
-    One record per (bits, sigma, vdd, activity, sparsity, consecutive-N
-    pair) with a change."""
-    w = grid.winners(metric)                     # (NB, Nn, Ns, Nv, Na, Nw)
-    flips = w[:, 1:] != w[:, :-1]                # (NB, Nn-1, Ns, Nv, Na, Nw)
+    One record per (bits, sigma, vdd, activity, sparsity, m, tdc_arch,
+    consecutive-N pair) with a change."""
+    w = grid.winners(metric)              # (NB, Nn, Ns, Nv, Na, Nw, Nm, Nt)
+    flips = w[:, 1:] != w[:, :-1]
     out = []
-    for bi, ni, si, vi, ai, wi in np.argwhere(flips):
+    for bi, ni, si, vi, ai, wi, mi, ti in np.argwhere(flips):
         rec = {"metric": metric}
-        rec.update(_point_keys(grid, bi, si, vi, ai, wi))
+        # key the record at the low side's winning domain (reduced-axis
+        # optima are per (domain, point))
+        di_low = int(w[bi, ni, si, vi, ai, wi, mi, ti])
+        rec.update(_point_keys(grid, di_low, bi, ni, si, vi, ai, wi, mi,
+                               ti))
         rec.update({
             "n_low": int(grid.ns[ni]),
             "n_high": int(grid.ns[ni + 1]),
-            "domain_low": grid.domains[w[bi, ni, si, vi, ai, wi]],
-            "domain_high": grid.domains[w[bi, ni + 1, si, vi, ai, wi]],
+            "domain_low": grid.domains[w[bi, ni, si, vi, ai, wi, mi, ti]],
+            "domain_high":
+                grid.domains[w[bi, ni + 1, si, vi, ai, wi, mi, ti]],
         })
         out.append(rec)
     return out
@@ -523,19 +678,23 @@ def domain_crossovers(grid: DesignGrid,
 
 def winner_intervals(grid: DesignGrid, domain: str = "td",
                      metric: str = "e_mac") -> list[dict]:
-    """Per (bits, sigma, vdd, activity, sparsity): the [n_min, n_max] span
-    where `domain` wins (empty span -> record omitted).  Spans need not be
-    contiguous; this reports the hull plus the win count."""
+    """Per (bits, sigma, vdd, activity, sparsity, m, tdc_arch): the
+    [n_min, n_max] span where `domain` wins (empty span -> record omitted).
+    Spans need not be contiguous; this reports the hull plus the win
+    count."""
     di = grid.domain_index(domain)
-    w = grid.winners(metric) == di               # (NB, Nn, Ns, Nv, Na, Nw)
+    w = grid.winners(metric) == di        # (NB, Nn, Ns, Nv, Na, Nw, Nm, Nt)
     out = []
-    nb, _, ns_, nv, na, nw = w.shape
-    for bi, si, vi, ai, wi in np.ndindex(nb, ns_, nv, na, nw):
-        hits = np.flatnonzero(w[bi, :, si, vi, ai, wi])
+    nb, _, ns_, nv, na, nw, nm, nt = w.shape
+    for bi, si, vi, ai, wi, mi, ti in np.ndindex(nb, ns_, nv, na, nw,
+                                                 nm, nt):
+        hits = np.flatnonzero(w[bi, :, si, vi, ai, wi, mi, ti])
         if hits.size == 0:
             continue
         rec = {"domain": domain, "metric": metric}
-        rec.update(_point_keys(grid, bi, si, vi, ai, wi))
+        # key at the queried domain's first winning N
+        rec.update(_point_keys(grid, di, bi, int(hits[0]), si, vi, ai, wi,
+                               mi, ti))
         rec.update({"n_min": int(grid.ns[hits[0]]),
                     "n_max": int(grid.ns[hits[-1]]),
                     "wins": int(hits.size)})

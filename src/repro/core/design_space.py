@@ -71,13 +71,13 @@ def _point(domain: str, res: dict, n: int, bits: int, m: int,
 
 def evaluate_td(n: int, bits: int, sigma_max: float, m: int = C.M_DEFAULT,
                 vdd: float = C.VDD_NOM, clip_range: bool = True,
-                tdc_arch: str = "hybrid", relax_tdc: bool = True
-                ) -> DesignPoint:
+                tdc_arch: str = "hybrid", relax_tdc: bool = True,
+                lib=None) -> DesignPoint:
     """Size-1 wrapper over the batched TD evaluator: the (R, q) co-solution
-    of Eq. 5-7 for one point."""
+    of Eq. 5-7 for one point (`lib` selects the technology library)."""
     res = evaluate_points("td", n, sigma_max, vdd, bits=bits, m=m,
                           clip_range=clip_range, tdc_arch=tdc_arch,
-                          relax_tdc=relax_tdc)
+                          relax_tdc=relax_tdc, lib=lib)
     aux = {"e_cell": float(res["e_cell"]), "e_tdc": float(res["e_tdc"]),
            "l_osc": int(round(float(res["l_osc"]))),
            "latency": float(res["latency"]), "vdd": float(vdd),
@@ -88,9 +88,9 @@ def evaluate_td(n: int, bits: int, sigma_max: float, m: int = C.M_DEFAULT,
 
 def evaluate_analog(n: int, bits: int, sigma_max: float,
                     m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM,
-                    clip_range: bool = True) -> DesignPoint:
+                    clip_range: bool = True, lib=None) -> DesignPoint:
     res = evaluate_points("analog", n, sigma_max, vdd, bits=bits, m=m,
-                          clip_range=clip_range)
+                          clip_range=clip_range, lib=lib)
     aux = {"enob": float(res["enob"]), "e_adc": float(res["e_adc"]),
            "e_cap": float(res["e_cap"])}
     return _point("analog", res, n, bits, m, sigma_max, aux)
@@ -98,8 +98,9 @@ def evaluate_analog(n: int, bits: int, sigma_max: float,
 
 def evaluate_digital(n: int, bits: int, sigma_max: float = 0.0,
                      m: int = C.M_DEFAULT,
-                     vdd: float = C.VDD_NOM) -> DesignPoint:
-    res = evaluate_points("digital", n, sigma_max, vdd, bits=bits, m=m)
+                     vdd: float = C.VDD_NOM, lib=None) -> DesignPoint:
+    res = evaluate_points("digital", n, sigma_max, vdd, bits=bits, m=m,
+                          lib=lib)
     return _point("digital", res, n, bits, m, sigma_max, {})
 
 
@@ -135,7 +136,7 @@ def sweep(domains=DOMAINS,
     for di, d in enumerate(g.domains):
         for ni in range(len(g.ns)):
             for bi in range(len(g.bit_widths)):
-                ix = (di, bi, ni, 0, 0, 0, 0)
+                ix = (di, bi, ni, 0, 0, 0, 0, 0, 0)
                 res = {f: getattr(g, f)[ix]
                        for f in ("e_mac", "throughput", "area_per_mac",
                                  "redundancy")}
@@ -170,5 +171,5 @@ def td_vdd_optimized(n: int, bits: int, sigma_max: float,
     g = sweep_batched(domains=("td",), ns=(n,), bit_widths=(bits,),
                       sigma_maxes=sigma_max, vdds=vdd_grid, m=m)
     red = minimize_over_vdd(g)
-    v_star = float(red.vdd_opt[0, 0, 0, 0, 0, 0, 0])
+    v_star = float(red.vdd_opt[0, 0, 0, 0, 0, 0, 0, 0, 0])
     return evaluate_td(n, bits, sigma_max, m, vdd=v_star)

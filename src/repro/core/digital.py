@@ -14,7 +14,9 @@ once the error budget is relaxed, Fig. 11).
 
 Entry points are array-polymorphic: python scalars keep the original float
 math, arrays broadcast elementwise (closed-form partial sums replace the
-per-point tree-depth loop).
+per-point tree-depth loop).  Synthesis energies/areas come from a
+`core.techlib.TechLib` (``lib=`` keyword, default bit-identical to the
+historical constants).
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ import math
 import jax.numpy as jnp
 
 from repro.core import constants as C
+from repro.core.techlib import DEFAULT_LIB, TechLib
 
 
 def _is_scalar(*xs) -> bool:
@@ -46,36 +49,38 @@ def _adder_bits_per_mac(n, bits: int):
 
 def digital_energy_per_mac(n, bits: int, vdd=C.VDD_NOM,
                            p_x_one=C.P_X_ONE,
-                           w_bit_sparsity=C.W_BIT_SPARSITY):
+                           w_bit_sparsity=C.W_BIT_SPARSITY,
+                           lib: TechLib = DEFAULT_LIB):
     """Per-MAC energy of the single-cycle N-long 1xB VMM array.
 
-    ALPHA_SW_DIGITAL was synthesized at the paper's Section IV input
+    `lib.alpha_sw_digital` was synthesized at the paper's Section IV input
     statistics (p_x_one = 0.5, 70 % weight-bit sparsity); other statistics
     rescale the switching activity proportionally to the active-bit
     probability p_x_one * (1 - w_bit_sparsity), so the defaults reproduce
     the constant exactly."""
     act = p_x_one * (1.0 - w_bit_sparsity)
     act_base = C.P_X_ONE * (1.0 - C.W_BIT_SPARSITY)
-    alpha_sw = C.ALPHA_SW_DIGITAL * act / act_base
+    alpha_sw = lib.alpha_sw_digital * act / act_base
     scale = (vdd / C.VDD_NOM) ** 2
-    e_adder = _adder_bits_per_mac(n, bits) * C.E_FA_BIT * alpha_sw
-    e_and = bits * 0.35e-15 * alpha_sw                    # AND gating stage
+    e_adder = _adder_bits_per_mac(n, bits) * lib.e_fa_bit * alpha_sw
+    e_and = bits * lib.e_and_gate_bit * alpha_sw          # AND gating stage
     if _is_scalar(n):
         log2n = math.log2(max(2.0, n))
     else:
         log2n = jnp.log2(jnp.maximum(2.0, jnp.asarray(n, jnp.float32)))
-    e_wire = log2n * C.E_WIRE_PER_LOG2N
-    e = (e_adder + e_and + e_wire) * scale + C.E_SEQ_MAC * scale
-    return e * (1.0 + C.LEAKAGE_FRACTION)
+    e_wire = log2n * lib.e_wire_per_log2n
+    e = (e_adder + e_and + e_wire) * scale + lib.e_seq_mac * scale
+    return e * (1.0 + lib.leakage_fraction)
 
 
-def digital_throughput(n, bits: int, m=C.M_DEFAULT):
-    """Single-cycle array at F_DIG: N*M MACs retire per cycle."""
-    return n * m * C.F_DIG
+def digital_throughput(n, bits: int, m=C.M_DEFAULT,
+                       lib: TechLib = DEFAULT_LIB):
+    """Single-cycle array at f_dig: N*M MACs retire per cycle."""
+    return n * m * lib.f_dig
 
 
-def digital_area(n, bits: int):
+def digital_area(n, bits: int, lib: TechLib = DEFAULT_LIB):
     """Per-MAC area after P&R: AND stage + amortized adder tree + seq."""
-    a_adder = _adder_bits_per_mac(n, bits) * C.A_FA_BIT
+    a_adder = _adder_bits_per_mac(n, bits) * lib.a_fa_bit
     a_and = bits * 0.30e-12
-    return a_adder + a_and + C.A_SEQ_MAC
+    return a_adder + a_and + lib.a_seq_mac

@@ -1,27 +1,45 @@
-"""Scenario engine: named (Vdd x sigma x activity x sparsity) sweeps with
-technology-corner presets on top of the batched design grid.
+"""Scenario engine: named (Vdd x sigma x activity x sparsity x m x
+tdc_arch) sweeps with technology-corner presets on top of the batched
+design grid.
 
 The paper's central claim -- TD wins for small-to-medium arrays under
 error-tolerant workloads -- is a statement about *scenarios*: array size,
-precision, noise budget, supply voltage and input activity/sparsity.
-Related TD-VMM work (Bavandpour et al., arXiv:1711.10673; Mahmoodi et al.,
-arXiv:1905.09454) shows the winning design shifts with supply, activity and
-cell technology.  This module makes those axes first-class:
+precision, noise budget, supply voltage, input activity/sparsity, periphery
+sharing (m) and converter architecture.  Related TD-VMM work (Bavandpour
+et al., arXiv:1711.10673; Sahay et al., arXiv:1905.09454) shows the winning
+design shifts with supply, activity and cell technology.  This module makes
+those axes first-class.
 
-  * `Scenario`   -- a frozen (hashable: valid config field / jit constant)
-                    spec of the grid axes to sweep,
-  * `Corner`     -- a technology-corner preset applied as an effective
-                    supply shift plus an error-budget derate (this container
-                    has no SPICE corners; see core.constants for the
-                    synthesized-but-anchored modelling policy),
-  * `sweep_scenarios` -- the whole scenario, every corner, each corner's
-                    full (domain x N x B x sigma x Vdd x p_x_one x
-                    w_bit_sparsity) product as ONE jitted call, optionally
-                    reduced over the Vdd axis (`minimize_over=("vdd",)`) so
-                    per-point supply optimization is a grid argmin, not a
-                    python loop,
-  * `optimal_td_vdds` -- the per-layer supply query tdsim.policy uses to
-                    resolve network policies for a named scenario/corner.
+Public surface
+--------------
+``Corner``
+    A technology-corner preset with two kinds of knobs:
+
+    * scenario-axis effects: ``vdd_shift`` [V, added to every grid supply]
+      and ``sigma_derate`` [multiplies the error budget];
+    * device-table multipliers (``cell_delay_mult``, ``cell_energy_mult``,
+      ``mismatch_mult``, ``cap_mismatch_mult``, ``digital_energy_mult``,
+      ``leakage_mult``) applied to the base `core.techlib.TechLib` via
+      `TechLib.at_corner` -- a slow (ss) corner has slower/leakier cells
+      and higher mismatch, fast (ff) the reverse, so each corner sweeps
+      its *own* physics, not just a shifted supply.
+
+``Scenario``
+    A frozen (hashable: valid config field / jit constant) spec of the
+    grid axes to sweep: ``ns``/``bit_widths``/``sigma_maxes``/``vdds``/
+    ``p_x_ones``/``w_bit_sparsities``/``ms``/``tdc_archs`` (all tuples;
+    ``sigma_maxes=None`` is the exact regime), the base technology library
+    name ``techlib`` and the corner presets ``corners``.
+
+``sweep_scenario`` / ``sweep_scenarios``
+    One corner of a scenario (or every corner) as ONE jitted grid call per
+    corner against that corner's resolved library, optionally reduced over
+    the ``vdd``/``m``/``tdc_arch`` axes (``minimize_over=("vdd",)`` etc.)
+    so per-point optimization is a grid argmin, not a python loop.
+
+``optimal_td_vdds``
+    The per-layer supply query tdsim.policy uses to resolve network
+    policies for a named scenario/corner (accepts the corner's library).
 
 Registries `SCENARIOS` / `CORNERS` back the `--scenario` / `--corner` CLI
 flags of the launchers and the design explorer.
@@ -35,6 +53,7 @@ import numpy as np
 
 from repro.core import constants as C
 from repro.core import chain, design_grid
+from repro.core.techlib import TechLib, get_techlib
 
 __all__ = ["Corner", "Scenario", "CORNERS", "SCENARIOS", "get_corner",
            "get_scenario", "sweep_scenario", "sweep_scenarios",
@@ -51,17 +70,31 @@ PAPER_VDD_GRID = (0.80, 0.72, 0.65, 0.58, 0.52, 0.46, 0.40)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Corner:
-    """Process-corner preset, modelled on the scenario axes.
+    """Process-corner preset: scenario-axis effects + device-table
+    multipliers.
 
     A slow (SS) corner raises the effective threshold -- at a given supply
     the delay cells see less overdrive (modelled as a negative supply
-    shift) and systematic variation eats part of the error budget (sigma
-    derate < 1).  Fast (FF) is the mirror image.  TT is the identity: a TT
-    sweep is bit-identical to a plain `sweep_batched` over the same axes.
+    shift), systematic variation eats part of the error budget (sigma
+    derate < 1), and the device tables themselves degrade: slower cells,
+    higher switching energy and higher mismatch, though *less* subthreshold
+    leakage (higher Vth -- the same coupling as the HVT-like `22fdx-lp`
+    library flavor).  Fast (FF) is the mirror image: faster, lower-energy,
+    tighter-mismatch cells that leak more (the ``*_mult`` fields, applied
+    through `TechLib.at_corner`).  TT is the identity: a TT sweep is
+    bit-identical to a plain `sweep_batched` over the same axes and the
+    default library.
     """
     name: str
-    vdd_shift: float = 0.0      # V, added to every grid supply
-    sigma_derate: float = 1.0   # multiplies the error budget
+    vdd_shift: float = 0.0        # V, added to every grid supply
+    sigma_derate: float = 1.0     # multiplies the error budget
+    # device-table multipliers (TechLib.at_corner); 1.0 = untouched
+    cell_delay_mult: float = 1.0      # delay-cell / unit-cell delays
+    cell_energy_mult: float = 1.0     # cell + TDC periphery energies
+    mismatch_mult: float = 1.0        # delay mismatch sigmas + INL
+    cap_mismatch_mult: float = 1.0    # analog unit-cap mismatch
+    digital_energy_mult: float = 1.0  # adder-tree synthesis energies
+    leakage_mult: float = 1.0         # static-energy fraction
 
     def apply_vdds(self, vdds: Sequence[float]) -> tuple[float, ...]:
         """Shifted supplies, floored at VDD_MIN (the lowest modelled
@@ -78,11 +111,23 @@ class Corner:
                      for s in np.atleast_1d(np.asarray(sigma_maxes,
                                                        np.float64)))
 
+    def apply_lib(self, lib: TechLib | str | None = None) -> TechLib:
+        """The corner's technology library: base tables with this corner's
+        multipliers applied (the identity corner returns the base library
+        unchanged -- bit-identical sweeps)."""
+        return get_techlib(lib).at_corner(self)
+
 
 CORNERS: dict[str, Corner] = {
     "tt": Corner("tt"),
-    "ff": Corner("ff", vdd_shift=+0.04, sigma_derate=1.00),
-    "ss": Corner("ss", vdd_shift=-0.04, sigma_derate=0.90),
+    "ff": Corner("ff", vdd_shift=+0.04, sigma_derate=1.00,
+                 cell_delay_mult=0.90, cell_energy_mult=0.96,
+                 mismatch_mult=0.88, cap_mismatch_mult=0.92,
+                 digital_energy_mult=0.96, leakage_mult=1.50),
+    "ss": Corner("ss", vdd_shift=-0.04, sigma_derate=0.90,
+                 cell_delay_mult=1.12, cell_energy_mult=1.05,
+                 mismatch_mult=1.15, cap_mismatch_mult=1.10,
+                 digital_energy_mult=1.05, leakage_mult=0.70),
 }
 
 
@@ -109,7 +154,10 @@ class Scenario:
     """A named design-space scenario: the grid axes plus corner presets.
 
     All axes are tuples (hashable -> a Scenario is a valid frozen-config
-    field and jit constant).  `sigma_maxes=None` is the exact regime."""
+    field and jit constant).  `sigma_maxes=None` is the exact regime;
+    ``ms``/``tdc_archs`` are the trailing static-unrolled axes of the grid
+    (single-valued by default); ``techlib`` names the base library the
+    corners perturb (`core.techlib.TECHLIBS`)."""
     name: str
     ns: tuple[int, ...] = _DEF_NS
     bit_widths: tuple[int, ...] = (1, 2, 4, 8)
@@ -117,8 +165,15 @@ class Scenario:
     vdds: tuple[float, ...] = PAPER_VDD_GRID
     p_x_ones: tuple[float, ...] = (C.P_X_ONE,)
     w_bit_sparsities: tuple[float, ...] = (C.W_BIT_SPARSITY,)
+    ms: tuple[int, ...] = (C.M_DEFAULT,)
+    tdc_archs: tuple[str, ...] = ("hybrid",)
     corners: tuple[str, ...] = ("tt",)
-    m: int = C.M_DEFAULT
+    techlib: str = "22fdx"
+
+    @property
+    def m(self) -> int:
+        """Leading m entry (the policy-resolution operating point)."""
+        return self.ms[0]
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -146,6 +201,17 @@ SCENARIOS: dict[str, Scenario] = {
                      p_x_ones=(0.3, 0.5),
                      w_bit_sparsities=(0.5, 0.7, 0.9),
                      corners=("tt", "ff", "ss")),
+    # periphery co-design: m and the TDC architecture as swept axes, so the
+    # winner maps expose the paper's Fig. 7 SAR-vs-hybrid boundary and the
+    # periphery-sharing sweet spot per corner
+    "periphery": Scenario("periphery",
+                          ns=(16, 64, 256, 576, 1024, 4096),
+                          bit_widths=(2, 4),
+                          sigma_maxes=(0.5, 2.0),
+                          vdds=(0.60, C.VDD_NOM),
+                          ms=(2, 4, 8, 16, 32),
+                          tdc_archs=("hybrid", "sar"),
+                          corners=("tt", "ff", "ss")),
     # the dense winner-map sweep benched/gated in bench_scenarios (>= 1e5
     # points per corner in one jitted call)
     "dense": Scenario("dense",
@@ -156,6 +222,8 @@ SCENARIOS: dict[str, Scenario] = {
                       vdds=_lin(0.40, 0.80, 12),
                       p_x_ones=(0.3, 0.5),
                       w_bit_sparsities=(0.5, 0.7, 0.9),
+                      ms=(8, 16),
+                      tdc_archs=("hybrid", "sar"),
                       corners=("tt", "ff", "ss")),
 }
 
@@ -173,13 +241,22 @@ def get_scenario(scenario: str | Scenario) -> Scenario:
 # ---------------------------------------------------------------------------
 # Sweeps
 # ---------------------------------------------------------------------------
+_REDUCERS = {
+    "vdd": design_grid.minimize_over_vdd,
+    "m": design_grid.minimize_over_m,
+    "tdc_arch": design_grid.minimize_over_tdc_arch,
+}
+
+
 def _reduce(grid: design_grid.DesignGrid,
             minimize_over: Sequence[str]) -> design_grid.DesignGrid:
     for axis in minimize_over:
-        if axis != "vdd":
-            raise ValueError(f"cannot minimize over axis {axis!r} "
-                             "(only 'vdd' is a reducible axis)")
-        grid = design_grid.minimize_over_vdd(grid)
+        try:
+            grid = _REDUCERS[axis](grid)
+        except KeyError:
+            raise ValueError(
+                f"cannot minimize over axis {axis!r} "
+                f"(reducible axes: {sorted(_REDUCERS)})") from None
     return grid
 
 
@@ -187,8 +264,9 @@ def sweep_scenario(scenario: str | Scenario,
                    corner: str | Corner | None = None,
                    minimize_over: Sequence[str] = ()
                    ) -> design_grid.DesignGrid:
-    """One corner of a scenario as ONE jitted grid call (plus the optional
-    numpy-side Vdd argmin reduction)."""
+    """One corner of a scenario as ONE jitted grid call against the
+    corner's resolved technology library (plus the optional numpy-side
+    argmin reductions)."""
     sc = get_scenario(scenario)
     co = get_corner(corner)
     grid = design_grid.sweep_batched(
@@ -196,7 +274,8 @@ def sweep_scenario(scenario: str | Scenario,
         sigma_maxes=co.apply_sigmas(sc.sigma_maxes),
         vdds=co.apply_vdds(sc.vdds),
         p_x_ones=sc.p_x_ones, w_bit_sparsities=sc.w_bit_sparsities,
-        m=sc.m)
+        m=sc.ms, tdc_arch=sc.tdc_archs,
+        lib=co.apply_lib(sc.techlib))
     return _reduce(grid, minimize_over)
 
 
@@ -205,7 +284,8 @@ def sweep_scenarios(scenario: str | Scenario,
                     minimize_over: Sequence[str] = ()
                     ) -> dict[str, design_grid.DesignGrid]:
     """All corners of a scenario: {corner_name: DesignGrid}.  Corners share
-    one compiled sweep (same grid shape; only the point values differ)."""
+    one compiled sweep per distinct library (same grid shape; the library
+    is a static jit argument, the point values are traced)."""
     sc = get_scenario(scenario)
     cos = [get_corner(c) for c in (corners if corners is not None
                                    else sc.corners)]
@@ -215,19 +295,24 @@ def sweep_scenarios(scenario: str | Scenario,
 def optimal_td_vdds(n, sigma_max, *, bits: int,
                     vdds: Sequence[float] = PAPER_VDD_GRID,
                     m: int = C.M_DEFAULT,
+                    tdc_arch: str = "hybrid",
                     p_x_one: float = C.P_X_ONE,
-                    w_bit_sparsity: float = C.W_BIT_SPARSITY) -> np.ndarray:
+                    w_bit_sparsity: float = C.W_BIT_SPARSITY,
+                    lib: TechLib | str | None = None) -> np.ndarray:
     """Energy-minimizing TD supply per (n, sigma_max) point over a Vdd grid:
     one `evaluate_td_batched` call on the (points x Vdd) product, argmin
     along Vdd (first minimum wins, like the retired python loop).
 
     This is the scenario -> policy coupling: tdsim.policy feeds the layer
-    vector through it to pick each layer's operating point."""
+    vector through it to pick each layer's operating point (at the
+    corner's library when `lib` is a corner-resolved TechLib)."""
     n_a = np.atleast_1d(np.asarray(n, np.float64))
     s_a = np.atleast_1d(np.asarray(sigma_max, np.float64))
     n_a, s_a = np.broadcast_arrays(n_a, s_a)
     v = np.asarray(list(vdds), np.float64)
     res = design_grid.evaluate_td_batched(
         n_a[..., None], s_a[..., None], v[None, :], bits=int(bits), m=int(m),
-        p_x_one=float(p_x_one), w_bit_sparsity=float(w_bit_sparsity))
+        tdc_arch=str(tdc_arch),
+        p_x_one=float(p_x_one), w_bit_sparsity=float(w_bit_sparsity),
+        lib=lib)
     return v[np.argmin(res["e_mac"], axis=-1)]

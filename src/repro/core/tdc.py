@@ -14,6 +14,8 @@ range be clipped to RANGE_KAPPA * sqrt(N) * (2^B - 1) steps.
 All entry points are array-polymorphic: python scalars go through the
 original float math (the scalar golden path), jnp arrays broadcast
 elementwise so the whole design grid evaluates in one traced computation.
+Periphery energies and the unit delay come from a `core.techlib.TechLib`
+(``lib=`` keyword, default bit-identical to the historical constants).
 """
 from __future__ import annotations
 
@@ -24,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import cells
 from repro.core import constants as C
+from repro.core.techlib import DEFAULT_LIB, TechLib
 
 
 def _is_scalar(*xs) -> bool:
@@ -43,15 +46,15 @@ def _e_at(e_nom: float, vdd):
 
 
 @functools.lru_cache(maxsize=4096)
-def _tau_at_cached(vdd: float) -> float:
-    return float(cells.delay_at_vdd(jnp.asarray(C.TAU_UNIT),
+def _tau_at_cached(tau_unit: float, vdd: float) -> float:
+    return float(cells.delay_at_vdd(jnp.asarray(tau_unit),
                                     jnp.asarray(vdd)))
 
 
-def _tau_at(vdd):
+def _tau_at(vdd, tau_unit: float):
     if _is_scalar(vdd):
-        return _tau_at_cached(float(vdd))
-    return cells.delay_at_vdd(jnp.asarray(C.TAU_UNIT), jnp.asarray(vdd))
+        return _tau_at_cached(float(tau_unit), float(vdd))
+    return cells.delay_at_vdd(jnp.asarray(tau_unit), jnp.asarray(vdd))
 
 
 def _lsb_bits(l_osc):
@@ -95,19 +98,20 @@ def range_bits(range_steps):
 # ---------------------------------------------------------------------------
 # SAR-TDC (Eq. 10)
 # ---------------------------------------------------------------------------
-def sar_tdc_energy(b_tdc, m=C.M_DEFAULT, vdd=C.VDD_NOM):
+def sar_tdc_energy(b_tdc, m=C.M_DEFAULT, vdd=C.VDD_NOM,
+                   lib: TechLib = DEFAULT_LIB):
     """Eq. 10: E = E_TD-AND * (M+1)/M * (2^B - 2) + B * E_sample.
 
     The reference delay (to max_in/2) is shared by all M chains -> (M+1)/M.
     """
-    e_and = _e_at(C.E_TD_AND, vdd)
-    e_smp = _e_at(C.E_SAMPLE, vdd)
+    e_and = _e_at(lib.e_td_and, vdd)
+    e_smp = _e_at(lib.e_sample, vdd)
     return e_and * (m + 1) / m * (2.0 ** b_tdc - 2.0) + b_tdc * e_smp
 
 
-def sar_tdc_latency(b_tdc, vdd=C.VDD_NOM):
+def sar_tdc_latency(b_tdc, vdd=C.VDD_NOM, lib: TechLib = DEFAULT_LIB):
     """Binary search: sum of binary-decaying delays ~ 2^B_tdc unit delays."""
-    tau = _tau_at(vdd)
+    tau = _tau_at(vdd, lib.tau_unit)
     return (2.0 ** b_tdc) * tau
 
 
@@ -123,7 +127,8 @@ def sar_tdc_area(b_tdc):
 # ---------------------------------------------------------------------------
 # Hybrid TDC (Eq. 8-9)
 # ---------------------------------------------------------------------------
-def hybrid_tdc_energy(range_units, l_osc, m=C.M_DEFAULT, vdd=C.VDD_NOM):
+def hybrid_tdc_energy(range_units, l_osc, m=C.M_DEFAULT, vdd=C.VDD_NOM,
+                      lib: TechLib = DEFAULT_LIB):
     """Eq. 8 with NR == `range_units` (max chain output in unit delays):
 
       E = (E_cnt/M + E_cnt,load) * NR / (2 L_osc)
@@ -131,10 +136,10 @@ def hybrid_tdc_energy(range_units, l_osc, m=C.M_DEFAULT, vdd=C.VDD_NOM):
         + E_TD-AND * 2^ceil(1 + log2(L_osc))
         + ceil(1 + log2(L_osc)) * E_sample
     """
-    e_and = _e_at(C.E_TD_AND, vdd)
-    e_smp = _e_at(C.E_SAMPLE, vdd)
-    e_cnt = _e_at(C.E_CNT, vdd)
-    e_cl = _e_at(C.E_CNT_LOAD, vdd)
+    e_and = _e_at(lib.e_td_and, vdd)
+    e_smp = _e_at(lib.e_sample, vdd)
+    e_cnt = _e_at(lib.e_cnt, vdd)
+    e_cl = _e_at(lib.e_cnt_load, vdd)
     lsb_bits = _lsb_bits(l_osc)
     return ((e_cnt / m + e_cl) * range_units / (2.0 * l_osc)
             + 2.0 * range_units * e_and / m
@@ -142,7 +147,8 @@ def hybrid_tdc_energy(range_units, l_osc, m=C.M_DEFAULT, vdd=C.VDD_NOM):
             + lsb_bits * e_smp)
 
 
-def optimal_l_osc(range_units, m=C.M_DEFAULT, vdd=C.VDD_NOM):
+def optimal_l_osc(range_units, m=C.M_DEFAULT, vdd=C.VDD_NOM,
+                  lib: TechLib = DEFAULT_LIB):
     """Eq. 9 closed form (Gauss brackets ignored), then integer refinement.
 
       L_osc ~ (sqrt((E_cnt/M + E_cnt,load) * 2 E_TD-AND NR ln4) - E_sample)
@@ -155,26 +161,26 @@ def optimal_l_osc(range_units, m=C.M_DEFAULT, vdd=C.VDD_NOM):
     minimum lies on a block endpoint 2^k, the window edge, or L0 itself.
     """
     if _is_scalar(range_units, vdd):
-        e_and = _e_at(C.E_TD_AND, vdd)
-        e_smp = _e_at(C.E_SAMPLE, vdd)
-        e_cnt = _e_at(C.E_CNT, vdd)
-        e_cl = _e_at(C.E_CNT_LOAD, vdd)
+        e_and = _e_at(lib.e_td_and, vdd)
+        e_smp = _e_at(lib.e_sample, vdd)
+        e_cnt = _e_at(lib.e_cnt, vdd)
+        e_cl = _e_at(lib.e_cnt_load, vdd)
         num = math.sqrt((e_cnt / m + e_cl) * 2.0 * e_and * range_units
                         * math.log(4.0)) - e_smp
         l0 = num / (4.0 * e_and * math.log(2.0))
         l0 = max(1, int(round(l0)))
         # refine on the exact (bracketed) Eq. 8 within a local window
-        best_l, best_e = l0, hybrid_tdc_energy(range_units, l0, m, vdd)
+        best_l, best_e = l0, hybrid_tdc_energy(range_units, l0, m, vdd, lib)
         for cand in range(max(1, l0 // 2), 2 * l0 + 2):
-            e = hybrid_tdc_energy(range_units, cand, m, vdd)
+            e = hybrid_tdc_energy(range_units, cand, m, vdd, lib)
             if e < best_e:
                 best_l, best_e = cand, e
         return best_l
     ru = jnp.asarray(range_units, jnp.float32)
-    e_and = _e_at(C.E_TD_AND, vdd)
-    e_smp = _e_at(C.E_SAMPLE, vdd)
-    e_cnt = _e_at(C.E_CNT, vdd)
-    e_cl = _e_at(C.E_CNT_LOAD, vdd)
+    e_and = _e_at(lib.e_td_and, vdd)
+    e_smp = _e_at(lib.e_sample, vdd)
+    e_cnt = _e_at(lib.e_cnt, vdd)
+    e_cl = _e_at(lib.e_cnt_load, vdd)
     num = jnp.sqrt((e_cnt / m + e_cl) * 2.0 * e_and * ru
                    * math.log(4.0)) - e_smp
     l0 = jnp.maximum(1.0, jnp.round(num / (4.0 * e_and * math.log(2.0))))
@@ -189,15 +195,16 @@ def optimal_l_osc(range_units, m=C.M_DEFAULT, vdd=C.VDD_NOM):
     cand = jnp.concatenate([l0[None, ...], rest], axis=0)  # L0 first: it
     # keeps ties exactly like the scalar scan (strict < never replaces it)
     es = hybrid_tdc_energy(ru[None, ...], cand, m,
-                           jnp.asarray(vdd)[None, ...])
+                           jnp.asarray(vdd)[None, ...], lib)
     best = jnp.argmin(es, axis=0)
     return jnp.take_along_axis(cand, best[None, ...], axis=0)[0]
 
 
-def hybrid_tdc_latency(range_units, l_osc, vdd=C.VDD_NOM):
+def hybrid_tdc_latency(range_units, l_osc, vdd=C.VDD_NOM,
+                       lib: TechLib = DEFAULT_LIB):
     """Counter runs concurrently with the chain; after the edge arrives, the
     LSB SAR covers a 2*L_osc window -> ~2*L_osc unit delays + sampling."""
-    tau = _tau_at(vdd)
+    tau = _tau_at(vdd, lib.tau_unit)
     lsb_bits = _lsb_bits(l_osc)
     return 2.0 * l_osc * tau + lsb_bits * 4.0 * tau
 
@@ -222,13 +229,14 @@ def hybrid_tdc_area(range_units, l_osc, m=C.M_DEFAULT):
 def tdc_energy_per_vmm(n, bits: int, redundancy,
                        m=C.M_DEFAULT, vdd=C.VDD_NOM,
                        arch: str = "hybrid",
-                       clip_range: bool = True):
+                       clip_range: bool = True,
+                       lib: TechLib = DEFAULT_LIB):
     """Energy of one chain conversion, E_TDC(N, M) of Eq. 7."""
     steps = effective_range_steps(n, bits, clip_range)
     units = steps * redundancy
     if arch == "hybrid":
-        l = optimal_l_osc(units, m, vdd)
-        return hybrid_tdc_energy(units, l, m, vdd)
+        l = optimal_l_osc(units, m, vdd, lib)
+        return hybrid_tdc_energy(units, l, m, vdd, lib)
     elif arch == "sar":
-        return sar_tdc_energy(range_bits(steps), m, vdd)
+        return sar_tdc_energy(range_bits(steps), m, vdd, lib)
     raise ValueError(f"unknown TDC arch {arch!r}")

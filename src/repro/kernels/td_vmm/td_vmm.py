@@ -31,6 +31,39 @@ backend and falls back to interpret mode elsewhere (CPU CI); the env var
 default tile is the whole (padded) output — the interpreter pays per grid
 step, not per byte of VMEM — while the compiled default is the MXU-shaped
 128 x 128.
+
+Public surface (API reference)
+------------------------------
+``td_vmm_pallas(x_int, w_int, params, seed, *, bits_a, bits_w, n_chain,
+k_true=None, bm=None, bn=None, interpret=None) -> (M, N) float32``
+
+  * ``x_int`` — (M, K) int32/float32 SIGNED activation codes in
+    [-2^(bits_a-1), 2^(bits_a-1)-1] (LSQ levels, dimensionless).
+  * ``w_int`` — (K, N) SIGNED weight codes, range per ``bits_w``.
+  * ``params`` — (2,) float32 RUNTIME operand ``[sigma_chain, tdc_q]``:
+    per-chain injected noise std in output-LSB units, and the TDC LSB
+    coarsening factor (q <= 1 means unit-LSB rounding).  Traced, never a
+    compile-time constant: may be a tracer under vmap/scan (the
+    noise-tolerance sweep) with zero recompiles.
+  * ``seed`` — uint32 scalar stream seed (`ref.derive_seed` folds a jax
+    PRNG key into it; GOLDEN-salted counter hash in-kernel).
+  * static (compile-keyed) arguments: ``bits_a``/``bits_w`` (bit widths),
+    ``n_chain`` (hardware chain length; K must be a multiple — pad freely,
+    positions >= ``k_true`` are masked in-kernel), tile sizes ``bm``/``bn``
+    and ``interpret``.
+  * returns the noisy TD product in output-LSB units, fp32 — bit-exact
+    equal to the jnp simulator oracle at sigma=0, q<=1
+    (`ref.td_vmm_signed_ref`, tests/test_td_vmm_engine.py).
+
+``default_interpret() -> bool`` — the env/backend interpret policy above.
+
+Consumers: `tdsim.td_linear.td_matmul` routes EVERY ``mode == "td"``
+matmul here (custom_vjp STE: Pallas forward, fake-quant backward);
+`kernels.td_vmm.ops` holds the jit wrapper, `kernels.td_vmm.ref` the
+oracles.  Hardware energy/latency of the modelled chain come from the
+design engine (`core.design_grid` at a `core.techlib.TechLib`), not from
+this kernel — the kernel only executes the (R, q, sigma_chain) policy the
+engine solved.
 """
 from __future__ import annotations
 

@@ -47,8 +47,7 @@ def resolve_policies(tds, scenario=None, corner=None
             out[i] = td_policy.quant_policy(td.bits_a, td.bits_w)
         elif td.mode == "td":
             td_specs.append(td_policy.TDLayerSpec(
-                td.bits_a, td.bits_w, td.n_chain, td.sigma_max,
-                use_pallas=td.use_pallas))
+                td.bits_a, td.bits_w, td.n_chain, td.sigma_max))
             td_idx.append(i)
         else:
             raise ValueError(f"unknown td mode {td.mode!r}")

@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import design_space
-from repro.core import constants as C
 from repro.tdsim.policy import TDPolicy
 
 
@@ -41,7 +40,7 @@ class EnergyReport:
 
 def account(shapes: list[MatmulShape], pol: TDPolicy, domain: str = "td",
             sigma_max: float | None = None,
-            m: int = C.M_DEFAULT) -> EnergyReport:
+            m: int | None = None) -> EnergyReport:
     """Energy per generated/processed token for a list of matmul shapes.
 
     Each (k, n_out) matmul maps to n_out hardware chains; a chain of length k
@@ -49,20 +48,25 @@ def account(shapes: list[MatmulShape], pol: TDPolicy, domain: str = "td",
     (that is the 'array dimension' axis of the paper's figures).
 
     The accounting runs at the policy's operating point: `pol.vdd` (e.g. a
-    scenario grid-argmin supply) and, when `sigma_max` is not given, the
-    budget the policy was solved for (`pol.sigma_max`; exact regime when
-    the policy carries none).
+    scenario grid-argmin supply), `pol.m`/`pol.tdc_arch` (the periphery the
+    solve assumed; `m=` overrides), `pol.techlib` (the corner-resolved
+    technology library the (R, q) solve ran against -- so --corner reports
+    match the physics the policy actually executes) and, when `sigma_max`
+    is not given, the budget the policy was solved for (`pol.sigma_max`;
+    exact regime when the policy carries none).
     """
     if sigma_max is None:
         sigma_max = pol.sigma_max
     s_max = (design_space.sigma_exact() if sigma_max is None else sigma_max)
+    m = pol.m if m is None else m
+    kw = {"tdc_arch": pol.tdc_arch} if domain == "td" else {}
     per_layer = {}
     tot_macs = 0.0
     tot_e = 0.0
     for sh in shapes:
         n_eval = min(sh.k, pol.n_chain)
         pt = design_space.evaluate(domain, n_eval, pol.bits_w, s_max, m,
-                                   vdd=pol.vdd)
+                                   vdd=pol.vdd, lib=pol.techlib, **kw)
         macs = sh.k * sh.n_out * sh.calls_per_token
         # bit-serial activations: one pass per activation bit-plane
         passes = pol.bits_a if domain == "td" else 1

@@ -16,10 +16,12 @@ heterogeneous per-layer (R, q, sigma_chain) solution.
 
 Scenario coupling: `apply_scenario` resolves each layer's operating point
 for a named scenario / technology corner (`core.scenario`): the corner
-derates the error budget and shifts the supply grid, and the layer's Vdd is
-picked by the grid argmin (`scenario.optimal_td_vdds`) instead of staying
-pinned at nominal.  `solve_network_policies(..., scenario=, corner=)` and
-the launchers' `--scenario/--corner` flags go through it.
+derates the error budget, shifts the supply grid AND resolves the
+technology library the solve runs against (`Corner.apply_lib` — slower,
+leakier, higher-mismatch tables at ss; the reverse at ff), and the layer's
+Vdd is picked by the grid argmin (`scenario.optimal_td_vdds`) at that same
+library.  `solve_network_policies(..., scenario=, corner=)` and the
+launchers' `--scenario/--corner` flags go through it.
 """
 from __future__ import annotations
 
@@ -33,6 +35,7 @@ from repro.core import chain as chain_mod
 from repro.core import constants as C
 from repro.core import design_grid
 from repro.core import scenario as scenario_mod
+from repro.core.techlib import TechLib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,12 +48,14 @@ class TDPolicy:
     redundancy: int = 1          # R
     sigma_chain: float = 0.0     # injected per-chain noise std (LSB units)
     tdc_q: int = 1               # TDC LSB coarsening factor
+    m: int = C.M_DEFAULT         # delay-line parallelism the solve assumed
+    tdc_arch: str = "hybrid"     # TDC architecture the solve assumed
     vdd: float = C.VDD_NOM       # operating supply the (R, q) solve assumed
     sigma_max: float | None = None   # error budget the solve ran at
                                      # (None = exact regime / not solved)
-    use_pallas: bool = True      # vestigial: every "td" matmul runs the
-                                 # Pallas kernel (kernels.td_vmm.ops);
-                                 # kept for config compatibility only
+    techlib: TechLib | None = None   # technology library the solve ran at
+                                     # (None = default; a corner-resolved
+                                     # TechLib for --corner policies)
 
     def replace(self, **kw) -> "TDPolicy":
         return dataclasses.replace(self, **kw)
@@ -69,17 +74,20 @@ class TDLayerSpec:
     threshold is that this residual is harmless after rounding.  The input
     statistics default to the paper's Section IV constants; scenario
     resolution overrides them so the (R, q) solve runs under the same
-    workload model that picked the supply.
+    workload model that picked the supply.  `techlib` pins the technology
+    library the solve runs against (None = default; scenario resolution
+    sets the corner-resolved library here).
     """
     bits_a: int = 4
     bits_w: int = 4
     n_chain: int = C.N_BASELINE
     sigma_max: float | None = None
     vdd: float = C.VDD_NOM
-    use_pallas: bool = True      # vestigial, see TDPolicy.use_pallas
     p_x_one: float = C.P_X_ONE
     w_bit_sparsity: float = C.W_BIT_SPARSITY
     m: int = C.M_DEFAULT
+    tdc_arch: str = "hybrid"
+    techlib: TechLib | None = None
 
 
 def quant_policy(bits_a: int = 4, bits_w: int = 4) -> TDPolicy:
@@ -91,11 +99,12 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
     call per distinct weight bit width (the joint (R, q) solution is
     identical to design_space.evaluate_td)."""
     specs = list(specs)
-    order: dict[tuple[int, int], list[int]] = {}
+    order: dict[tuple, list[int]] = {}
     for i, sp in enumerate(specs):
-        order.setdefault((sp.bits_w, sp.m), []).append(i)
+        order.setdefault((sp.bits_w, sp.m, sp.tdc_arch, sp.techlib),
+                         []).append(i)
     out: list[TDPolicy | None] = [None] * len(specs)
-    for (bits_w, m), idxs in order.items():
+    for (bits_w, m, tdc_arch, lib), idxs in order.items():
         n = np.array([specs[i].n_chain for i in idxs], np.float64)
         sig = np.array([chain_mod.sigma_max_exact()
                         if specs[i].sigma_max is None else specs[i].sigma_max
@@ -104,8 +113,9 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
         p1 = np.array([specs[i].p_x_one for i in idxs], np.float64)
         wsp = np.array([specs[i].w_bit_sparsity for i in idxs], np.float64)
         res = design_grid.evaluate_td_batched(n, sig, vdd, bits=bits_w,
-                                              m=m, p_x_one=p1,
-                                              w_bit_sparsity=wsp)
+                                              m=m, tdc_arch=tdc_arch,
+                                              p_x_one=p1,
+                                              w_bit_sparsity=wsp, lib=lib)
         for k, i in enumerate(idxs):
             sp = specs[i]
             out[i] = TDPolicy(
@@ -114,9 +124,10 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
                 redundancy=int(res["redundancy"][k]),
                 sigma_chain=float(res["sigma_chain_achieved"][k]),
                 tdc_q=int(res["tdc_q"][k]),
+                m=sp.m, tdc_arch=sp.tdc_arch,
                 vdd=float(vdd[k]),
                 sigma_max=sp.sigma_max,
-                use_pallas=sp.use_pallas)
+                techlib=sp.techlib)
     return out  # type: ignore[return-value]
 
 
@@ -126,15 +137,18 @@ def apply_scenario(specs: Sequence[TDLayerSpec],
     """Resolve each layer spec's operating point for a scenario/corner.
 
     The corner derates every error budget (an exact-regime layer derates
-    from sigma_max_exact) and shifts the scenario's supply grid; with
-    `minimize_vdd` each layer's supply is the energy-minimizing grid point
-    from one batched `optimal_td_vdds` call per distinct weight bit width,
-    otherwise the corner-shifted nominal supply is used.  The scenario's
-    leading activity/sparsity entries set the input statistics of the
-    argmin."""
+    from sigma_max_exact), shifts the scenario's supply grid and resolves
+    the technology library the solve runs against (`Corner.apply_lib` of
+    the scenario's base library); with `minimize_vdd` each layer's supply
+    is the energy-minimizing grid point from one batched
+    `optimal_td_vdds` call per distinct weight bit width -- evaluated at
+    that same corner library -- otherwise the corner-shifted nominal
+    supply is used.  The scenario's leading activity/sparsity entries set
+    the input statistics of the argmin."""
     sc = scenario_mod.get_scenario(scenario)
     co = scenario_mod.get_corner(corner)
     vdd_grid = co.apply_vdds(sc.vdds)
+    lib = co.apply_lib(sc.techlib)
     specs = list(specs)
     # exact-regime layers derate from the explicit exact budget
     sig_eff = [co.apply_sigmas((chain_mod.sigma_max_exact()
@@ -151,18 +165,22 @@ def apply_scenario(specs: Sequence[TDLayerSpec],
                 [specs[i].n_chain for i in idxs],
                 [sig_eff[i] for i in idxs],
                 bits=bits_w, vdds=vdd_grid, m=sc.m,
+                tdc_arch=sc.tdc_archs[0],
                 p_x_one=sc.p_x_ones[0],
-                w_bit_sparsity=sc.w_bit_sparsities[0])
+                w_bit_sparsity=sc.w_bit_sparsities[0],
+                lib=lib)
             vdds[idxs] = v
     else:
         vdds = np.asarray(co.apply_vdds([sp.vdd for sp in specs]))
     # the final (R, q, sigma_chain) solve must run under the same workload
-    # model the supply argmin assumed: input statistics AND chain count m
+    # model the supply argmin assumed: input statistics, chain count m,
+    # TDC architecture AND the corner's technology library
     return [dataclasses.replace(sp, sigma_max=float(sig_eff[i]),
                                 vdd=float(vdds[i]),
                                 p_x_one=float(sc.p_x_ones[0]),
                                 w_bit_sparsity=float(sc.w_bit_sparsities[0]),
-                                m=int(sc.m))
+                                m=int(sc.m), tdc_arch=str(sc.tdc_archs[0]),
+                                techlib=lib)
             for i, sp in enumerate(specs)]
 
 
@@ -211,7 +229,6 @@ def pol_top(pol) -> TDPolicy:
 
 def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
                            n_chain=C.N_BASELINE, vdd=C.VDD_NOM,
-                           use_pallas: bool = True,
                            top: TDPolicy = PRECISE,
                            scenario=None, corner=None,
                            minimize_vdd: bool = True) -> NetworkPolicy:
@@ -241,7 +258,7 @@ def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
     specs = [TDLayerSpec(bits_a=int(ba[i]), bits_w=int(bw[i]),
                          n_chain=int(nc[i]),
                          sigma_max=None if np.isnan(sig[i]) else sig[i],
-                         vdd=float(vd[i]), use_pallas=use_pallas)
+                         vdd=float(vd[i]))
              for i in range(n_layers)]
     if scenario is not None:
         specs = apply_scenario(specs, scenario, corner, minimize_vdd)
@@ -251,8 +268,7 @@ def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,
 def solve_td_policy(bits_a: int = 4, bits_w: int = 4,
                     n_chain: int = C.N_BASELINE,
                     sigma_max: float | None = None,
-                    vdd: float = C.VDD_NOM,
-                    use_pallas: bool = True) -> TDPolicy:
+                    vdd: float = C.VDD_NOM) -> TDPolicy:
     """Single-layer wrapper over the batched solver."""
     return solve_td_policies([TDLayerSpec(bits_a, bits_w, n_chain, sigma_max,
-                                          vdd, use_pallas)])[0]
+                                          vdd)])[0]

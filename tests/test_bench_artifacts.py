@@ -50,8 +50,9 @@ def test_design_grid_artifacts(tmp_path):
     hdr, rows = _read_csv(paths[2])
     assert hdr == bench_design_grid.INTERVAL_HEADER
     assert len(rows) >= 1
+    lo, hi = hdr.index("n_min"), hdr.index("n_max")
     for r in rows:
-        assert int(r[7]) <= int(r[8])    # n_min <= n_max
+        assert int(r[lo]) <= int(r[hi])    # n_min <= n_max
 
 
 def test_noise_tolerance_artifacts(tmp_path):
@@ -108,7 +109,8 @@ def test_scenario_artifacts(tmp_path):
                                            "winner_map.csv"))
         assert hdr == bench_scenarios.WINNER_HEADER
         assert len(rows) == g.n_points // len(g.domains)
-        assert {r[7] for r in rows} <= set(g.domains)
+        wi = hdr.index("winner")
+        assert {r[wi] for r in rows} <= set(g.domains)
         rt = design_grid.DesignGrid.load_npz(
             os.path.join(tmp_path, corner, "grid.npz"))
         np.testing.assert_array_equal(rt.e_mac, g.e_mac)

@@ -20,7 +20,7 @@ def _assert_grid_matches_scalar(grid, ns, bits, sigma):
         for ni, n in enumerate(ns):
             pts = {d: ds.evaluate(d, n, b, sigma) for d in ds.DOMAINS}
             for di, d in enumerate(grid.domains):
-                ix = (di, bi, ni, 0, 0, 0, 0)
+                ix = (di, bi, ni, 0, 0, 0, 0, 0, 0)
                 sp = pts[d]
                 assert grid.redundancy[ix] == sp.redundancy, (d, n, b)
                 assert grid.tdc_q[ix] == sp.aux.get("tdc_lsb_q", 1), (d, n, b)
@@ -32,7 +32,8 @@ def _assert_grid_matches_scalar(grid, ns, bits, sigma):
                                            sp.area_per_mac, rtol=1e-4)
             # winner domain must agree exactly (the paper's headline result)
             w_scalar = min(pts, key=lambda d: pts[d].e_mac)
-            assert grid.winner_names()[bi, ni, 0, 0, 0, 0] == w_scalar, (n, b)
+            assert grid.winner_names()[bi, ni, 0, 0, 0, 0, 0, 0] \
+                == w_scalar, (n, b)
 
 
 class TestScalarParity:
@@ -55,8 +56,10 @@ class TestScalarParity:
                        for d in ds.DOMAINS}
                 thr_w = max(pts, key=lambda d: pts[d].throughput)
                 area_w = min(pts, key=lambda d: pts[d].area_per_mac)
-                assert g.winner_names("throughput")[bi, ni, 0, 0, 0, 0] == thr_w
-                assert g.winner_names("area_per_mac")[bi, ni, 0, 0, 0, 0] == area_w
+                assert g.winner_names("throughput")[
+                    bi, ni, 0, 0, 0, 0, 0, 0] == thr_w
+                assert g.winner_names("area_per_mac")[
+                    bi, ni, 0, 0, 0, 0, 0, 0] == area_w
 
     def test_vdd_axis_matches_scalar(self):
         vdds = (0.45, 0.60, 0.80)
@@ -111,7 +114,7 @@ class TestQueries:
         g = ds.sweep_batched(ns=FIG9_NS, bit_widths=(4,),
                              sigma_maxes=SIGMA_RELAXED)
         xs = ds.domain_crossovers(g)
-        w = g.winner_names()[0, :, 0, 0, 0, 0]
+        w = g.winner_names()[0, :, 0, 0, 0, 0, 0, 0]
         expect = [(int(g.ns[i]), int(g.ns[i + 1]), w[i], w[i + 1])
                   for i in range(len(w) - 1) if w[i] != w[i + 1]]
         got = [(x["n_low"], x["n_high"], x["domain_low"], x["domain_high"])

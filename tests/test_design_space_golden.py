@@ -121,14 +121,15 @@ def test_batched_path_matches_fixture(golden):
             for ni, n in enumerate(NS):
                 for di, d in enumerate(g.domains):
                     ref = points[(regime, d, n, b)]
-                    ix = (di, bi, ni, 0, 0, 0, 0)
+                    ix = (di, bi, ni, 0, 0, 0, 0, 0, 0)
                     assert g.redundancy[ix] == ref["redundancy"], (d, n, b)
                     assert g.tdc_q[ix] == ref["tdc_q"], (d, n, b)
                     for f in ("e_mac", "throughput", "area_per_mac"):
                         np.testing.assert_allclose(
                             getattr(g, f)[ix], ref[f], rtol=1e-4,
                             err_msg=f"{regime}/{d}/n={n}/B={b}/{f}")
-                assert names[bi, ni, 0, 0, 0, 0] == winners[(regime, n, b)], \
+                assert names[bi, ni, 0, 0, 0, 0, 0, 0] \
+                    == winners[(regime, n, b)], \
                     (regime, n, b)
 
 

@@ -31,9 +31,10 @@ class TestSparsityAxes:
                                        sigma_maxes=SIGMA, p_x_ones=p1,
                                        w_bit_sparsities=wsp)
                 np.testing.assert_array_equal(
-                    g.e_mac[..., ai, wi], one.e_mac[..., 0, 0])
+                    g.e_mac[..., ai, wi, 0, 0], one.e_mac[..., 0, 0, 0, 0])
                 np.testing.assert_array_equal(
-                    g.redundancy[..., ai, wi], one.redundancy[..., 0, 0])
+                    g.redundancy[..., ai, wi, 0, 0],
+                    one.redundancy[..., 0, 0, 0, 0])
 
     def test_sparsity_moves_all_domains(self):
         """Denser weights (lower sparsity) must cost energy in every
@@ -42,18 +43,19 @@ class TestSparsityAxes:
                              w_bit_sparsities=(0.3, 0.9))
         for d in g.domains:
             di = g.domain_index(d)
-            dense = g.e_mac[di, 0, 0, 0, 0, 0, 0]
-            sparse = g.e_mac[di, 0, 0, 0, 0, 0, 1]
+            dense = g.e_mac[di, 0, 0, 0, 0, 0, 0, 0, 0]
+            sparse = g.e_mac[di, 0, 0, 0, 0, 0, 1, 0, 0]
             assert dense > sparse, d
 
     def test_default_stats_match_legacy_grid(self):
         """Default axes reproduce the pre-refactor (implicit constants)
         grid exactly -- same engine, same numbers."""
         g = ds.sweep_batched(ns=NS, bit_widths=(1, 4), sigma_maxes=SIGMA)
-        assert g.shape == (3, 2, len(NS), 1, 1, 1, 1)
+        assert g.shape == (3, 2, len(NS), 1, 1, 1, 1, 1, 1)
         p = ds.evaluate_td(576, 4, SIGMA)
         ni = NS.index(576)
-        np.testing.assert_allclose(g.e_mac[0, 1, ni, 0, 0, 0, 0], p.e_mac,
+        np.testing.assert_allclose(g.e_mac[0, 1, ni, 0, 0, 0, 0, 0, 0],
+                                   p.e_mac,
                                    rtol=1e-6)
 
 
@@ -76,7 +78,7 @@ class TestVddReduction:
             for b in (2, 4):
                 ni = list(red.ns).index(n)
                 bi = list(red.bit_widths).index(b)
-                ix = (tdi, bi, ni, 0, 0, 0, 0)
+                ix = (tdi, bi, ni, 0, 0, 0, 0, 0, 0)
                 p = ds.td_vdd_optimized(n, b, SIGMA)
                 rel = abs(red.e_mac[ix] - p.e_mac) / p.e_mac
                 # differing supply picks are only acceptable as a
@@ -280,4 +282,5 @@ class TestScalarRetirement:
         g = ds.sweep_batched(ns=(576,), bit_widths=(4,), sigma_maxes=SIGMA)
         for d in ds.DOMAINS:
             p = ds.evaluate(d, 576, 4, SIGMA)
-            assert p.e_mac == g.e_mac[g.domain_index(d), 0, 0, 0, 0, 0, 0]
+            assert p.e_mac == g.e_mac[g.domain_index(d),
+                                      0, 0, 0, 0, 0, 0, 0, 0]

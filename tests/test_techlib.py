@@ -1,0 +1,313 @@
+"""Technology-library corners: TT parity, corner-physics direction, and the
+m/tdc_arch grid axes.
+
+Covers the tentpole guarantees of the TechLib refactor:
+
+  * the default library reproduces the pre-TechLib engine bit-identically
+    (the golden fixture in test_design_space_golden.py is the deep lock;
+    here we pin the structural identities: `at_corner(tt) is` the default,
+    default-lib sweeps equal no-lib sweeps exactly);
+  * ss/ff corner libraries move energy and chain noise monotonically in
+    the documented direction (slower/leakier/noisier at ss, the reverse
+    at ff) -- property-tested over random multipliers when hypothesis is
+    available;
+  * `m` and `tdc_arch` are real grid axes: slices equal independent
+    sweeps, and the `minimize_over_m` / `minimize_over_tdc_arch`
+    reductions are exact axis minima with faithful per-point opt records.
+"""
+import numpy as np
+import pytest
+
+from repro.core import chain, design_grid, design_space as ds
+from repro.core import scenario as sc
+from repro.core import techlib as tl
+
+SIGMA = 2.0
+NS = (16, 64, 576)
+
+
+class TestDefaultParity:
+    def test_tt_corner_is_identity_object(self):
+        """The identity corner must return the very same library object --
+        the strongest possible bit-identity guarantee for TT sweeps."""
+        assert tl.DEFAULT_LIB.at_corner(sc.CORNERS["tt"]) is tl.DEFAULT_LIB
+        assert sc.CORNERS["tt"].apply_lib() is tl.DEFAULT_LIB
+
+    def test_default_lib_sweep_bit_identical(self):
+        """sweep_batched(lib=DEFAULT_LIB) == sweep_batched() exactly."""
+        a = ds.sweep_batched(ns=NS, bit_widths=(1, 4), sigma_maxes=SIGMA)
+        b = ds.sweep_batched(ns=NS, bit_widths=(1, 4), sigma_maxes=SIGMA,
+                             lib=tl.DEFAULT_LIB)
+        c = ds.sweep_batched(ns=NS, bit_widths=(1, 4), sigma_maxes=SIGMA,
+                             lib="22fdx")
+        for f in ("e_mac", "throughput", "area_per_mac", "redundancy",
+                  "tdc_q", "latency"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f), f)
+            np.testing.assert_array_equal(getattr(a, f), getattr(c, f), f)
+
+    def test_registry_and_lookup(self):
+        assert tl.get_techlib(None) is tl.DEFAULT_LIB
+        assert tl.get_techlib("22fdx") is tl.DEFAULT_LIB
+        assert tl.get_techlib(tl.TECHLIBS["22fdx-lp"]).name == "22fdx-lp"
+        with pytest.raises(ValueError):
+            tl.get_techlib("7nm-finfet")
+        with pytest.raises(KeyError):
+            tl.DEFAULT_LIB.cell("nand3")
+
+    def test_lib_is_hashable_jit_constant(self):
+        """TechLib must hash/compare by value: equal libs share a compiled
+        sweep, distinct libs key distinct ones."""
+        rebuilt = tl.DEFAULT_LIB.at_corner(sc.Corner("x", mismatch_mult=2.0))
+        again = tl.DEFAULT_LIB.at_corner(sc.Corner("x", mismatch_mult=2.0))
+        assert rebuilt == again and hash(rebuilt) == hash(again)
+        assert rebuilt != tl.DEFAULT_LIB
+
+
+class TestCornerPhysics:
+    def test_ss_ff_move_td_energy_and_noise(self):
+        """At identical (N, B, sigma, Vdd): ss (slower/leakier/noisier
+        tables) must cost TD energy and chain noise vs the default library,
+        ff must relieve both."""
+        lib_ss = sc.CORNERS["ss"].apply_lib()
+        lib_ff = sc.CORNERS["ff"].apply_lib()
+        for n in NS:
+            e_tt = ds.evaluate_td(n, 4, SIGMA).e_mac
+            assert ds.evaluate_td(n, 4, SIGMA, lib=lib_ss).e_mac > e_tt
+            assert ds.evaluate_td(n, 4, SIGMA, lib=lib_ff).e_mac < e_tt
+        s_tt = float(chain.chain_sigma(576.0, 4, 4.0))
+        assert float(chain.chain_sigma(576.0, 4, 4.0, lib=lib_ss)) > s_tt
+        assert float(chain.chain_sigma(576.0, 4, 4.0, lib=lib_ff)) < s_tt
+
+    def test_corner_library_moves_winner_maps(self):
+        """The bench gate in miniature: same axes, only the library
+        differs -> the ss winner map must not equal tt somewhere on a
+        modest grid (device physics, not supply, flips winners)."""
+        axes = dict(ns=(16, 32, 64, 128, 256, 576, 1024, 2048),
+                    bit_widths=(1, 2, 4, 8), sigma_maxes=(0.5, 2.0),
+                    vdds=(0.5, 0.8))
+        w_tt = ds.sweep_batched(**axes).winner_names()
+        w_ss = ds.sweep_batched(
+            **axes, lib=sc.CORNERS["ss"].apply_lib()).winner_names()
+        assert (w_tt != w_ss).any()
+
+    def test_scenario_policy_solves_at_corner_library(self):
+        """apply_scenario must pin the corner library on the spec so the
+        (R, q) solve runs the corner's physics: the ss solve needs at
+        least as much redundancy as tt at the same operating point."""
+        from repro.tdsim import TDLayerSpec, apply_scenario, \
+            solve_td_policies
+        spec = [TDLayerSpec(4, 4, 576, 2.0)]
+        out_ss = apply_scenario(spec, "vdd-opt", "ss")
+        assert out_ss[0].techlib == sc.CORNERS["ss"].apply_lib()
+        out_tt = apply_scenario(spec, "vdd-opt", "tt")
+        assert out_tt[0].techlib is tl.DEFAULT_LIB
+        pol_ss = solve_td_policies(out_ss)[0]
+        # same budget/supply, corner physics only: ss >= tt redundancy
+        ref = solve_td_policies([out_ss[0].__class__(
+            4, 4, 576, out_ss[0].sigma_max, out_ss[0].vdd,
+            out_ss[0].p_x_one, out_ss[0].w_bit_sparsity, out_ss[0].m)])[0]
+        assert pol_ss.redundancy >= ref.redundancy
+        assert pol_ss.sigma_chain > 0.0
+
+    def test_energy_meter_accounts_at_policy_library(self):
+        """The solved policy records its library and energy accounting
+        re-evaluates at it -- a --corner report must reflect the corner's
+        physics, not the default tables."""
+        from repro.tdsim import TDLayerSpec, apply_scenario, \
+            solve_td_policies
+        from repro.tdsim.energy_meter import MatmulShape, account
+        spec = apply_scenario([TDLayerSpec(4, 4, 576, 2.0)],
+                              "vdd-opt", "ss")
+        pol = solve_td_policies(spec)[0]
+        assert pol.techlib == sc.CORNERS["ss"].apply_lib()
+        rep = account([MatmulShape("l0", 576, 64)], pol)
+        want = ds.evaluate_td(576, 4, pol.sigma_max, vdd=pol.vdd,
+                              lib=pol.techlib)
+        got = rep.per_layer["l0"]
+        assert got["e_mac"] == want.e_mac and got["r"] == want.redundancy
+        # and the ss-library account costs more than the default-library one
+        default = account([MatmulShape("l0", 576, 64)],
+                          pol.replace(techlib=None))
+        assert rep.total_energy_per_token \
+            > default.total_energy_per_token
+
+
+class TestMTdcArchAxes:
+    def test_axis_slices_match_independent_sweeps(self):
+        g = ds.sweep_batched(ns=NS, bit_widths=(4,), sigma_maxes=SIGMA,
+                             m=(4, 16), tdc_arch=("hybrid", "sar"))
+        assert g.shape[-2:] == (2, 2)
+        for mi, m in enumerate((4, 16)):
+            for ti, arch in enumerate(("hybrid", "sar")):
+                one = ds.sweep_batched(ns=NS, bit_widths=(4,),
+                                       sigma_maxes=SIGMA, m=m,
+                                       tdc_arch=arch)
+                np.testing.assert_array_equal(g.e_mac[..., mi, ti],
+                                              one.e_mac[..., 0, 0])
+                np.testing.assert_array_equal(g.l_osc[..., mi, ti],
+                                              one.l_osc[..., 0, 0])
+
+    def test_tdc_arch_only_moves_td(self):
+        """analog/digital are TDC-free: their slices must be identical
+        across the tdc_arch axis (the engine broadcasts, never
+        re-solves)."""
+        g = ds.sweep_batched(ns=NS, bit_widths=(4,), sigma_maxes=SIGMA,
+                             tdc_arch=("hybrid", "sar"))
+        for d in ("analog", "digital"):
+            di = g.domain_index(d)
+            np.testing.assert_array_equal(g.e_mac[di, ..., 0],
+                                          g.e_mac[di, ..., 1])
+        tdi = g.domain_index("td")
+        assert (g.e_mac[tdi, ..., 0] != g.e_mac[tdi, ..., 1]).any()
+
+    def test_minimize_over_m_is_axis_min(self):
+        g = ds.sweep_batched(ns=NS, bit_widths=(4,), sigma_maxes=SIGMA,
+                             m=(2, 8, 32))
+        red = design_grid.minimize_over_m(g)
+        np.testing.assert_array_equal(red.e_mac[..., 0, :],
+                                      g.e_mac.min(axis=-2))
+        assert red.ms.tolist() == [-1]
+        assert set(np.unique(red.m_opt)) <= {2, 8, 32}
+        # the recorded m really is the argmin's m
+        ix = (g.domain_index("td"), 0, 1, 0, 0, 0, 0, 0, 0)
+        want = int(np.argmin(g.e_mac[ix[:-2] + (slice(None), 0)]))
+        assert red.m_opt[ix] == g.ms[want]
+
+    def test_minimize_over_tdc_arch_records_winner(self):
+        g = ds.sweep_batched(ns=NS, bit_widths=(4,), sigma_maxes=SIGMA,
+                             tdc_arch=("hybrid", "sar"))
+        red = design_grid.minimize_over_tdc_arch(g)
+        assert red.tdc_archs == ("opt",)
+        assert set(np.unique(red.tdc_arch_opt)) <= {"hybrid", "sar"}
+        np.testing.assert_array_equal(red.e_mac[..., 0],
+                                      g.e_mac.min(axis=-1))
+        assert red.point_tdc_arch(
+            (0, 0, 0, 0, 0, 0, 0, 0, 0)) in ("hybrid", "sar")
+
+    def test_reduced_axis_queries_report_per_point_optima(self):
+        """Crossover / interval records on a reduced grid must carry the
+        winning per-point m/tdc_arch/vdd, never the [-1]/"opt"/nan
+        reduction sentinels."""
+        g = design_grid.minimize_over_tdc_arch(design_grid.minimize_over_m(
+            ds.sweep_batched(ns=(16, 64, 576, 2048), bit_widths=(4,),
+                             sigma_maxes=SIGMA, m=(2, 8),
+                             tdc_arch=("hybrid", "sar"))))
+        xs = design_grid.domain_crossovers(g)
+        iv = design_grid.winner_intervals(g, "td")
+        assert xs and iv
+        for rec in xs + iv:
+            assert rec["m"] in (2, 8)
+            assert rec["tdc_arch"] in ("hybrid", "sar")
+            assert not np.isnan(rec["vdd"])
+
+    def test_policy_records_periphery_and_energy_meter_uses_it(self):
+        """The solved policy carries (m, tdc_arch) and accounting runs at
+        them -- a periphery-scenario report must use the scenario's m, not
+        M_DEFAULT."""
+        from repro.tdsim import TDLayerSpec, apply_scenario, \
+            solve_td_policies
+        from repro.tdsim.energy_meter import MatmulShape, account
+        spec = sc.get_scenario("periphery")
+        out = apply_scenario([TDLayerSpec(4, 4, 576, 2.0)], spec, "tt")
+        assert out[0].m == spec.ms[0] and out[0].tdc_arch == "hybrid"
+        pol = solve_td_policies(out)[0]
+        assert pol.m == spec.ms[0]
+        rep = account([MatmulShape("l0", 576, 64)], pol)
+        want = ds.evaluate_td(576, 4, pol.sigma_max, m=pol.m,
+                              vdd=pol.vdd, tdc_arch=pol.tdc_arch)
+        assert rep.per_layer["l0"]["e_mac"] == want.e_mac
+
+    def test_stacked_reductions_roundtrip_npz(self, tmp_path):
+        import os
+        g = design_grid.minimize_over_tdc_arch(design_grid.minimize_over_m(
+            ds.sweep_batched(ns=(16, 576), bit_widths=(4,),
+                             sigma_maxes=SIGMA, m=(4, 8),
+                             tdc_arch=("hybrid", "sar"))))
+        rt = design_grid.DesignGrid.load_npz(
+            g.save_npz(os.path.join(tmp_path, "red.npz")))
+        np.testing.assert_array_equal(rt.m_opt, g.m_opt)
+        np.testing.assert_array_equal(rt.tdc_arch_opt, g.tdc_arch_opt)
+        assert rt.tdc_archs == ("opt",)
+        rec = next(iter(rt.records()))
+        assert rec["m"] in (4, 8) and rec["tdc_arch"] in ("hybrid", "sar")
+
+    def test_load_npz_migrates_legacy_archives(self, tmp_path):
+        """Pre-m/tdc_arch .npz archives (scalar "m", 7-axis fields) must
+        still load: trailing axes expand, m becomes a length-1 ms."""
+        import os
+        g = ds.sweep_batched(ns=(16, 576), bit_widths=(4,),
+                             sigma_maxes=SIGMA)
+        payload = {"domains": np.asarray(g.domains), "ns": g.ns,
+                   "bit_widths": g.bit_widths,
+                   "sigma_maxes": g.sigma_maxes, "vdds": g.vdds,
+                   "p_x_ones": g.p_x_ones,
+                   "w_bit_sparsities": g.w_bit_sparsities,
+                   "m": np.asarray(8)}
+        for f in ("e_mac", "throughput", "area_per_mac", "redundancy",
+                  "tdc_q", "l_osc", "sigma_chain", "latency"):
+            payload[f] = getattr(g, f)[..., 0, 0]        # legacy 7-axis
+        path = os.path.join(tmp_path, "legacy.npz")
+        np.savez_compressed(path, **payload)
+        rt = design_grid.DesignGrid.load_npz(path)
+        assert rt.shape == g.shape
+        assert rt.ms.tolist() == [8] and rt.tdc_archs == ("hybrid",)
+        np.testing.assert_array_equal(rt.e_mac, g.e_mac)
+        assert next(iter(rt.records()))["m"] == 8
+
+    def test_periphery_scenario_sweeps_per_corner(self):
+        spec = sc.get_scenario("periphery").replace(
+            ns=(64, 576), bit_widths=(4,), sigma_maxes=(2.0,),
+            vdds=(0.8,), ms=(4, 16), tdc_archs=("hybrid", "sar"))
+        grids = sc.sweep_scenarios(spec)
+        assert set(grids) == {"tt", "ff", "ss"}
+        for g in grids.values():
+            assert g.shape[-2:] == (2, 2)
+        assert not np.array_equal(grids["tt"].e_mac, grids["ss"].e_mac)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis-optional, like the other suites)
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # pragma: no cover - CI installs hypothesis
+    HAVE_HYP = False
+
+
+if HAVE_HYP:
+    mults = st.floats(min_value=1.01, max_value=1.8,
+                      allow_nan=False, allow_infinity=False)
+
+    @settings(max_examples=15, deadline=None)
+    @given(energy=mults, mismatch=mults, leak=mults)
+    def test_degrading_multipliers_raise_e_mac_and_sigma(energy, mismatch,
+                                                         leak):
+        """Any corner that scales cell energy, mismatch and leakage UP must
+        raise TD energy/MAC and chain sigma; scaling the same factors DOWN
+        (the ff direction, 1/mult) must lower both."""
+        worse = sc.Corner("w", cell_energy_mult=energy,
+                          mismatch_mult=mismatch, leakage_mult=leak)
+        better = sc.Corner("b", cell_energy_mult=1.0 / energy,
+                           mismatch_mult=1.0 / mismatch,
+                           leakage_mult=1.0 / leak)
+        lib_w = tl.DEFAULT_LIB.at_corner(worse)
+        lib_b = tl.DEFAULT_LIB.at_corner(better)
+        e_tt = ds.evaluate_td(576, 4, SIGMA).e_mac
+        assert ds.evaluate_td(576, 4, SIGMA, lib=lib_w).e_mac > e_tt
+        assert ds.evaluate_td(576, 4, SIGMA, lib=lib_b).e_mac < e_tt
+        s_tt = float(chain.chain_sigma(576.0, 4, 8.0))
+        assert float(chain.chain_sigma(576.0, 4, 8.0, lib=lib_w)) > s_tt
+        assert float(chain.chain_sigma(576.0, 4, 8.0, lib=lib_b)) < s_tt
+
+    @settings(max_examples=15, deadline=None)
+    @given(mismatch=mults)
+    def test_higher_mismatch_needs_no_less_redundancy(mismatch):
+        """R is the knob that buys back mismatch: a noisier library can
+        never need LESS redundancy at the same budget."""
+        lib = tl.DEFAULT_LIB.at_corner(sc.Corner("m",
+                                                 mismatch_mult=mismatch))
+        r_tt = chain.solve_redundancy(576, 4, 0.5)
+        r_w = chain.solve_redundancy(576, 4, 0.5, lib=lib)
+        assert r_w >= r_tt
