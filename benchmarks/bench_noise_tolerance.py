@@ -304,8 +304,13 @@ def run() -> list[str]:
     lm_name = "granite-8b"
     lm_eval, lm_net_eval, n_lm, lm_sites, lm_base = _lm_eval_fns(lm_name,
                                                                  key)
+    # same chunking as the CNN sweep: an unchunked mesh= call would keep
+    # the whole (n_lm * (S*R+1)) probe batch live at once AND skip the
+    # data-axis rounding, silently replicating when the count doesn't
+    # divide the mesh
     res_lm_layers = noise_tolerance.find_sigma_max_batched(
-        lm_eval, SIGMAS, key, n_layers=n_lm, n_repeats=N_REPEATS, mesh=mesh)
+        lm_eval, SIGMAS, key, n_layers=n_lm, n_repeats=N_REPEATS,
+        chunk_size=chunk, mesh=mesh)
     res_lm = noise_tolerance.find_sigma_max_batched(
         lm_net_eval, SIGMAS, key, n_layers=1, n_repeats=N_REPEATS).layer(0)
     for s, d in zip(res_lm.sigmas, res_lm.rel_drop):

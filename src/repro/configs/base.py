@@ -83,8 +83,6 @@ class ModelCfg:
     # input_specs provide (vlm patches / audio frames)
     frontend: str | None = None      # None | "vision" | "audio"
     d_frontend: int = 0              # stub embedding dim (0 = d_model)
-    # attention memory policy
-    attn_chunk: int = 1024           # online-softmax KV chunk for prefill
     # compile-time: scan over (homogeneous) layers instead of unrolling —
     # shrinks HLO ~L x; cost_analysis then reports the body once (the
     # roofline table therefore uses unrolled lowers; see DESIGN.md §6)
@@ -148,6 +146,11 @@ class ArchConfig:
     # None = the single `td` config applies everywhere.  `td` still drives
     # the shared top-level matmuls (adapter / lm_head).
     td_per_layer: tuple[TDExecCfg, ...] | None = None
+    # TD-quantized attention: route every layer's QK^T / PV contractions
+    # through the td_vmm engine under per-head policies resolved from the
+    # grid (tdsim.td_attention).  None = precise attention on the fused
+    # flash/decode kernels.  Decoder-family models only (like td_per_layer).
+    td_attn: TDExecCfg | None = None
     # named design scenario / technology corner the TD policies resolve for
     # (core.scenario registries): the corner derates error budgets and
     # shifts the supply grid, and each "td"-mode matmul's Vdd is picked by

@@ -43,7 +43,11 @@ import numpy as np
 
 # jitted probe-runners keyed by eval_fn (weak: dies with the eval), then by
 # chunk config — repeated sweeps over the same eval reuse the compiled
-# program instead of retracing per call
+# program instead of retracing per call.  The cached runners must NOT hold
+# a strong reference to eval_fn: a WeakKeyDictionary value that closes over
+# its own key pins the key forever, turning the "weak" cache into a leak
+# (every eval_fn ever swept, plus its jit executables, stays live).  The
+# runners therefore close over a weakref and re-deref at trace time.
 _JIT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
@@ -51,13 +55,20 @@ def _jitted_runner(eval_fn, chunk_size):
     per_fn = _JIT_CACHE.setdefault(eval_fn, {})
     fn = per_fn.get(chunk_size)
     if fn is None:
+        ref = weakref.ref(eval_fn)
+
+        def call(v, k):
+            target = ref()
+            if target is None:  # pragma: no cover — key died mid-trace
+                raise ReferenceError("eval_fn was garbage-collected")
+            return jax.vmap(target)(v, k)
+
         if chunk_size is None:
-            fn = jax.jit(jax.vmap(eval_fn))
+            fn = jax.jit(call)
         else:
             @jax.jit
             def fn(cv, ck):
-                return jax.lax.map(
-                    lambda c: jax.vmap(eval_fn)(c[0], c[1]), (cv, ck))
+                return jax.lax.map(lambda c: call(c[0], c[1]), (cv, ck))
         per_fn[chunk_size] = fn
     return fn
 

@@ -6,12 +6,17 @@ td_vmm       bit-serial noisy TD-VMM — the production TD execution engine:
              compiled by default on TPU (kernels.td_vmm.td_vmm
              .default_interpret / REPRO_TD_VMM_INTERPRET)
 lsq_quant    fused LSQ fake-quantization (VPU)
-decode_gqa   fused GQA decode attention (flash-decode, memory-bound hot spot)
-flash_attn   causal GQA flash-attention forward (train/prefill score-traffic
-             eliminator — EXPERIMENTS §Perf C4)
+decode_gqa   fused flash-decode GQA attention: block-tiled online softmax,
+             runtime SMEM lengths (one compiled program per shape),
+             compiled by default on TPU (REPRO_ATTN_INTERPRET overrides)
+flash_attn   fused online-softmax flash forward (no materialized (Sq, Skv)
+             scores), runtime kv_len/q_offset SMEM operands, custom_vjp
+             recompute backward; same compile/interpret policy as
+             decode_gqa (kernels.attn_common.default_interpret)
 
 Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle).  Kernels are validated in
-interpret=True mode on CPU; on a TPU backend td_vmm compiles automatically
-(no flag), the other kernels flip use_pallas=True in the model path.
+interpret=True mode on CPU; on a TPU backend every kernel compiles
+automatically (no flag) — the model path has no unfused fallback (CI
+greps it stays that way).
 """

@@ -1,0 +1,32 @@
+"""Shared plumbing for the production attention kernels (flash_attn,
+decode_gqa): the interpret policy and the scalar-operand memory space.
+
+Interpret policy mirrors the TD engine's (`td_vmm.default_interpret`):
+``interpret=None`` compiles on a TPU backend and falls back to interpret
+mode elsewhere (CPU CI); ``REPRO_ATTN_INTERPRET=0|1`` overrides both.  The
+attention kernels get their own env var so the TD engine and the attention
+engine can be flipped independently (e.g. compiled TD + interpreted
+attention while bisecting a regression).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+from jax.experimental import pallas as pl
+
+try:  # pltpu is importable without a TPU; guard for exotic builds anyway
+    from jax.experimental.pallas import tpu as pltpu
+    SCALAR_SPACE = pltpu.SMEM
+except Exception:  # pragma: no cover
+    SCALAR_SPACE = pl.ANY
+
+NEG_INF = -1e30
+
+
+def default_interpret() -> bool:
+    """Interpret policy: env override, else compile iff a TPU backend is up."""
+    env = os.environ.get("REPRO_ATTN_INTERPRET")
+    if env is not None:
+        return env.strip().lower() in ("1", "true", "yes")
+    return jax.default_backend() != "tpu"

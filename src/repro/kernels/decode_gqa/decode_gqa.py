@@ -1,4 +1,5 @@
-"""Pallas kernel: fused GQA decode attention (flash-decode style).
+"""Pallas kernel: fused GQA decode attention (flash-decode style) — the
+production attention engine for single-query-row decode steps.
 
 Decode with a long KV cache is the memory-roofline hot spot of the decode_*
 shapes: each step streams the whole KV cache from HBM once.  The kernel
@@ -6,8 +7,28 @@ tiles the cache along S; each grid step loads a (bs, Hkv, D) KV block into
 VMEM, updates the online-softmax running (m, l, acc) held in VMEM scratch,
 and writes the normalized output on the last block.
 
+Runtime operand: ``length`` — the (B,) int32 cache fill level — rides in as
+an SMEM scalar operand, NOT a compile-time constant, and KV blocks past it
+are skipped entirely at runtime via ``pl.when`` (the td_vmm bar: a decode
+loop over growing fill levels reuses ONE compiled program and never touches
+dead cache blocks).
+
 Grid: (B, S/bs).  Scratch: m/l (Hq,), acc (Hq, D) — persistent across the S
 axis for a fixed batch row (TPU grid is sequential over the last dim).
+
+Interpret policy (`kernels.attn_common`): ``interpret=None`` compiles on a
+TPU backend and falls back to interpret mode elsewhere (CPU CI);
+``REPRO_ATTN_INTERPRET=0|1`` overrides both.  In interpret mode the default
+block is the whole (padded) cache; compiled default is 512.
+
+Public surface
+--------------
+``decode_gqa_pallas(q, k, v, length, *, bs=None, interpret=None)
+-> (B, Hq, D)``
+
+Consumers: `kernels.decode_gqa.ops.decode_attention` (the production
+wrapper `models.attention` routes s == 1 self-attention decode steps to).
+The oracle is `kernels.decode_gqa.ref.decode_gqa_ref`.
 """
 from __future__ import annotations
 
@@ -18,12 +39,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.attn_common import NEG_INF, SCALAR_SPACE, default_interpret
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             *, bs: int, n_blocks: int):
+    i = pl.program_id(0)
     blk = pl.program_id(1)
+    length = len_ref[i]                           # runtime scalar operand
 
     @pl.when(blk == 0)
     def _init():
@@ -31,60 +54,87 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)              # (Hq, D)
-    k = k_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
-    v = v_ref[0].astype(jnp.float32)
-    hq, d = q.shape
-    hkv = k.shape[1]
-    g = hq // hkv
-    length = len_ref[0]
+    # runtime dead-block skip: blocks entirely past the cache fill level
+    @pl.when(blk * bs < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (Hq, D)
+        k = k_ref[0].astype(jnp.float32)              # (bs, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        hq, d = q.shape
+        hkv = k.shape[1]
+        g = hq // hkv
 
-    qg = q.reshape(hkv, g, d) * (d ** -0.5)
-    sc = jnp.einsum("kgd,skd->kgs", qg, k)        # (Hkv, g, bs)
-    pos = jax.lax.broadcasted_iota(jnp.int32, (hkv, g, bs), 2) \
-        + blk * bs
-    sc = jnp.where(pos < length, sc, NEG_INF)
+        qg = q.reshape(hkv, g, d) * (d ** -0.5)
+        sc = jnp.einsum("kgd,skd->kgs", qg, k)        # (Hkv, g, bs)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (hkv, g, bs), 2) \
+            + blk * bs
+        mask = pos < length
+        sc = jnp.where(mask, sc, NEG_INF)
 
-    m_prev = m_ref[...].reshape(hkv, g)
-    l_prev = l_ref[...].reshape(hkv, g)
-    acc_prev = acc_ref[...].reshape(hkv, g, d)
+        m_prev = m_ref[...].reshape(hkv, g)
+        l_prev = l_ref[...].reshape(hkv, g)
+        acc_prev = acc_ref[...].reshape(hkv, g, d)
 
-    m_new = jnp.maximum(m_prev, sc.max(-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(sc - m_new[..., None])
-    l_new = l_prev * alpha + p.sum(-1)
-    acc_new = acc_prev * alpha[..., None] + jnp.einsum("kgs,skd->kgd", p, v)
+        m_new = jnp.maximum(m_prev, sc.max(-1))
+        alpha = jnp.exp(m_prev - m_new)
+        # NEG_INF - NEG_INF == 0 in f32: zero masked entries explicitly
+        p = jnp.where(mask, jnp.exp(sc - m_new[..., None]), 0.0)
+        l_new = l_prev * alpha + p.sum(-1)
+        acc_new = acc_prev * alpha[..., None] \
+            + jnp.einsum("kgs,skd->kgd", p, v)
 
-    m_ref[...] = m_new.reshape(hq)
-    l_ref[...] = l_new.reshape(hq)
-    acc_ref[...] = acc_new.reshape(hq, d)
+        m_ref[...] = m_new.reshape(hq)
+        l_ref[...] = l_new.reshape(hq)
+        acc_ref[...] = acc_new.reshape(hq, d)
 
+    # finalize reads the REFS (not compute-locals): the last cache block may
+    # have been skipped as dead, so its locals never exist.
     @pl.when(blk == n_blocks - 1)
     def _finalize():
-        o_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)[..., None]
-                    ).reshape(hq, d).astype(o_ref.dtype)
+        acc = acc_ref[...]                            # (Hq, D)
+        l = l_ref[...]                                # (Hq,)
+        o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_gqa_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      length: jnp.ndarray, *, bs: int | None = None,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """q (B, Hq, D); k/v (B, S, Hkv, D); length (B,) int32 RUNTIME operand.
+
+    ``interpret=None`` resolves via ``default_interpret()`` here, OUTSIDE
+    the jit, so the env override is honoured on every call."""
+    s = k.shape[1]
+    if interpret is None:
+        interpret = default_interpret()
+    # interpret mode pays per grid step, not per byte of VMEM: default to a
+    # whole-cache block (grid = B); compiled mode to 512
+    if bs is None:
+        bs = s if interpret else 512
+    bs = min(bs, s)
+    return _decode_gqa_call(q, k, v, length, bs=bs, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "interpret"))
-def decode_gqa_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                      length: jnp.ndarray, *, bs: int = 512,
-                      interpret: bool = True) -> jnp.ndarray:
-    """q (B, Hq, D); k/v (B, S, Hkv, D); length (B,) int32."""
+def _decode_gqa_call(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length: jnp.ndarray, *, bs: int,
+                     interpret: bool) -> jnp.ndarray:
     b, hq, d = q.shape
     s, hkv = k.shape[1], k.shape[2]
-    bs = min(bs, s)
+    assert hq % hkv == 0, (hq, hkv)
     n_blocks = -(-s // bs)
     s_pad = n_blocks * bs
     if s_pad != s:
         k = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    # clamp to the true cache length: padded tail positions are never valid
+    lens = jnp.minimum(jnp.asarray(length, jnp.int32).reshape(b), s)
 
     kern = functools.partial(_kernel, bs=bs, n_blocks=n_blocks)
     return pl.pallas_call(
         kern,
         grid=(b, n_blocks),
         in_specs=[
-            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec(memory_space=SCALAR_SPACE),
             pl.BlockSpec((1, hq, d), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((1, bs, hkv, d), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, bs, hkv, d), lambda i, j: (i, j, 0, 0)),
@@ -97,4 +147,4 @@ def decode_gqa_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((hq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(length.astype(jnp.int32), q, k, v)
+    )(lens, q, k, v)

@@ -1,4 +1,6 @@
-"""Pallas TPU kernel: causal GQA flash-attention forward.
+"""Pallas TPU kernel: fused GQA flash-attention forward — the production
+attention engine for every multi-query-row attention call (train, prefill,
+cross-attention).
 
 This is the fused path that removes the S x S score traffic identified as
 the dominant (and HLO-irreducible) memory-roofline term of every train/
@@ -7,8 +9,36 @@ VMEM tiles; HBM sees q, k, v and o exactly once.
 
 Grid: (B, Hkv, S_q/bq, S_kv/bk) — the KV axis innermost so the online-
 softmax running state (m, l, acc) persists in VMEM scratch across KV
-blocks of one query tile.  Causal masking skips fully-masked KV blocks
-via pl.when (no MXU work issued for the upper triangle).
+blocks of one query tile.  Both the causal upper triangle and the KV tail
+past ``kv_len`` are skipped at runtime via ``pl.when`` on the SMEM scalars
+(no MXU work issued for dead blocks).
+
+Runtime operands: ``kv_len`` — a (B,) int32 valid-prefix length per batch
+row — and ``q_offset`` — the absolute position of query row 0 — ride in as
+SMEM scalar operands, NOT compile-time constants, so a decode-cache prefill
+sweep over fill levels reuses ONE compiled program (the td_vmm bar: zero
+recompiles across runtime-value changes).
+
+Rectangular attention: q (B, Sq, Hq, D) against k/v (B, Skv, Hkv, D) with
+Sq != Skv is supported; under ``causal=True`` query row i attends to key
+positions j <= q_offset + i (cache prefill: q_offset = idx,
+kv_len = idx + Sq).  Sq/Skv are padded to tile multiples internally.
+
+Interpret policy (`kernels.attn_common`): ``interpret=None`` compiles on a
+TPU backend and falls back to interpret mode elsewhere (CPU CI);
+``REPRO_ATTN_INTERPRET=0|1`` overrides both.  In interpret mode the default
+tile is the whole (padded) sequence — the interpreter pays per grid step,
+not per byte of VMEM — while the compiled default is 256 x 256.
+
+Public surface
+--------------
+``flash_attn_pallas(q, k, v, kv_len=None, q_offset=None, *, causal=True,
+bq=None, bk=None, interpret=None) -> (B, Sq, Hq, D)``
+
+Consumers: `kernels.flash_attn.ops.flash_attention` wraps this in the
+`custom_vjp` production entry (recompute backward); `models.attention`
+routes every non-decode attention call there.  The oracle is
+`kernels.flash_attn.ref.flash_attn_ref`.
 """
 from __future__ import annotations
 
@@ -19,13 +49,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.attn_common import NEG_INF, SCALAR_SPACE, default_interpret
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+def _kernel(lens_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref,
             *, bq: int, bk: int, n_kb: int, causal: bool, g: int):
+    bi = pl.program_id(0)
     qb = pl.program_id(2)
     kb = pl.program_id(3)
+    kv_len = lens_ref[bi]                       # runtime scalar operands
+    q_off = off_ref[0]
 
     @pl.when(kb == 0)
     def _init():
@@ -33,28 +67,34 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # causal: the whole KV block is masked iff q_block_end < k_block_start
-    run = (not causal) or (qb * bq + bq - 1 >= kb * bk)
+    # runtime dead-block skip: KV blocks past the valid prefix, and (causal)
+    # blocks fully above the diagonal — q_block_end < k_block_start
+    live = kb * bk < kv_len
+    if causal:
+        live = live & (q_off + qb * bq + bq - 1 >= kb * bk)
 
-    @pl.when(run)
+    @pl.when(live)
     def _compute():
         q = q_ref[0, :, 0, :, :].astype(jnp.float32)    # (bq, g, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
         d = q.shape[-1]
         sc = jnp.einsum("qgd,kd->gqk", q * (d ** -0.5), k)   # (g, bq, bk)
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 2)
+        mask = kpos < kv_len
         if causal:
-            qpos = qb * bq + jax.lax.broadcasted_iota(
+            qpos = q_off + qb * bq + jax.lax.broadcasted_iota(
                 jnp.int32, sc.shape, 1)
-            kpos = kb * bk + jax.lax.broadcasted_iota(
-                jnp.int32, sc.shape, 2)
-            sc = jnp.where(qpos >= kpos, sc, NEG_INF)
+            mask = mask & (qpos >= kpos)
+        sc = jnp.where(mask, sc, NEG_INF)
         m_prev = m_ref[...]                              # (g, bq)
         l_prev = l_ref[...]
         acc_prev = acc_ref[...]                          # (g, bq, D)
         m_new = jnp.maximum(m_prev, sc.max(-1))
         alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(sc - m_new[..., None])
+        # NEG_INF - NEG_INF == 0 in f32, so a fully-masked row would get
+        # exp(0) == 1 garbage: zero masked entries explicitly.
+        p = jnp.where(mask, jnp.exp(sc - m_new[..., None]), 0.0)
         l_new = l_prev * alpha + p.sum(-1)
         acc_new = acc_prev * alpha[..., None] \
             + jnp.einsum("gqk,kd->gqd", p, v)
@@ -62,6 +102,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = l_new
         acc_ref[...] = acc_new
 
+    # finalize reads the REFS (not compute-locals): the last KV block may
+    # have been skipped as dead, so its locals never exist.
     @pl.when(kb == n_kb - 1)
     def _finalize():
         acc = acc_ref[...]
@@ -70,21 +112,62 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0] = out.transpose(1, 0, 2).astype(o_ref.dtype)
 
 
+def flash_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      kv_len: jnp.ndarray | None = None,
+                      q_offset: jnp.ndarray | None = None, *,
+                      causal: bool = True, bq: int | None = None,
+                      bk: int | None = None,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """q (B, Sq, Hq, D); k/v (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    ``kv_len`` (B,) int32 valid-prefix lengths (default: full Skv) and
+    ``q_offset`` scalar int32 absolute position of query row 0 (default 0)
+    are RUNTIME operands — sweeping them reuses one compiled program.
+    ``interpret=None`` resolves via ``default_interpret()`` here, OUTSIDE
+    the jit, so the env override is honoured on every call."""
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    if interpret is None:
+        interpret = default_interpret()
+    # interpret mode pays per grid step, not per byte of VMEM: default to
+    # whole-sequence tiles (grid = B x Hkv); compiled mode to 256 x 256
+    if bq is None:
+        bq = sq if interpret else 256
+    if bk is None:
+        bk = skv if interpret else 256
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    if kv_len is None:
+        kv_len = jnp.full((b,), skv, jnp.int32)
+    if q_offset is None:
+        q_offset = jnp.zeros((), jnp.int32)
+    return _flash_attn_call(q, k, v, kv_len, q_offset, causal=causal,
+                            bq=bq, bk=bk, interpret=interpret)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("causal", "bq", "bk", "interpret"))
-def flash_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                      *, causal: bool = True, bq: int = 256, bk: int = 256,
-                      interpret: bool = True) -> jnp.ndarray:
-    """q (B,S,Hq,D); k/v (B,S,Hkv,D); S % bq == S % bk == 0."""
-    b, s, hq, d = q.shape
-    hkv = k.shape[2]
+def _flash_attn_call(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray, q_offset: jnp.ndarray, *,
+                     causal: bool, bq: int, bk: int,
+                     interpret: bool) -> jnp.ndarray:
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
     g = hq // hkv
-    bq = min(bq, s)
-    bk = min(bk, s)
-    assert s % bq == 0 and s % bk == 0
-    n_qb, n_kb = s // bq, s // bk
-    # regroup q as (B, S, Hkv, g, D) so one grid step owns one kv head
-    qg = q.reshape(b, s, hkv, g, d)
+    n_qb = -(-sq // bq)
+    n_kb = -(-skv // bk)
+    sq_p, skv_p = n_qb * bq, n_kb * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    # clamp to the true KV length: padded tail positions are never valid
+    lens = jnp.minimum(jnp.asarray(kv_len, jnp.int32).reshape(b), skv)
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    # regroup q as (B, Sq, Hkv, g, D) so one grid step owns one kv head
+    qg = q.reshape(b, sq_p, hkv, g, d)
 
     kern = functools.partial(_kernel, bq=bq, bk=bk, n_kb=n_kb,
                              causal=causal, g=g)
@@ -92,6 +175,8 @@ def flash_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         kern,
         grid=(b, hkv, n_qb, n_kb),
         in_specs=[
+            pl.BlockSpec(memory_space=SCALAR_SPACE),
+            pl.BlockSpec(memory_space=SCALAR_SPACE),
             pl.BlockSpec((1, bq, 1, g, d),
                          lambda bi, hi, qi, ki: (bi, qi, hi, 0, 0)),
             pl.BlockSpec((1, bk, 1, d),
@@ -101,12 +186,12 @@ def flash_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, bq, g, d),
                                lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, s, hq, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, sq_p, hq, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((g, bq), jnp.float32),
             pltpu.VMEM((g, bq), jnp.float32),
             pltpu.VMEM((g, bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, k, v)
-    return out
+    )(lens, off, qg, k, v)
+    return out[:, :sq]

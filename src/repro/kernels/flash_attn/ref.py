@@ -1,21 +1,41 @@
-"""Oracle for the training flash-attention kernel (causal GQA)."""
+"""Oracle for the flash-attention kernel (GQA, optionally rectangular with
+a valid-KV-prefix length and an absolute query offset).
+
+This is the ONLY place the unfused jnp attention (materialized (Sq, Skv)
+scores) is allowed to live — the model path runs the fused Pallas engine.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
 def flash_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                   causal: bool = True) -> jnp.ndarray:
-    """q (B,S,Hq,D); k/v (B,S,Hkv,D) -> (B,S,Hq,D), f32 math."""
-    b, s, hq, d = q.shape
-    hkv = k.shape[2]
+                   causal: bool = True,
+                   kv_len: jnp.ndarray | None = None,
+                   q_offset=None) -> jnp.ndarray:
+    """q (B,Sq,Hq,D); k/v (B,Skv,Hkv,D) -> (B,Sq,Hq,D), f32 math.
+
+    ``kv_len`` (B,) int32 masks key positions >= kv_len[b]; ``q_offset``
+    places query row i at absolute position q_offset + i for the causal
+    mask (defaults: full prefix, offset 0 — the classic square case)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
-    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
     sc = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(skv)
+    if kv_len is None:
+        mask = jnp.ones((b, skv), bool)
+    else:
+        mask = kpos[None, :] < jnp.asarray(kv_len, jnp.int32)[:, None]
+    mask = mask[:, None, None, None, :]               # (B,1,1,1,Skv)
     if causal:
-        mask = jnp.tril(jnp.ones((s, s), bool))
-        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        qpos = jnp.arange(sq) + (0 if q_offset is None
+                                 else jnp.asarray(q_offset, jnp.int32))
+        mask = mask & (qpos[:, None] >= kpos[None, :])[None, None, None]
+    sc = jnp.where(mask, sc, -1e30)
     p = jnp.exp(sc - sc.max(-1, keepdims=True))
-    p = p / p.sum(-1, keepdims=True)
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
     o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
-    return o.reshape(b, s, hq, d)
+    return o.reshape(b, sq, hq, d)

@@ -79,15 +79,21 @@ def _active_params(arch, n_params: float) -> float:
 
 
 def _scan_corrections(arch, shape) -> dict:
-    """XLA cost_analysis counts a scan body ONCE.  Two scans matter:
+    """XLA cost_analysis undercounts two constructs:
 
-    1. the grad-accumulation microbatch scan (trip count n_micro) — handled
-       by multiplying the whole reported cost by n_micro,
-    2. the chunked-attention KV scan (trip count n_chunks) — handled by an
-       analytic correction for the missing (n_chunks - 1) bodies:
-         flops_body  = 4 B S_q C H hd per layer  (QK^T + PV over one chunk)
-         bytes_body  ~ acc/l/m state rw (f32) + the KV chunk read
-       x3 for train (fwd + bwd-of-scan, also counted once each).
+    1. the grad-accumulation microbatch scan (trip count n_micro; the scan
+       body is counted ONCE) — handled by multiplying the whole reported
+       cost by n_micro,
+    2. the fused Pallas attention kernels (kernels.flash_attn /
+       kernels.decode_gqa) — lowered as an opaque custom call (compiled) or
+       a grid loop whose body is counted at most once (interpret), so
+       every cell gets an analytic correction for the full attention cost:
+         flops = 4 B S_q S_kv Hq hd per attention site  (QK^T + PV)
+         bytes = q/k/v/o HBM traffic at the storage dtype (bf16) — the
+                 fused kernels never materialize the (S_q, S_kv) scores
+       x3 for train (fwd + the recompute backward's two extra passes).
+       Train/prefill attend within the step's own sequence (S_kv = S_q);
+       decode reads the whole KV cache (S_q = 1, S_kv = seq_len).
     Corrections are recorded separately in the artifact for transparency.
     """
     cfg = arch.model
@@ -99,9 +105,6 @@ def _scan_corrections(arch, shape) -> dict:
         n_micro = 1
         s_q = s
     out = {"micro_mult": n_micro, "attn_flops": 0.0, "attn_bytes": 0.0}
-    if shape.kind == "decode" or s_q <= cfg.attn_chunk:
-        return out
-    n_chunks = -(-s_q // cfg.attn_chunk)
     n_attn = sum(1 for i in range(cfg.n_layers)
                  if cfg.mixer_at(i) in ("attn", "shared_attn"))
     if cfg.family == "encdec":
@@ -109,14 +112,18 @@ def _scan_corrections(arch, shape) -> dict:
     if n_attn == 0:
         return out
     b = shape.global_batch
-    hq, hd, chunk = cfg.n_heads, cfg.hd, cfg.attn_chunk
-    flops_body = 4.0 * b * s_q * chunk * hq * hd
-    acc_rw = 2.0 * 4.0 * b * hq * s_q * hd * 3          # m, l, acc f32 r+w
-    kv_read = 2.0 * b * chunk * cfg.n_kv_heads * hd * 2
-    bytes_body = acc_rw + kv_read
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if shape.kind == "decode":
+        s_q, s_kv = 1.0, float(s)
+    else:
+        s_q, s_kv = float(s_q), float(s_q)
+    flops = 4.0 * b * s_q * s_kv * hq * hd              # QK^T + PV
+    dt = 2.0                                            # bf16 storage
+    bytes_ = dt * b * (2.0 * s_q * hq * hd              # q read + o write
+                       + 2.0 * s_kv * hkv * hd)         # k + v read
     train_mult = 3.0 if shape.kind == "train" else 1.0
-    out["attn_flops"] = (n_chunks - 1) * flops_body * n_attn * train_mult
-    out["attn_bytes"] = (n_chunks - 1) * bytes_body * n_attn * train_mult
+    out["attn_flops"] = flops * n_attn * train_mult
+    out["attn_bytes"] = bytes_ * n_attn * train_mult
     return out
 
 
@@ -124,13 +131,14 @@ def run_cell(arch_name: str, shape_name: str, mesh, mesh_tag: str,
              td_mode: str = "precise", scan_layers: bool = False,
              td_per_layer: str | None = None,
              scenario: str | None = None,
-             corner: str | None = None) -> dict:
+             corner: str | None = None,
+             td_attn: str | None = None) -> dict:
     arch = cfgs.get(arch_name)
     if td_mode != "precise":
         arch = arch.replace(td=TDExecCfg(mode=td_mode))
-    if td_per_layer or scenario or corner:
+    if td_per_layer or scenario or corner or td_attn:
         arch = td_cli.apply_td_args(arch, None, td_per_layer, scenario,
-                                    corner)
+                                    corner, td_attn=td_attn)
     if scan_layers:
         arch = arch.replace(model=dataclasses.replace(arch.model,
                                                       scan_layers=True))
@@ -244,6 +252,7 @@ def main():
                     help="heterogeneous per-layer TD policies: inline sigma "
                     "list '0.5,1.0,...' or '@per_layer_policies.json' from "
                     "the Fig. 10 batched noise-tolerance search")
+    td_cli.add_td_attn_arg(ap)
     td_cli.add_scenario_args(ap)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
@@ -273,6 +282,7 @@ def main():
         tag = f"{arch_name}__{shape_name}__{mesh_tag}" + \
             (f"__{args.td}" if args.td != "precise" else "") + \
             ("__per_layer" if args.td_per_layer else "") + \
+            (f"__attn-{args.td_attn}" if args.td_attn else "") + \
             (f"__{args.scenario}" if args.scenario else "") + \
             (f"__{args.corner}" if args.corner else "") + \
             ("__scan" if args.scan_layers else "")
@@ -281,7 +291,8 @@ def main():
             res = run_cell(arch_name, shape_name, mesh, mesh_tag, args.td,
                            scan_layers=args.scan_layers,
                            td_per_layer=args.td_per_layer,
-                           scenario=args.scenario, corner=args.corner)
+                           scenario=args.scenario, corner=args.corner,
+                           td_attn=args.td_attn)
             n_ok += 1
             print(f"[OK] {tag}: dominant={res['roofline']['dominant']} "
                   f"step={res['roofline']['step_s']:.4f}s "

@@ -97,11 +97,13 @@ def main():
                     help="heterogeneous per-layer TD policies: inline sigma "
                     "list '0.5,1.0,...' or '@per_layer_policies.json' from "
                     "the Fig. 10 batched noise-tolerance search")
+    td_cli.add_td_attn_arg(ap)
     td_cli.add_scenario_args(ap)
     args = ap.parse_args()
     arch = cfgs.get_smoke(args.arch) if args.smoke else cfgs.get(args.arch)
     arch = td_cli.apply_td_args(arch, args.td, args.td_per_layer,
-                                args.scenario, args.corner)
+                                args.scenario, args.corner,
+                                td_attn=args.td_attn)
     run(arch, args.batch, args.prompt_len, args.gen)
 
 

@@ -63,11 +63,12 @@ def parse_td_per_layer(spec: str, base: TDExecCfg,
 def apply_td_args(arch: ArchConfig, td: str | None,
                   td_per_layer: str | None,
                   scenario: str | None = None,
-                  corner: str | None = None) -> ArchConfig:
-    """Shared --td / --td-per-layer / --scenario / --corner handling for
-    the train/serve/dryrun CLIs.  Scenario/corner names are validated
-    against the core.scenario registries here so a typo fails at the CLI,
-    not inside the first policy solve."""
+                  corner: str | None = None,
+                  td_attn: str | None = None) -> ArchConfig:
+    """Shared --td / --td-per-layer / --td-attn / --scenario / --corner
+    handling for the train/serve/dryrun CLIs.  Scenario/corner names are
+    validated against the core.scenario registries here so a typo fails at
+    the CLI, not inside the first policy solve."""
     if td:
         arch = arch.replace(td=TDExecCfg(mode=td, n_chain=min(
             576, arch.model.d_model)))
@@ -76,6 +77,11 @@ def apply_td_args(arch: ArchConfig, td: str | None,
             mode="td", n_chain=min(576, arch.model.d_model))
         arch = arch.replace(td_per_layer=parse_td_per_layer(
             td_per_layer, base, arch.model.n_layers))
+    if td_attn:
+        # chain length clamps to the head dim (the QK contraction) inside
+        # resolve_arch_policy; the cfg just carries the requested mode
+        arch = arch.replace(td_attn=TDExecCfg(mode=td_attn, n_chain=min(
+            576, arch.model.hd)))
     if scenario or corner:
         from repro.core import scenario as scenario_mod
         if scenario:
@@ -83,6 +89,14 @@ def apply_td_args(arch: ArchConfig, td: str | None,
         scenario_mod.get_corner(corner)
         arch = arch.replace(scenario=scenario or "vdd-opt", corner=corner)
     return arch
+
+
+def add_td_attn_arg(ap) -> None:
+    """Register the shared --td-attn argparse flag."""
+    ap.add_argument("--td-attn", default=None, choices=["quant", "td"],
+                    help="route attention QK^T/PV through the TD engine "
+                    "under per-head policies resolved from the scenario "
+                    "grid (decoder-family models only)")
 
 
 def add_scenario_args(ap) -> None:

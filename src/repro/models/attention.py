@@ -1,7 +1,25 @@
-"""Attention: GQA/MQA/MHA with qk-norm, QKV bias, RoPE, KV caches, and a
-chunked online-softmax path (flash-style, lax.scan over KV blocks) for long
-prefill — the full S x S score matrix is never materialized when
-S > cfg.attn_chunk.
+"""Attention: GQA/MQA/MHA with qk-norm, QKV bias, RoPE and KV caches, on
+the production fused engines — every attention call routes to one of:
+
+  * `kernels.flash_attn.ops.flash_attention` — fused online-softmax Pallas
+    forward (no materialized (Sq, Skv) scores), custom_vjp recompute
+    backward.  Train, prefill, cross-attention, cache prefill.
+  * `kernels.decode_gqa.ops.decode_attention` — fused flash-decode Pallas
+    kernel.  Single-row causal self-attention decode steps.
+  * `tdsim.td_attention.td_attention` — the TD-quantized path: QK^T and PV
+    through the td_vmm engine under per-head policies (`attn_pols`,
+    resolved from the grid by `models.common.resolve_arch_policy`).
+
+The unfused jnp attention exists ONLY as the `ref.py` oracles (CI greps
+that it stays dead here).  Valid-KV masking and rectangular causal offsets
+ride into the kernels as runtime SMEM operands (`kv_len`, `q_offset`), so
+decode loops and cache-prefill sweeps reuse one compiled program.
+
+Positions contract: query positions are assumed CONTIGUOUS ascending
+(pos_q = pos_q[0] + arange(Sq)) — true for every call site (training
+arange, decode cache idx); the kernels take the scalar offset, not the
+vector.  `kv_from_valid`, when given, is a per-row valid PREFIX mask — its
+row-sums become `kv_len` (no in-repo caller passes scattered masks).
 
 Shapes: x (B, S, d); q (B, S, Hq, Dh); kv (B, S, Hkv, Dh); caches are
 (B, S_cache, Hkv, Dh) with a scalar fill index.
@@ -12,9 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelCfg
+from repro.kernels.decode_gqa.ops import decode_attention
+from repro.kernels.flash_attn.ops import flash_attention
 from repro.models import common
-
-NEG_INF = -1e30
+from repro.tdsim import td_attention as td_attn_mod
 
 
 def attn_init(key: jax.Array, cfg: ModelCfg, pol, dtype=jnp.float32,
@@ -39,126 +58,24 @@ def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
     return x.reshape(b, s, n_heads, -1)
 
 
-def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
-    """q (B,S,Hq,D), k (B,T,Hkv,D) -> f32 scores (B,Hq,S,T), GQA-grouped.
-
-    Operands stay in their storage dtype (bf16 on TPU); the MXU accumulates
-    in f32 via preferred_element_type — no f32 materialization of K
-    (§Perf iteration C1/A1: the f32 KV-cache converts dominated the memory
-    roofline term)."""
-    b, s, hq, d = q.shape
-    hkv = k.shape[2]
-    g = hq // hkv
-    qg = q.reshape(b, s, hkv, g, d)
-    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k,
-                    preferred_element_type=jnp.float32)
-    return sc.reshape(b, hq, s, k.shape[1])
-
-
-def _gqa_values(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-    """p (B,Hq,S,T) f32 probs, v (B,T,Hkv,D) -> f32 (B,S,Hq,D).  Probs are
-    cast to V's storage dtype for the MXU; accumulation stays f32."""
-    b, hq, s, t = p.shape
-    hkv = v.shape[2]
-    g = hq // hkv
-    pg = p.reshape(b, hkv, g, s, t).astype(v.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", pg, v,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(b, s, hq, -1)
-
-
-def full_attention(q, k, v, pos_q, pos_k, causal: bool,
-                   kv_valid: jnp.ndarray | None = None) -> jnp.ndarray:
-    scale = q.shape[-1] ** -0.5
-    scores = _gqa_scores((q * scale).astype(q.dtype), k)
-    mask = None
-    if causal:
-        mask = pos_q[:, None] >= pos_k[None, :]
-    if kv_valid is not None:
-        kvm = kv_valid[None, :] if kv_valid.ndim == 1 else kv_valid[:, None, None, :]
-        mask = kvm if mask is None else (mask & kv_valid[None, :])
-    if mask is not None:
-        if mask.ndim == 2:
-            mask = mask[None, None]
-        scores = jnp.where(mask, scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
-    return _gqa_values(p, v).astype(q.dtype)
-
-
-def chunked_attention(q, k, v, pos_q, pos_k, causal: bool, chunk: int,
-                      kv_valid: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Online-softmax over KV chunks; O(S * chunk) score memory."""
-    b, s, hq, d = q.shape
-    t = k.shape[1]
-    n_chunks = -(-t // chunk)
-    t_pad = n_chunks * chunk
-    pad = t_pad - t
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        pos_k = jnp.pad(pos_k, (0, pad), constant_values=2 ** 30)
-        if kv_valid is None:
-            kv_valid = jnp.arange(t_pad) < t
-        else:
-            kv_valid = jnp.pad(kv_valid, (0, pad))
-    elif kv_valid is None:
-        kv_valid = jnp.ones((t_pad,), bool)
-
-    scale = d ** -0.5
-    qf = (q * scale).astype(q.dtype)
-    kc = k.reshape(b, n_chunks, chunk, *k.shape[2:]).swapaxes(0, 1)
-    vc = v.reshape(b, n_chunks, chunk, *v.shape[2:]).swapaxes(0, 1)
-    pc = pos_k.reshape(n_chunks, chunk)
-    mc = kv_valid.reshape(n_chunks, chunk)
-
-    def body(carry, inp):
-        m, l, acc = carry
-        k_i, v_i, p_i, valid_i = inp
-        sc = _gqa_scores(qf, k_i)                          # (B,Hq,S,C) f32
-        msk = valid_i[None, None, None, :]
-        if causal:
-            msk = msk & (pos_q[None, None, :, None] >= p_i[None, None, None, :])
-        sc = jnp.where(msk, sc, NEG_INF)
-        m_i = jnp.maximum(m, sc.max(-1))                   # (B,Hq,S)
-        alpha = jnp.exp(m - m_i)
-        # probs stored in the KV dtype (bf16), reductions accumulate in f32
-        # — §Perf C2: materialized f32 prob tensors dominated train bytes.
-        p = jnp.exp(sc - m_i[..., None]).astype(v_i.dtype)
-        l_i = l * alpha + p.sum(-1, dtype=jnp.float32)
-        # GQA-aware PV product (f32 accumulate on the MXU)
-        hkv = v_i.shape[2]
-        g = hq // hkv
-        pg = p.reshape(b, hkv, g, s, chunk)
-        pv = jnp.einsum("bkgsc,bckd->bkgsd", pg, v_i,
-                        preferred_element_type=jnp.float32)
-        pv = pv.reshape(b, hq, s, d)
-        acc_i = acc * alpha[..., None] + pv
-        return (m_i, l_i, acc_i), None
-
-    m0 = jnp.full((b, hq, s), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, hq, s), jnp.float32)
-    a0 = jnp.zeros((b, hq, s, d), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc, mc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,Hq,S,D)
-    return out.swapaxes(1, 2).astype(q.dtype)              # (B,S,Hq,D)
-
-
 def attention(params: dict, x: jnp.ndarray, cfg: ModelCfg, pol,
               positions: jnp.ndarray,
               cache: dict | None = None,
               kv_from: jnp.ndarray | None = None,
               kv_from_valid: jnp.ndarray | None = None,
               causal: bool = True,
-              key: jax.Array | None = None) -> tuple[jnp.ndarray, dict | None]:
+              key: jax.Array | None = None,
+              attn_pols=None) -> tuple[jnp.ndarray, dict | None]:
     """Self- or cross-attention with optional KV cache.
 
     cache: {"k": (B,Sc,Hkv,D), "v": ..., "idx": ()} — decode appends at idx.
-    kv_from: encoder output for cross-attention (no cache mutation needed
-    beyond first call; callers pass precomputed cross k/v via cache instead).
+    kv_from: encoder output for cross-attention.  attn_pols: per-head
+    TDPolicy tuple routing the contraction through the TD engine
+    (None = precise fused kernels).
     """
     b, s, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    kq, kk, kv_, ko = (common.fold_key(key, i) for i in range(4))
+    kq, kk, kv_, ko, kattn = (common.fold_key(key, i) for i in range(5))
 
     q = _split_heads(common.dense(params["wq"], x, pol, kq), hq)
     src = x if kv_from is None else kv_from
@@ -178,32 +95,38 @@ def attention(params: dict, x: jnp.ndarray, cfg: ModelCfg, pol,
 
     new_cache = None
     if cache is not None and not is_cross:
-        s_cache = cache["k"].shape[1]
         k_all = jax.lax.dynamic_update_slice(
             cache["k"], k.astype(cache["k"].dtype), (0, cache["idx"], 0, 0))
         v_all = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, cache["idx"], 0, 0))
         new_cache = {"k": k_all, "v": v_all, "idx": cache["idx"] + s}
-        kv_valid = jnp.arange(s_cache) < (cache["idx"] + s)
-        pos_k = jnp.arange(s_cache)
-        pos_q = positions if positions.ndim == 1 else positions[0]
+        # runtime operands: valid prefix = fill level, query row 0 at idx
+        kv_len = jnp.full((b,), 0, jnp.int32) + (cache["idx"] + s)
+        q_offset = cache["idx"]
         k_use, v_use = k_all, v_all
     else:
-        kv_valid = kv_from_valid
-        pos_k = jnp.arange(k.shape[1])
-        pos_q = positions if positions.ndim == 1 else positions[0]
         k_use, v_use = k, v
+        if kv_from_valid is not None:
+            kvv = jnp.asarray(kv_from_valid)
+            kv_len = (kvv.astype(jnp.int32).sum(-1) if kvv.ndim == 2
+                      else jnp.full((b,), kvv.astype(jnp.int32).sum()))
+        else:
+            kv_len = jnp.full((b,), k_use.shape[1], jnp.int32)
+        pos_q = positions if positions.ndim == 1 else positions[0]
+        q_offset = pos_q[0]
 
-    t = k_use.shape[1]
-    # chunked (online-softmax scan) only when the q length is large too:
-    # decode (s == 1) reads the whole cache in one pass — no scan, exact
-    # cost accounting, and one fewer loop on the hot path.
-    if t > cfg.attn_chunk and s > 1:
-        o = chunked_attention(q, k_use, v_use, pos_q, pos_k,
-                              causal and not is_cross, cfg.attn_chunk, kv_valid)
+    causal_eff = causal and not is_cross
+    if attn_pols is not None:
+        o = td_attn_mod.td_attention(q, k_use, v_use, attn_pols, kattn,
+                                     causal=causal_eff, kv_len=kv_len,
+                                     q_offset=q_offset)
+    elif s == 1 and cache is not None and not is_cross and causal:
+        # single-row causal decode: the fused flash-decode kernel (the
+        # query is the last valid position, so prefix masking IS causality)
+        o = decode_attention(q[:, 0], k_use, v_use, kv_len)[:, None]
     else:
-        o = full_attention(q, k_use, v_use, pos_q, pos_k,
-                           causal and not is_cross, kv_valid)
+        o = flash_attention(q, k_use, v_use, kv_len, q_offset,
+                            causal=causal_eff)
     y = common.dense(params["wo"], o.reshape(b, s, hq * hd), pol, ko)
     return y, new_cache
 

@@ -8,6 +8,8 @@ feature of every architecture rather than a bolt-on.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -21,6 +23,7 @@ from repro.tdsim import td_linear
 # ---------------------------------------------------------------------------
 pol_at = td_policy.pol_at
 pol_top = td_policy.pol_top
+pol_attn = td_policy.pol_attn
 
 
 def resolve_policy(td: TDExecCfg) -> td_policy.TDPolicy:
@@ -67,21 +70,47 @@ def resolve_arch_policy(arch) -> td_policy.TDPolicy | td_policy.NetworkPolicy:
     distinct weight bit width) and come back as a NetworkPolicy.
     `arch.scenario`/`arch.corner` resolve every "td"-mode matmul's
     operating point for that named scenario/corner.
+
+    `arch.td_attn` (when set to a non-precise TDExecCfg) additionally
+    resolves one policy PER QUERY HEAD for the attention engine — the
+    chain length clamps to the head dim (the QK contraction) and the
+    per-head (R, q, sigma) solve goes through the same batched call and
+    scenario/corner resolution as the layer policies — and attaches them
+    as `NetworkPolicy.attn` (promoting a homogeneous policy to a
+    NetworkPolicy if needed).  Decoder-family only, like `td_per_layer`.
     """
     sc, co = getattr(arch, "scenario", None), getattr(arch, "corner", None)
     if arch.td_per_layer is None:
-        return resolve_policies([arch.td], scenario=sc, corner=co)[0]
-    if arch.model.family != "decoder":
-        raise ValueError("per-layer TD policies require a decoder-family "
-                         f"model, got {arch.model.family!r}")
-    n_layers = arch.model.n_layers
-    if len(arch.td_per_layer) != n_layers:
-        raise ValueError(
-            f"td_per_layer has {len(arch.td_per_layer)} entries for "
-            f"{n_layers}-layer model {arch.model.name!r}")
-    pols = resolve_policies(list(arch.td_per_layer) + [arch.td],
-                            scenario=sc, corner=co)
-    return td_policy.NetworkPolicy(layers=tuple(pols[:-1]), top=pols[-1])
+        base = resolve_policies([arch.td], scenario=sc, corner=co)[0]
+    else:
+        if arch.model.family != "decoder":
+            raise ValueError("per-layer TD policies require a decoder-family "
+                             f"model, got {arch.model.family!r}")
+        n_layers = arch.model.n_layers
+        if len(arch.td_per_layer) != n_layers:
+            raise ValueError(
+                f"td_per_layer has {len(arch.td_per_layer)} entries for "
+                f"{n_layers}-layer model {arch.model.name!r}")
+        pols = resolve_policies(list(arch.td_per_layer) + [arch.td],
+                                scenario=sc, corner=co)
+        base = td_policy.NetworkPolicy(layers=tuple(pols[:-1]), top=pols[-1])
+
+    td_attn = getattr(arch, "td_attn", None)
+    if td_attn is not None and td_attn.mode != "precise":
+        if arch.model.family != "decoder":
+            raise ValueError("td_attn requires a decoder-family model, "
+                             f"got {arch.model.family!r}")
+        spec = dataclasses.replace(
+            td_attn, n_chain=min(td_attn.n_chain, arch.model.hd))
+        attn_pols = tuple(resolve_policies([spec] * arch.model.n_heads,
+                                           scenario=sc, corner=co))
+        if isinstance(base, td_policy.NetworkPolicy):
+            base = dataclasses.replace(base, attn=attn_pols)
+        else:
+            base = td_policy.NetworkPolicy(
+                layers=(base,) * arch.model.n_layers, top=base,
+                attn=attn_pols)
+    return base
 
 
 # ---------------------------------------------------------------------------

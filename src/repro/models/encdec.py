@@ -92,12 +92,17 @@ def decode(params: dict, tokens: jnp.ndarray, enc_out: jnp.ndarray,
         positions = jnp.arange(s)
     new_caches: list = [None] * cfg.n_layers
 
+    # always None here: resolve_arch_policy restricts td_attn to the
+    # decoder family, and encdec runs one plain TDPolicy everywhere
+    attn_pols = common.pol_attn(pol)
+
     def run(lp, xx, cache, i, lkey):
         h = common.rmsnorm(lp["ln1"], xx, cfg.rms_eps)
         y, nc = attention.attention(lp["attn"], h, cfg, pol, positions,
                                     cache=None if cache is None
                                     else cache["self"],
-                                    key=common.fold_key(lkey, 3 * i))
+                                    key=common.fold_key(lkey, 3 * i),
+                                    attn_pols=attn_pols)
         xx = xx + y
         h = common.rmsnorm(lp["ln_x"], xx, cfg.rms_eps)
         y, _ = attention.attention(lp["xattn"], h, cfg, pol, positions,

@@ -106,7 +106,8 @@ def _layer_apply(lp: dict, shared: dict | None, x: jnp.ndarray,
                  positions: jnp.ndarray,
                  cache: dict | None,
                  key: jax.Array | None,
-                 shared_pol=None) -> tuple[jnp.ndarray, dict | None, dict]:
+                 shared_pol=None,
+                 attn_pols=None) -> tuple[jnp.ndarray, dict | None, dict]:
     mix = cfg.mixer_at(i)
     aux: dict = {}
     kmix = common.fold_key(key, 2 * i)
@@ -115,13 +116,14 @@ def _layer_apply(lp: dict, shared: dict | None, x: jnp.ndarray,
     new_cache = None
     if mix == "attn":
         y, new_cache = attention.attention(lp["attn"], h, cfg, pol,
-                                           positions, cache=cache, key=kmix)
+                                           positions, cache=cache, key=kmix,
+                                           attn_pols=attn_pols)
     elif mix == "shared_attn":
         # weight-tied shared block: its params were initialized with the
         # top-level policy, so it must run under that policy too
         y, new_cache = attention.attention(
             shared, h, cfg, pol if shared_pol is None else shared_pol,
-            positions, cache=cache, key=kmix)
+            positions, cache=cache, key=kmix, attn_pols=attn_pols)
     elif mix == "mamba2":
         y, new_cache = mamba2.mamba2(lp["mamba"], h, cfg, pol,
                                      state=cache, key=kmix)
@@ -173,10 +175,13 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
     new_caches: list = [None] * cfg.n_layers
     aux_all: dict = {}
 
+    attn_pols = common.pol_attn(pol)
+
     def run_layer(lp, xx, cache, i, lkey):
         return _layer_apply(lp, shared, xx, cfg, common.pol_at(pol, i), i,
                             positions, cache, lkey,
-                            shared_pol=common.pol_top(pol))
+                            shared_pol=common.pol_top(pol),
+                            attn_pols=attn_pols)
 
     if remat == "full":
         run_layer = jax.checkpoint(run_layer, static_argnums=(3,))
@@ -202,7 +207,8 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
                                        common.pol_at(pol, 0), 0,
                                        positions, cache_i,
                                        common.fold_key(kk, idx),
-                                       shared_pol=common.pol_top(pol))
+                                       shared_pol=common.pol_top(pol),
+                                       attn_pols=attn_pols)
             return (xx, kk), (nc, aux)
 
         body = scan_body

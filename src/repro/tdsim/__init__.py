@@ -1,12 +1,13 @@
 """TD execution simulation: the paper's hardware running inside the model."""
-from repro.tdsim import energy_meter, policy, td_linear
+from repro.tdsim import energy_meter, policy, td_attention, td_linear
 from repro.tdsim.policy import (PRECISE, NetworkPolicy, TDLayerSpec, TDPolicy,
-                                apply_scenario, pol_at, pol_top,
+                                apply_scenario, pol_at, pol_attn, pol_top,
                                 quant_policy, solve_network_policies,
                                 solve_td_policies, solve_td_policy)
 from repro.tdsim.td_linear import init_linear, linear, td_matmul
 
-__all__ = ["energy_meter", "policy", "td_linear", "TDPolicy", "TDLayerSpec",
-           "NetworkPolicy", "PRECISE", "quant_policy", "solve_td_policy",
-           "solve_td_policies", "solve_network_policies", "apply_scenario",
-           "pol_at", "pol_top", "init_linear", "linear", "td_matmul"]
+__all__ = ["energy_meter", "policy", "td_attention", "td_linear", "TDPolicy",
+           "TDLayerSpec", "NetworkPolicy", "PRECISE", "quant_policy",
+           "solve_td_policy", "solve_td_policies", "solve_network_policies",
+           "apply_scenario", "pol_at", "pol_attn", "pol_top", "init_linear",
+           "linear", "td_matmul"]

@@ -189,12 +189,17 @@ class NetworkPolicy:
     """Heterogeneous per-layer execution policy of a whole network.
 
     `layers[i]` drives layer i's matmuls; `top` drives the shared top-level
-    matmuls (embedding adapter, weight-tied shared blocks, lm_head).  A
-    tuple of frozen TDPolicy values is hashable, so a NetworkPolicy is a
-    valid jit constant exactly like a single TDPolicy.
+    matmuls (embedding adapter, weight-tied shared blocks, lm_head);
+    `attn`, when set, holds PER-HEAD policies for the attention engine —
+    every layer's QK^T and PV contractions route through the td_vmm engine
+    under `attn[h]` for query head h (None = precise attention on the fused
+    flash/decode kernels).  A tuple of frozen TDPolicy values is hashable,
+    so a NetworkPolicy is a valid jit constant exactly like a single
+    TDPolicy.
     """
     layers: tuple[TDPolicy, ...]
     top: TDPolicy = PRECISE
+    attn: tuple[TDPolicy, ...] | None = None
 
     def at(self, i: int) -> TDPolicy:
         return self.layers[i]
@@ -225,6 +230,12 @@ def pol_at(pol, i: int) -> TDPolicy:
 def pol_top(pol) -> TDPolicy:
     """Policy of the shared top-level matmuls (adapter / lm_head)."""
     return pol.top if isinstance(pol, NetworkPolicy) else pol
+
+
+def pol_attn(pol) -> tuple[TDPolicy, ...] | None:
+    """Per-head attention-engine policies of a policy (None = run the
+    precise fused attention kernels; a plain TDPolicy never carries them)."""
+    return pol.attn if isinstance(pol, NetworkPolicy) else None
 
 
 def solve_network_policies(sigma_max, *, bits_a=4, bits_w=4,

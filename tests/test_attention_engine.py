@@ -1,0 +1,219 @@
+"""Production attention engine: custom_vjp grads vs the ref oracles'
+vjp, runtime-operand one-compiled-program checks, the TD-quantized
+attention path (sigma=0/q=1 accuracy floor, per-head heterogeneity,
+no-recompile-across-sigma, STE gradients) and the model-level routing
+(cache prefill/decode parity, td_attn policy resolution, forward smoke).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as cfgs
+from repro.configs.base import TDExecCfg
+from repro.kernels.decode_gqa.decode_gqa import _decode_gqa_call
+from repro.kernels.decode_gqa.ops import decode_attention
+from repro.kernels.decode_gqa.ref import decode_gqa_ref
+from repro.kernels.flash_attn.flash_attn import _flash_attn_call
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import flash_attn_ref
+from repro.kernels.td_vmm.td_vmm import _td_vmm_call
+from repro.models import attention, common
+from repro.models import transformer as tr
+from repro.tdsim import PRECISE, TDPolicy
+from repro.tdsim.policy import NetworkPolicy
+from repro.tdsim.td_attention import td_attention
+
+
+def _qkv(key, b, sq, skv, hq, hkv, d):
+    kq, kk, kv = jax.random.split(key, 3)
+    return (jax.random.normal(kq, (b, sq, hq, d), jnp.float32),
+            jax.random.normal(kk, (b, skv, hkv, d), jnp.float32),
+            jax.random.normal(kv, (b, skv, hkv, d), jnp.float32))
+
+
+class TestFlashEngine:
+    def test_grad_matches_ref_vjp(self, key):
+        """custom_vjp recompute backward == autodiff through the oracle,
+        on a rectangular call with runtime kv_len/q_offset."""
+        b, sq, skv, hq, hkv, d = 2, 24, 64, 4, 2, 16
+        q, k, v = _qkv(key, b, sq, skv, hq, hkv, d)
+        kv_len = jnp.asarray([50, 33], jnp.int32)
+        q_off = jnp.asarray(13, jnp.int32)
+        w = jax.random.normal(jax.random.fold_in(key, 9),
+                              (b, sq, hq, d), jnp.float32)
+
+        def loss_kernel(q, k, v):
+            return jnp.sum(w * flash_attention(q, k, v, kv_len, q_off,
+                                               causal=True))
+
+        def loss_ref(q, k, v):
+            return jnp.sum(w * flash_attn_ref(q, k, v, True, kv_len, q_off))
+
+        gk_ = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr_ = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for gk, gr in zip(gk_, gr_):
+            np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                                       atol=1e-5, rtol=1e-5)
+
+    def test_one_compiled_program_across_operands(self, key):
+        """kv_len / q_offset are runtime SMEM operands: sweeping them must
+        reuse the first compiled program (same static shapes)."""
+        b, sq, skv, hq, hkv, d = 1, 16, 64, 4, 2, 16
+        q, k, v = _qkv(key, b, sq, skv, hq, hkv, d)
+        misses0 = _flash_attn_call._cache_size()
+        for kv_l, off in [(20, 0), (60, 5), (64, 40)]:
+            kv_len = jnp.full((b,), kv_l, jnp.int32)
+            q_off = jnp.asarray(off, jnp.int32)
+            p = flash_attention(q, k, v, kv_len, q_off, causal=True)
+            r = flash_attn_ref(q, k, v, True, kv_len, q_off)
+            np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                                       atol=2e-5, rtol=2e-5)
+        assert _flash_attn_call._cache_size() - misses0 <= 1
+
+    def test_decode_one_compiled_program(self, key):
+        b, hq, hkv, s, d = 2, 4, 2, 128, 16
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (b, hq, d), jnp.float32)
+        k = jax.random.normal(kk, (b, s, hkv, d), jnp.float32)
+        v = jax.random.normal(kv, (b, s, hkv, d), jnp.float32)
+        misses0 = _decode_gqa_call._cache_size()
+        for lens in ([3, 80], [128, 1], [77, 77]):
+            length = jnp.asarray(lens, jnp.int32)
+            p = decode_attention(q, k, v, length)
+            r = decode_gqa_ref(q, k, v, length)
+            np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                                       atol=2e-5, rtol=2e-5)
+        assert _decode_gqa_call._cache_size() - misses0 <= 1
+
+
+class TestTdAttention:
+    def test_sigma0_q1_matches_clean(self, key):
+        """8-bit sigma=0/q=1 engine attention reproduces the clean fused
+        path to the dynamic-quantization floor — for both engine modes."""
+        b, t, hq, hkv, d = 2, 48, 4, 2, 16
+        q, k, v = _qkv(key, b, t, t, hq, hkv, d)
+        clean = np.asarray(flash_attention(q, k, v, causal=True))
+        for mode in ("td", "quant"):
+            pol = TDPolicy(mode=mode, bits_a=8, bits_w=8, n_chain=d)
+            o = td_attention(q, k, v, pol, key, causal=True)
+            err = float(np.mean(np.abs(np.asarray(o) - clean)))
+            assert err < 0.05, (mode, err)
+
+    def test_per_head_policies_heterogeneous(self, key):
+        """Per-head (sigma, q): a clean head must be bit-identical to the
+        all-clean run while a noisy head diverges."""
+        b, t, hq, hkv, d = 1, 32, 4, 2, 16
+        q, k, v = _qkv(key, b, t, t, hq, hkv, d)
+        base = TDPolicy(mode="td", bits_a=8, bits_w=8, n_chain=d)
+        o_clean = np.asarray(td_attention(q, k, v, base, key))
+        pols = tuple(base.replace(sigma_chain=5.0 if h == 2 else 0.0)
+                     for h in range(hq))
+        o_het = np.asarray(td_attention(q, k, v, pols, key))
+        for h in range(hq):
+            delta = np.abs(o_het[:, :, h] - o_clean[:, :, h]).max()
+            if h == 2:
+                assert delta > 1e-3, "noisy head did not diverge"
+            else:
+                assert delta == 0.0, f"clean head {h} perturbed: {delta}"
+
+    def test_no_recompile_across_sigma(self, key):
+        """Per-head sigma rides into the engine as a runtime operand: a
+        sigma sweep must not grow the td_vmm jit cache (the QK and PV
+        shapes account for at most 2 entries, traced once)."""
+        b, t, hq, hkv, d = 1, 16, 2, 1, 16
+        q, k, v = _qkv(key, b, t, t, hq, hkv, d)
+        base = TDPolicy(mode="td", bits_a=8, bits_w=8, n_chain=d)
+        td_attention(q, k, v, base, key)          # warm both call shapes
+        misses0 = _td_vmm_call._cache_size()
+        for sg in (0.0, 0.5, 2.0, 7.0):
+            td_attention(q, k, v, base.replace(sigma_chain=sg), key)
+        assert _td_vmm_call._cache_size() == misses0
+
+    def test_ste_grads_equal_clean_attention_grads(self, key):
+        """The STE backward is exactly the clean masked-softmax vjp —
+        independent of the forward noise level."""
+        from repro.tdsim.td_attention import _clean_attention
+        b, t, hq, hkv, d = 1, 24, 4, 2, 16
+        q, k, v = _qkv(key, b, t, t, hq, hkv, d)
+        kv_len = jnp.full((b,), t, jnp.int32)
+        q_off = jnp.zeros((), jnp.int32)
+        pol = TDPolicy(mode="td", bits_a=8, bits_w=8, n_chain=d,
+                       sigma_chain=3.0)
+        w = jax.random.normal(jax.random.fold_in(key, 3), q.shape)
+
+        g_td = jax.grad(lambda a, b_, c: jnp.sum(w * td_attention(
+            a, b_, c, pol, key)), argnums=(0, 1, 2))(q, k, v)
+        g_cl = jax.grad(lambda a, b_, c: jnp.sum(w * _clean_attention(
+            a, b_, c, kv_len, q_off, True)), argnums=(0, 1, 2))(q, k, v)
+        for gt, gc in zip(g_td, g_cl):
+            np.testing.assert_allclose(np.asarray(gt), np.asarray(gc),
+                                       atol=1e-6, rtol=1e-6)
+
+
+class TestModelRouting:
+    def test_cache_prefill_decode_matches_full(self, key):
+        """attention() through the fused engines: prefill + stepwise decode
+        against the one-shot full forward (flash + flash-decode + the
+        runtime kv_len/q_offset plumbing all in one check)."""
+        cfg = cfgs.get_smoke("granite-8b").model
+        b, s = 2, 12
+        params = attention.attn_init(key, cfg, PRECISE)
+        x = jax.random.normal(jax.random.fold_in(key, 1),
+                              (b, s, cfg.d_model), jnp.float32)
+        full, _ = attention.attention(params, x, cfg, PRECISE,
+                                      jnp.arange(s))
+        cache = attention.init_cache(b, s, cfg, jnp.float32)
+        y, cache = attention.attention(params, x[:, :5], cfg, PRECISE,
+                                       jnp.arange(5), cache=cache)
+        errs = [float(jnp.abs(y - full[:, :5]).max())]
+        for t in range(5, s):
+            y, cache = attention.attention(params, x[:, t:t + 1], cfg,
+                                           PRECISE, jnp.arange(t, t + 1),
+                                           cache=cache)
+            errs.append(float(jnp.abs(y - full[:, t:t + 1]).max()))
+        assert max(errs) < 1e-4, errs
+
+    def test_resolve_arch_policy_attaches_attn_pols(self):
+        arch = cfgs.get_smoke("granite-8b").replace(
+            td_attn=TDExecCfg(mode="td", bits_a=8, bits_w=8, n_chain=576,
+                              sigma_max=2.0))
+        pol = common.resolve_arch_policy(arch)
+        assert isinstance(pol, NetworkPolicy)
+        assert pol.attn is not None
+        assert len(pol.attn) == arch.model.n_heads
+        # chain length clamps to the head dim (the QK contraction)
+        assert all(p.n_chain == arch.model.hd for p in pol.attn)
+        assert all(p.mode == "td" for p in pol.attn)
+        # layer policies stay homogeneous -> scan-compatible
+        assert pol.homogeneous
+
+    def test_resolve_arch_policy_rejects_non_decoder(self):
+        arch = cfgs.get_smoke("seamless-m4t-large-v2").replace(
+            td_attn=TDExecCfg(mode="quant"))
+        with pytest.raises(ValueError, match="decoder-family"):
+            common.resolve_arch_policy(arch)
+
+    def test_forward_smoke_with_td_attn(self, key):
+        """End-to-end decoder forward + grads with the TD attention path
+        engaged (quant mode: deterministic accuracy floor)."""
+        arch = cfgs.get_smoke("granite-8b").replace(
+            td_attn=TDExecCfg(mode="quant", bits_a=8, bits_w=8))
+        cfg = arch.model
+        pol = common.resolve_arch_policy(arch)
+        assert common.pol_attn(pol) is not None
+        params = tr.init_params(key, cfg, pol)
+        toks = jax.random.randint(key, (2, 10), 0, cfg.vocab)
+        logits, _, _ = tr.forward(params, {"tokens": toks}, cfg, pol,
+                                  key=key)
+        assert bool(jnp.isfinite(logits).all())
+
+        def loss(p):
+            lg, _, _ = tr.forward(p, {"tokens": toks}, cfg, pol, key=key)
+            return jnp.mean(lg ** 2)
+
+        g = jax.grad(loss)(params)
+        assert all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree_util.tree_leaves(g))

@@ -1,11 +1,19 @@
 """Per-kernel interpret=True validation against the ref.py oracles, with
-shape/dtype sweeps (assignment requirement c)."""
+shape/dtype sweeps (assignment requirement c).
+
+Hypothesis is optional: only the property-based classes skip without it —
+the deterministic oracle sweeps must run on a bare environment too.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare environments
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.decode_gqa.decode_gqa import decode_gqa_pallas
 from repro.kernels.decode_gqa.ref import decode_gqa_ref
@@ -127,19 +135,21 @@ class TestDecodeGqaKernel:
                                    np.asarray(p, np.float32),
                                    atol=tol, rtol=tol)
 
-    @given(st.integers(1, 3), st.integers(30, 200))
-    @settings(max_examples=10, deadline=None)
-    def test_property_random_shapes(self, b, s):
-        key = jax.random.PRNGKey(b * s)
-        kq, kk, kv = jax.random.split(key, 3)
-        q = jax.random.normal(kq, (b, 4, 32))
-        k = jax.random.normal(kk, (b, s, 2, 32))
-        v = jax.random.normal(kv, (b, s, 2, 32))
-        length = jnp.full((b,), s, jnp.int32)
-        r = decode_gqa_ref(q, k, v, length)
-        p = decode_gqa_pallas(q, k, v, length, bs=64)
-        np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=1e-4,
-                                   rtol=1e-4)
+if HAVE_HYPOTHESIS:
+    class TestDecodeGqaProperties:
+        @given(st.integers(1, 3), st.integers(30, 200))
+        @settings(max_examples=10, deadline=None)
+        def test_property_random_shapes(self, b, s):
+            key = jax.random.PRNGKey(b * s)
+            kq, kk, kv = jax.random.split(key, 3)
+            q = jax.random.normal(kq, (b, 4, 32))
+            k = jax.random.normal(kk, (b, s, 2, 32))
+            v = jax.random.normal(kv, (b, s, 2, 32))
+            length = jnp.full((b,), s, jnp.int32)
+            r = decode_gqa_ref(q, k, v, length)
+            p = decode_gqa_pallas(q, k, v, length, bs=64)
+            np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                                       atol=1e-4, rtol=1e-4)
 
 
 class TestFlashAttnKernel:
@@ -165,18 +175,26 @@ class TestFlashAttnKernel:
                                    np.asarray(p, np.float32),
                                    atol=tol, rtol=tol)
 
-    def test_matches_model_attention(self):
-        """The kernel agrees with the model's chunked-attention path."""
+    def test_matches_model_attention_route(self):
+        """The production op the model calls (`ops.flash_attention`, with
+        runtime kv_len/q_offset operands) agrees with the raw kernel and
+        the oracle on a rectangular cache-prefill-style call."""
         from repro.kernels.flash_attn.flash_attn import flash_attn_pallas
-        from repro.models.attention import chunked_attention
+        from repro.kernels.flash_attn.ops import flash_attention
+        from repro.kernels.flash_attn.ref import flash_attn_ref
         key = jax.random.PRNGKey(0)
         kq, kk, kv = jax.random.split(key, 3)
-        b, s, hq, hkv, d = 2, 256, 8, 2, 64
-        q = jax.random.normal(kq, (b, s, hq, d))
-        k = jax.random.normal(kk, (b, s, hkv, d))
-        v = jax.random.normal(kv, (b, s, hkv, d))
-        pos = jnp.arange(s)
-        a = chunked_attention(q, k, v, pos, pos, True, 64)
-        p = flash_attn_pallas(q, k, v, causal=True, bq=64, bk=64)
-        np.testing.assert_allclose(np.asarray(a), np.asarray(p),
-                                   atol=5e-3, rtol=5e-3)
+        b, sq, skv, hq, hkv, d = 2, 48, 256, 8, 2, 64
+        q = jax.random.normal(kq, (b, sq, hq, d))
+        k = jax.random.normal(kk, (b, skv, hkv, d))
+        v = jax.random.normal(kv, (b, skv, hkv, d))
+        kv_len = jnp.asarray([200, 97], jnp.int32)
+        q_off = jnp.asarray(40, jnp.int32)
+        r = flash_attn_ref(q, k, v, True, kv_len, q_off)
+        o = flash_attention(q, k, v, kv_len, q_off, causal=True)
+        p = flash_attn_pallas(q, k, v, kv_len, q_off, causal=True,
+                              bq=16, bk=64)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                                   atol=2e-5, rtol=2e-5)

@@ -11,8 +11,25 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare environments
+    # property tests skip individually; the deterministic endpoint/gc
+    # tests below still run without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _NullStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
 
 from repro.core import noise_tolerance as nt
 
@@ -188,3 +205,28 @@ def test_batched_keys_honoured():
                                  jax.random.fold_in(key, l), n_repeats=2)
         np.testing.assert_allclose(bres.sigma_max[l], sres.sigma_max,
                                    rtol=1e-5, atol=1e-5)
+
+
+def test_jit_cache_releases_dead_eval_fns():
+    """The jitted-runner cache is keyed weakly by eval_fn; the cached
+    runner must not close over its own key (that pinned every eval_fn —
+    and its jit executables — forever).  Dropping the last strong
+    reference must actually evict the entry."""
+    import gc
+    import weakref
+
+    def make_eval():
+        def eval_fn(sigma_vec, key):
+            return 1.0 - 0.1 * jnp.sum(sigma_vec)
+        return eval_fn
+
+    key = jax.random.PRNGKey(0)
+    for chunk in (None, 4):          # both runner flavours must release
+        fn = make_eval()
+        nt.find_sigma_max_batched(fn, SIGMAS, key, n_layers=2,
+                                  n_repeats=1, chunk_size=chunk)
+        assert fn in nt._JIT_CACHE   # cached while alive (reuse contract)
+        ref = weakref.ref(fn)
+        del fn
+        gc.collect()
+        assert ref() is None, "jit cache still pins a dead eval_fn"
