@@ -1,0 +1,203 @@
+"""Continuous-batching serving gate: scheduler vs fixed-batch baseline.
+
+Drives 256 ragged synthetic streams (prompt and generation lengths each
+uniform in [len/2, len]) through the continuous-batching engine and
+through the SAME compiled programs under a fixed-batch lockstep policy
+(admission only when every slot is free — the old `serve.run` shape).
+Only the scheduling policy differs, so the throughput gap is pure slot
+recycling: the fixed baseline pays max(gen) decode steps per batch while
+the slowest request holds every slot.
+
+Gates (asserted on every backend — this is a scheduling property, not a
+kernel-compile property):
+
+  * continuous batching runs FEWER decode steps and more tokens/s than
+    the fixed-batch baseline, with per-request p50/p99 ms/token recorded;
+  * a mid-run injected `ft.Preemption` loses ZERO admitted requests and
+    reproduces the uninterrupted run's greedy outputs bit-identically;
+  * per-request J/token (RequestMeter) sums to the run-total energy.
+
+Artifacts under ``artifacts/serving/``:
+
+  * ``bench_serving_requests.csv``  per-request telemetry (J/token, p50/
+                                    p99 ms/token, TTFT, readmissions)
+  * ``bench_serving.json``          both modes' summaries + gate verdicts
+
+``REPRO_SERVE_SMOKE=1`` shrinks the sweep for fast iteration/CI.
+"""
+import csv
+import json
+import os
+import time
+
+import numpy as np
+
+import repro.configs as cfgs
+from repro.configs.base import TDExecCfg
+from repro.launch import ft
+from repro.launch.scheduler import ContinuousBatchingEngine, Request
+from repro.launch.serve import synthetic_requests
+
+OUT_DIR = os.path.join("artifacts", "serving")
+
+ARCH = "qwen3-8b"
+STREAMS, CAPACITY, PROMPT, GEN = 256, 16, 16, 32
+STREAMS_SMOKE, CAPACITY_SMOKE, PROMPT_SMOKE, GEN_SMOKE = 32, 4, 8, 24
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_SERVE_SMOKE", "").strip() in ("1", "true")
+
+
+def _mk_requests(n, prompt, gen, vocab, seed=0):
+    return synthetic_requests(n, prompt, gen, vocab, seed=seed)
+
+
+def _engine(arch, capacity, s_cache, params=None, continuous=True):
+    return ContinuousBatchingEngine(arch, capacity=capacity,
+                                    s_cache=s_cache, seed=0, params=params,
+                                    continuous=continuous)
+
+
+def _run_mode(arch, mk_reqs, capacity, s_cache, params, continuous,
+              inject=None, trials=1):
+    """Run one scheduling mode `trials` times on fresh request sets and
+    keep the fastest trial: tokens/steps/outputs are deterministic across
+    trials, so best-of-N only de-noises the wall clock (the runs are
+    ~1 s on smoke hardware, well within OS-jitter territory)."""
+    best = None
+    for _ in range(max(1, trials)):
+        eng = _engine(arch, capacity, s_cache, params=params,
+                      continuous=continuous)
+        eng.warmup()        # compile outside the timed window
+        reqs = mk_reqs()
+        t0 = time.monotonic()
+        for r in reqs:
+            r.arrival_s = t0
+        out = eng.run(reqs,
+                      retry_policy=ft.RetryPolicy(backoff_s=0.0)
+                      if inject else None,
+                      inject=inject)
+        out["outputs"] = {rid: list(r.generated)
+                          for rid, r in eng.done.items()}
+        out["meter_total_j"] = (eng.meter.run_total_energy()
+                                if eng.meter else 0.0)
+        out["meter_rows"] = eng.meter.rows() if eng.meter else []
+        if best is None or out["tokens_per_s"] > best[1]["tokens_per_s"]:
+            best = (eng, out)
+    return best
+
+
+def write_artifacts(cont, fixed, pre, gates) -> list[str]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    paths = []
+    p = os.path.join(OUT_DIR, "bench_serving_requests.csv")
+    rows = cont["per_request"]
+    with open(p, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    paths.append(p)
+    p = os.path.join(OUT_DIR, "bench_serving.json")
+    strip = ("per_request", "outputs", "meter_rows")
+
+    def lean(d):
+        return {k: v for k, v in d.items() if k not in strip}
+
+    with open(p, "w") as f:
+        json.dump({"continuous": lean(cont), "fixed_batch": lean(fixed),
+                   "preempted": lean(pre), "gates": gates}, f, indent=1)
+    paths.append(p)
+    return paths
+
+
+def run() -> list[str]:
+    smoke = _smoke()
+    streams = STREAMS_SMOKE if smoke else STREAMS
+    capacity = CAPACITY_SMOKE if smoke else CAPACITY
+    prompt = PROMPT_SMOKE if smoke else PROMPT
+    gen = GEN_SMOKE if smoke else GEN
+    s_cache = prompt + gen
+
+    arch = cfgs.get_smoke(ARCH).replace(td=TDExecCfg(mode="quant"))
+    vocab = arch.model.vocab
+
+    # one param set shared by every mode: the comparison (and the greedy
+    # output parity asserts) must only vary the scheduling policy
+    seed_eng = _engine(arch, capacity, s_cache)
+    params = seed_eng.params
+
+    def reqs():
+        return _mk_requests(streams, prompt, gen, vocab, seed=7)
+
+    eng_c, cont = _run_mode(arch, reqs, capacity, s_cache, params, True,
+                            trials=2)
+    _, fixed = _run_mode(arch, reqs, capacity, s_cache, params, False,
+                         trials=2)
+
+    # mid-run preemption: fire once at half the continuous run's steps
+    fire_at = max(1, cont["steps"] // 2)
+    state = {"fired": False}
+
+    def inject(step):
+        if step >= fire_at and not state["fired"]:
+            state["fired"] = True
+            raise ft.Preemption(f"injected at step {step}")
+
+    _, pre = _run_mode(arch, reqs, capacity, s_cache, params, True,
+                       inject=inject)
+
+    # --- gates -----------------------------------------------------------
+    speedup = cont["tokens_per_s"] / max(fixed["tokens_per_s"], 1e-12)
+    assert cont["steps"] < fixed["steps"], \
+        f"slot recycling ran MORE steps: {cont['steps']} vs {fixed['steps']}"
+    assert speedup > 1.0, \
+        f"continuous batching not faster: {speedup:.2f}x " \
+        f"({cont['tokens_per_s']:.1f} vs {fixed['tokens_per_s']:.1f} tok/s)"
+    assert state["fired"], "preemption injection never fired"
+    lost = streams - pre["requests"]
+    assert lost == 0, f"preemption lost {lost} admitted requests"
+    assert pre["outputs"] == cont["outputs"], \
+        "preempted run diverged from the uninterrupted greedy outputs"
+    per_req_j = sum(r["energy_j"] for r in cont["meter_rows"])
+    assert abs(per_req_j - cont["meter_total_j"]) <= \
+        1e-9 * max(1.0, cont["meter_total_j"]), \
+        "per-request energies do not sum to the run total"
+
+    gates = {"streams": streams, "capacity": capacity,
+             "tokens_per_s_continuous": cont["tokens_per_s"],
+             "tokens_per_s_fixed": fixed["tokens_per_s"],
+             "speedup": speedup,
+             "steps_continuous": cont["steps"],
+             "steps_fixed": fixed["steps"],
+             "p99_ms_per_token": cont["ms_per_token_p99"],
+             "preemption_lost": lost,
+             "preempted_readmissions": sum(
+                 r["readmissions"] for r in pre["per_request"]),
+             "energy_sum_matches_total": True}
+
+    out = [
+        f"serving,mode=continuous,streams={streams},capacity={capacity},"
+        f"tokens={cont['new_tokens']},steps={cont['steps']},"
+        f"tok_per_s={cont['tokens_per_s']:.1f},"
+        f"p50_ms={cont['ms_per_token_p50']:.2f},"
+        f"p99_ms={cont['ms_per_token_p99']:.2f},"
+        f"j_per_token={cont.get('j_per_token', 0.0):.3e}",
+        f"serving,mode=fixed_batch,streams={streams},capacity={capacity},"
+        f"tokens={fixed['new_tokens']},steps={fixed['steps']},"
+        f"tok_per_s={fixed['tokens_per_s']:.1f},"
+        f"p50_ms={fixed['ms_per_token_p50']:.2f},"
+        f"p99_ms={fixed['ms_per_token_p99']:.2f}",
+        f"serving,speedup={speedup:.2f}x,"
+        f"steps_saved={fixed['steps'] - cont['steps']},"
+        f"derived=continuous_beats_fixed=True",
+        f"serving,preemption_lost={lost},readmissions="
+        f"{gates['preempted_readmissions']},"
+        f"derived=zero_loss_preemption=True",
+        "serving,energy_sum_matches_total=True,"
+        "derived=per_request_meter_exact=True",
+    ]
+    for p in write_artifacts(cont, fixed, pre, gates):
+        out.append(f"serving,artifact={p}")
+    out.append("serving,gate_ok=True,derived=continuous_batching_engine=True")
+    return out

@@ -12,8 +12,9 @@ from benchmarks import (bench_arch_energy, bench_attention,
                         bench_design_grid, bench_energy_exact,
                         bench_energy_relaxed, bench_eta_esnr,
                         bench_noise_tolerance, bench_output_range,
-                        bench_roofline, bench_scenarios, bench_td_vmm,
-                        bench_tdc, bench_tdmac_cell, bench_throughput_area)
+                        bench_roofline, bench_scenarios, bench_serving,
+                        bench_td_vmm, bench_tdc, bench_tdmac_cell,
+                        bench_throughput_area)
 
 SUITES = {
     "fig3c": bench_eta_esnr,
@@ -28,6 +29,7 @@ SUITES = {
     "scenarios": bench_scenarios,
     "td_vmm": bench_td_vmm,
     "attention": bench_attention,
+    "serving": bench_serving,
     "roofline": bench_roofline,
     "arch_energy": bench_arch_energy,
 }

@@ -37,6 +37,7 @@ class StepWatchdog:
         self.times: deque = deque(maxlen=window)
         self.warmup = warmup_steps
         self.straggler_count = 0
+        self.steps_observed = 0
         self._t0 = None
         self._step = -1
 
@@ -47,9 +48,19 @@ class StepWatchdog:
     def stop(self) -> WatchdogReport:
         dur = time.monotonic() - self._t0
         hist = sorted(self.times)
-        p50 = hist[len(hist) // 2] if hist else dur
-        straggler = (len(self.times) >= self.warmup
-                     and dur > self.factor * p50)
+        if hist:
+            # true median: average the two middle samples on even windows
+            # (hist[len//2] alone is the UPPER middle — biased high)
+            mid = len(hist) // 2
+            p50 = (hist[mid] if len(hist) % 2
+                   else 0.5 * (hist[mid - 1] + hist[mid]))
+        else:
+            p50 = dur
+        # warmup counts every step SEEN, not just the non-straggler samples
+        # kept in `times` — otherwise a noisy warmup keeps extending itself
+        warm = self.steps_observed >= self.warmup
+        self.steps_observed += 1
+        straggler = warm and dur > self.factor * p50
         if straggler:
             self.straggler_count += 1
         else:
@@ -71,11 +82,18 @@ class RetryPolicy:
 
 
 def run_with_retries(body: Callable[[], object],
-                     policy: RetryPolicy = RetryPolicy(),
+                     policy: RetryPolicy | None = None,
                      on_restart: Callable[[int, BaseException], None]
                      | None = None):
     """Run `body` (a full train session that resumes from the latest
-    checkpoint) restarting on retryable failures."""
+    checkpoint) restarting on retryable failures.
+
+    `policy=None` constructs a fresh RetryPolicy per call — a dataclass
+    default instance would be one MUTABLE object shared by every call site
+    (a caller tweaking `policy.max_restarts` would change everyone else's).
+    """
+    if policy is None:
+        policy = RetryPolicy()
     restarts = 0
     while True:
         try:
@@ -86,4 +104,5 @@ def run_with_retries(body: Callable[[], object],
                 raise
             if on_restart is not None:
                 on_restart(restarts, e)
-            time.sleep(policy.backoff_s * restarts)
+            # exponential backoff: base * 2^(restart-1), not a linear ramp
+            time.sleep(policy.backoff_s * 2.0 ** (restarts - 1))

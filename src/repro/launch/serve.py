@@ -1,11 +1,17 @@
-"""Serving driver: batched prefill + greedy decode with KV caches.
+"""Serving driver: batched prefill + greedy decode with KV caches, plus
+the continuous-batching scheduler front-end.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-        --batch 4 --prompt-len 32 --gen 32 --td quant
+        --batch 4 --prompt-len 32 --gen 32 --td quant --seed 0
+
+    # ragged concurrent streams through the slot-recycling scheduler
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        --scheduler --streams 16 --capacity 4 --td quant
 
 Exercises the same prefill/decode steps the dry-run lowers at production
 shapes, including per-token latency stats and the TD energy meter (J/token
-under the three hardware domains for the current arch + policy).
+under the three hardware domains for the current arch + policy; PER
+REQUEST in scheduler mode).
 """
 import argparse
 import time
@@ -18,6 +24,7 @@ import repro.configs as cfgs
 from repro.configs.base import ShapeCfg
 from repro.launch import steps as steps_lib
 from repro.launch import td_cli
+from repro.launch.scheduler import ContinuousBatchingEngine, Request
 from repro.models import common, get_api, matmul_shapes
 from repro.tdsim import energy_meter
 
@@ -26,8 +33,10 @@ def run(arch, batch: int, prompt_len: int, gen: int, seed: int = 0):
     cfg = arch.model
     pol = common.resolve_arch_policy(arch)
     api = get_api(cfg)
-    key = jax.random.key(seed)
-    params = api["init"](key, cfg, pol)
+    # one independent key stream per consumer: reusing a single key would
+    # correlate param init, prompt sampling and frontend embeds
+    k_params, k_prompts, k_embeds = jax.random.split(jax.random.key(seed), 3)
+    params = api["init"](k_params, cfg, pol)
     s_cache = prompt_len + gen
 
     shape = ShapeCfg("serve", s_cache, batch, "decode")
@@ -35,12 +44,12 @@ def run(arch, batch: int, prompt_len: int, gen: int, seed: int = 0):
     serve_step = jax.jit(steps_lib.build_serve_step(arch, shape),
                          donate_argnums=(2,))
 
-    toks = jax.random.randint(key, (batch, prompt_len), 3, cfg.vocab)
+    toks = jax.random.randint(k_prompts, (batch, prompt_len), 3, cfg.vocab)
     batch_in = {"tokens": toks}
     if cfg.family == "encdec" or cfg.frontend is not None:
         batch_in["embeds"] = jax.random.normal(
-            key, (batch, max(8, prompt_len // 2),
-                  cfg.d_frontend or cfg.d_model), jnp.bfloat16)
+            k_embeds, (batch, max(8, prompt_len // 2),
+                       cfg.d_frontend or cfg.d_model), jnp.bfloat16)
 
     t0 = time.monotonic()
     logits, state = prefill(params, batch_in)
@@ -84,6 +93,50 @@ def run(arch, batch: int, prompt_len: int, gen: int, seed: int = 0):
     return gen_ids
 
 
+def synthetic_requests(n: int, prompt_len: int, gen: int,
+                       vocab: int, seed: int = 0) -> list[Request]:
+    """Ragged synthetic streams: prompt and generation lengths each vary
+    uniformly in [len/2, len] — the bursty traffic shape the fixed-batch
+    driver cannot represent."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        glen = int(rng.integers(max(1, gen // 2), gen + 1))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(3, vocab, size=plen).astype(np.int32),
+            max_new_tokens=glen))
+    return reqs
+
+
+def run_scheduler(arch, streams: int, prompt_len: int, gen: int,
+                  capacity: int, seed: int = 0):
+    """Continuous-batching serve: ragged streams through the scheduler."""
+    # independent key streams: the engine consumes the params seed, the
+    # prompt sampler its own fold — mirrors run()'s per-consumer split
+    eng = ContinuousBatchingEngine(arch, capacity=capacity,
+                                   s_cache=prompt_len + gen, seed=seed)
+    reqs = synthetic_requests(streams, prompt_len, gen, arch.model.vocab,
+                              seed=seed + 1)
+    t_arrival = time.monotonic()
+    for r in reqs:
+        r.arrival_s = t_arrival
+    out = eng.run(reqs)
+    print(f"[serve/sched] {out['requests']} requests, "
+          f"{out['new_tokens']} tokens in {out['wall_s']:.2f} s "
+          f"({out['tokens_per_s']:.1f} tok/s, {out['steps']} steps, "
+          f"capacity {eng.capacity}, slot {eng.s_cache} tok)")
+    print(f"[serve/sched] per-request ms/token "
+          f"p50={out['ms_per_token_p50']:.2f} "
+          f"p99={out['ms_per_token_p99']:.2f}; "
+          f"stragglers={out['stragglers']}")
+    if "energy_j_total" in out:
+        print(f"[serve/sched] TD energy: {out['energy_j_total']:.3e} J "
+              f"total, {out['j_per_token']:.3e} J/token "
+              f"({eng.meter.domain} domain, per-request rows available)")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -91,6 +144,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed; split per consumer (params / prompts "
+                    "/ frontend embeds)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="continuous-batching engine over ragged synthetic "
+                    "streams (admission queue + slot recycling) instead of "
+                    "the fixed-batch driver")
+    ap.add_argument("--streams", type=int, default=16,
+                    help="scheduler mode: number of synthetic streams")
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="scheduler mode: concurrent KV-cache slots")
     ap.add_argument("--td", default=None,
                     choices=[None, "precise", "quant", "td"])
     ap.add_argument("--td-per-layer", default=None,
@@ -104,7 +168,11 @@ def main():
     arch = td_cli.apply_td_args(arch, args.td, args.td_per_layer,
                                 args.scenario, args.corner,
                                 td_attn=args.td_attn)
-    run(arch, args.batch, args.prompt_len, args.gen)
+    if args.scheduler:
+        run_scheduler(arch, args.streams, args.prompt_len, args.gen,
+                      args.capacity, seed=args.seed)
+    else:
+        run(arch, args.batch, args.prompt_len, args.gen, seed=args.seed)
 
 
 if __name__ == "__main__":

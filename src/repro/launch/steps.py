@@ -103,6 +103,62 @@ def build_serve_step(arch: ArchConfig, shape: ShapeCfg):
     return serve_step
 
 
+def build_ragged_prefill_step(arch: ArchConfig, prompt_pad: int):
+    """Bucketed prefill for the continuous-batching serve engine.
+
+    Prompts are right-padded to the `prompt_pad` bucket and the TRUE
+    length rides in as a runtime int32, so every admission reuses ONE
+    compiled program regardless of prompt length; the causal mask keeps
+    all rows below the true length clean of the pad junk, and the
+    next-token logits are gathered at the true last position.  Returns
+    ``(next_tok (B, 1), state)`` with caches sized at `prompt_pad` — the
+    insert step copies them into a decode-cache slot.
+    """
+    cfg = arch.model
+    if cfg.family != "decoder":
+        raise ValueError("ragged prefill requires a decoder-family model, "
+                         f"got {cfg.family!r}")
+    pol = common.resolve_arch_policy(arch)
+    api = get_api(cfg)
+    compute_dt = DTYPES[arch.train.compute_dtype]
+
+    def prefill_step(params, toks, true_len):
+        p_c = common.cast_tree(params, compute_dt)
+        logits, state = api["prefill"](p_c, {"tokens": toks}, cfg, pol,
+                                       s_cache=prompt_pad,
+                                       true_len=true_len)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        return tok, state
+
+    return prefill_step
+
+
+def build_insert_step():
+    """Copy a b=1 prefilled state into slot `i` of the batched decode
+    state (the slot-recycle primitive of the continuous-batching engine).
+
+    Generic over the cache pytree: leaves with a leading batch dim (KV
+    tensors, SSM/RWKV state) are written at the slot row — a prefill
+    cache shorter than the decode cache writes its prefix — while the
+    attention fill-index leaf (dst ``(B,)`` per-row, src scalar) is set
+    to the TRUE prompt length, which is exactly what masks the pad junk
+    the bucketed prefill wrote past it.
+    """
+
+    def insert_step(dst_state, src_state, slot, length):
+        def ins(dst, src):
+            if src.ndim < dst.ndim:   # scalar fill idx -> per-row idx[slot]
+                return jax.lax.dynamic_update_slice(
+                    dst, jnp.asarray(length, dst.dtype)[None], (slot,))
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype),
+                (slot,) + (0,) * (src.ndim - 1))
+
+        return jax.tree_util.tree_map(ins, dst_state, src_state)
+
+    return insert_step
+
+
 def build_forward_eval(arch: ArchConfig):
     """Forward-only loss eval (used by noise-tolerance runs on LMs)."""
     cfg = arch.model

@@ -87,21 +87,47 @@ def attention(params: dict, x: jnp.ndarray, cfg: ModelCfg, pol,
         k = common.rmsnorm(params["k_norm"], k, cfg.rms_eps)
 
     is_cross = kv_from is not None
+    per_row = (cache is not None and not is_cross
+               and getattr(cache["idx"], "ndim", 0) == 1)
+    if per_row and s != 1:
+        raise ValueError("per-slot (vector-idx) caches support single-token "
+                         f"decode steps only, got s={s}")
     if not is_cross:
         q = common.apply_rope(q, positions, cfg.rope_theta)
-        k_pos = positions if cache is None else (
-            cache["idx"] + jnp.arange(s))
+        if cache is None:
+            k_pos = positions
+        elif per_row:
+            # each slot's KV lands at its own fill position
+            k_pos = cache["idx"][:, None] + jnp.arange(s)
+        else:
+            k_pos = cache["idx"] + jnp.arange(s)
         k = common.apply_rope(k, k_pos, cfg.rope_theta)
 
     new_cache = None
     if cache is not None and not is_cross:
-        k_all = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache["idx"], 0, 0))
-        v_all = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache["idx"], 0, 0))
+        if per_row:
+            # ragged slots (continuous-batching serve): per-row write at
+            # each slot's own fill index; the decode kernel's runtime
+            # kv_len operand masks every slot to its own valid prefix, so
+            # one compiled program serves any mix of fill levels
+            def _row_update(c, u, i):
+                return jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+
+            k_all = jax.vmap(_row_update)(
+                cache["k"], k.astype(cache["k"].dtype), cache["idx"])
+            v_all = jax.vmap(_row_update)(
+                cache["v"], v.astype(cache["v"].dtype), cache["idx"])
+            kv_len = jnp.minimum(cache["idx"] + s, cache["k"].shape[1])
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype),
+                (0, cache["idx"], 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype),
+                (0, cache["idx"], 0, 0))
+            kv_len = jnp.full((b,), 0, jnp.int32) + (cache["idx"] + s)
         new_cache = {"k": k_all, "v": v_all, "idx": cache["idx"] + s}
         # runtime operands: valid prefix = fill level, query row 0 at idx
-        kv_len = jnp.full((b,), 0, jnp.int32) + (cache["idx"] + s)
         q_offset = cache["idx"]
         k_use, v_use = k_all, v_all
     else:
@@ -117,6 +143,10 @@ def attention(params: dict, x: jnp.ndarray, cfg: ModelCfg, pol,
 
     causal_eff = causal and not is_cross
     if attn_pols is not None:
+        if per_row:
+            raise ValueError("TD-quantized attention takes a scalar "
+                             "q_offset; per-slot ragged caches run the "
+                             "precise flash-decode path")
         o = td_attn_mod.td_attention(q, k_use, v_use, attn_pols, kattn,
                                      causal=causal_eff, kv_len=kv_len,
                                      q_offset=q_offset)
@@ -132,7 +162,11 @@ def attention(params: dict, x: jnp.ndarray, cfg: ModelCfg, pol,
 
 
 def init_cache(b: int, s_cache: int, cfg: ModelCfg,
-               dtype=jnp.bfloat16) -> dict:
+               dtype=jnp.bfloat16, per_row_idx: bool = False) -> dict:
+    """KV cache.  `per_row_idx=True` gives every batch row its OWN fill
+    index (B,) — the continuous-batching serve engine's ragged slots, where
+    each slot decodes against a different valid-KV prefix."""
+    idx_shape = (b,) if per_row_idx else ()
     return {"k": jnp.zeros((b, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
             "v": jnp.zeros((b, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
-            "idx": jnp.zeros((), jnp.int32)}
+            "idx": jnp.zeros(idx_shape, jnp.int32)}

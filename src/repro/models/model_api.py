@@ -44,28 +44,40 @@ def _dec_train_loss(params, batch, cfg: ModelCfg, pol, key=None,
 
 
 def _dec_prefill(params, batch, cfg: ModelCfg, pol, s_cache: int,
-                 key=None, cache_dtype=jnp.bfloat16):
+                 key=None, cache_dtype=jnp.bfloat16, true_len=None):
     b = batch["tokens"].shape[0]
     caches = transformer.init_caches(b, s_cache, cfg, cache_dtype, pol=pol)
     logits, caches, _ = transformer.forward(params, batch, cfg, pol,
                                             caches=caches, key=key)
+    if true_len is not None:
+        # bucket-padded prompts (serving engine): causal masking keeps every
+        # row < true_len clean of the pad junk, so the next-token logits
+        # live at the TRUE last prompt position, not the padded one
+        tl = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32), (b,))
+        last = jnp.take_along_axis(logits, tl[:, None, None] - 1, axis=1)
+        return last, {"layers": caches, "enc_out": None}
     return logits[:, -1:], {"layers": caches, "enc_out": None}
 
 
 def _dec_decode(params, tok, state, cfg: ModelCfg, pol, key=None):
     caches = state["layers"]
-    # positions = current fill index of the first attn cache (all equal)
+    # positions = current fill index of the first attn cache (all equal
+    # across layers; a per-row (B,) vector for ragged serving slots)
     pos = None
     if isinstance(caches, dict):          # stacked caches (scan_layers)
         if "idx" in caches:
-            pos = caches["idx"][0][None]
+            pos = caches["idx"][0]
     else:
         for c in caches:
             if c is not None and "idx" in c:
-                pos = c["idx"][None]
+                pos = c["idx"]
                 break
     if pos is None:  # pure-SSM model: position is irrelevant (no RoPE)
         pos = jnp.zeros((1,), jnp.int32)
+    elif pos.ndim:   # per-slot ragged caches: one query position per row
+        pos = pos[:, None]
+    else:
+        pos = pos[None]
     logits, new_caches, _ = transformer.forward(
         params, {"tokens": tok}, cfg, pol, caches=caches,
         positions=pos, key=key)

@@ -244,16 +244,18 @@ def forward(params: dict, batch: dict, cfg: ModelCfg, pol,
 
 
 def init_caches(b: int, s_cache: int, cfg: ModelCfg,
-                dtype=jnp.bfloat16, pol=None):
+                dtype=jnp.bfloat16, pol=None, per_row_idx: bool = False):
     """`pol` must be the policy the forward pass will run under: a
     heterogeneous NetworkPolicy unrolls layers, so its caches must stay a
     per-layer list even when cfg.scan_layers is set (pol=None keeps the
-    config-only behavior)."""
+    config-only behavior).  `per_row_idx` builds the serving engine's
+    ragged-slot attention caches (one fill index per batch row)."""
     caches = []
     for i in range(cfg.n_layers):
         mix = cfg.mixer_at(i)
         if mix in ("attn", "shared_attn"):
-            caches.append(attention.init_cache(b, s_cache, cfg, dtype))
+            caches.append(attention.init_cache(b, s_cache, cfg, dtype,
+                                               per_row_idx=per_row_idx))
         elif mix == "mamba2":
             caches.append(mamba2.init_state(b, cfg, jnp.float32))
         elif mix == "rwkv6":

@@ -64,17 +64,35 @@ def account(shapes: list[MatmulShape], pol: TDPolicy, domain: str = "td",
     tot_macs = 0.0
     tot_e = 0.0
     for sh in shapes:
-        n_eval = min(sh.k, pol.n_chain)
-        pt = design_space.evaluate(domain, n_eval, pol.bits_w, s_max, m,
-                                   vdd=pol.vdd, lib=pol.techlib, **kw)
-        macs = sh.k * sh.n_out * sh.calls_per_token
+        # A k-long contraction tiles into floor(k / n_chain) full-length
+        # segments plus a k % n_chain tail segment.  The tail runs at its
+        # own (shorter, less efficient — Fig. 9 scaling) array length, so
+        # full and tail MACs are priced SEPARATELY; pricing everything at
+        # e_mac(min(k, n_chain)) overstated efficiency whenever
+        # k % n_chain != 0.
+        n_full, tail = divmod(sh.k, pol.n_chain)
+        segments = []                  # (chain length, MACs per out chain)
+        if n_full:
+            segments.append((pol.n_chain, n_full * pol.n_chain))
+        if tail:
+            segments.append((tail, tail))
+        calls = sh.n_out * sh.calls_per_token
+        macs = sh.k * calls
         # bit-serial activations: one pass per activation bit-plane
         passes = pol.bits_a if domain == "td" else 1
-        energy = macs * pt.e_mac * passes
-        per_layer[sh.name] = {"e_mac": pt.e_mac, "macs": macs,
-                              "energy_j": energy, "r": pt.redundancy,
-                              "throughput": pt.throughput,
-                              "area_per_mac": pt.area_per_mac}
+        energy = 0.0
+        pts = []
+        for n_eval, k_seg in segments:
+            pt = design_space.evaluate(domain, n_eval, pol.bits_w, s_max, m,
+                                       vdd=pol.vdd, lib=pol.techlib, **kw)
+            pts.append(pt)
+            energy += k_seg * calls * pt.e_mac * passes
+        pt0 = pts[0]   # longest segment = the dominant operating point
+        per_layer[sh.name] = {"e_mac": energy / (macs * passes),
+                              "macs": macs,
+                              "energy_j": energy, "r": pt0.redundancy,
+                              "throughput": pt0.throughput,
+                              "area_per_mac": pt0.area_per_mac}
         tot_macs += macs
         tot_e += energy
     return EnergyReport(domain, per_layer, tot_macs, tot_e)
@@ -84,3 +102,72 @@ def compare_domains(shapes: list[MatmulShape], pol: TDPolicy,
                     sigma_max: float | None = None) -> dict[str, EnergyReport]:
     return {d: account(shapes, pol, d, sigma_max)
             for d in design_space.DOMAINS}
+
+
+# ---------------------------------------------------------------------------
+# per-request accumulation (serving engine telemetry)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RequestUsage:
+    """Token tally for one in-flight request."""
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+
+class RequestMeter:
+    """Per-request TD energy accumulation for the serving engine.
+
+    `account()` prices one processed token for the model/policy; the meter
+    multiplies that rate by each request's own token tally (prompt tokens
+    processed at prefill + generated tokens), so the serve loop gets
+    J/token PER REQUEST rather than per run.  By construction the sum of
+    per-request energies equals `run_total_energy()` (= rate * total
+    tokens), which the serving tests pin.
+    """
+
+    def __init__(self, shapes: list[MatmulShape], pol: TDPolicy,
+                 domain: str = "td", sigma_max: float | None = None):
+        self.domain = domain
+        self.per_token_report = account(shapes, pol, domain, sigma_max)
+        self.e_token = self.per_token_report.total_energy_per_token
+        self.macs_token = self.per_token_report.total_macs_per_token
+        self._usage: dict = {}
+
+    def _u(self, rid) -> RequestUsage:
+        return self._usage.setdefault(rid, RequestUsage())
+
+    def on_prefill(self, rid, n_tokens: int) -> None:
+        self._u(rid).prefill_tokens += int(n_tokens)
+
+    def on_decode(self, rid, n_tokens: int = 1) -> None:
+        self._u(rid).decode_tokens += int(n_tokens)
+
+    def request_energy(self, rid) -> float:
+        """Joules attributed to a request so far (prefill + decode)."""
+        return self._u(rid).total_tokens * self.e_token
+
+    def request_report(self, rid) -> dict:
+        u = self._u(rid)
+        e = u.total_tokens * self.e_token
+        return {"request": rid, "domain": self.domain,
+                "prefill_tokens": u.prefill_tokens,
+                "decode_tokens": u.decode_tokens,
+                "energy_j": e,
+                "j_per_token": (e / u.total_tokens if u.total_tokens
+                                else 0.0),
+                "j_per_decoded_token": (e / u.decode_tokens
+                                        if u.decode_tokens else 0.0)}
+
+    def rows(self) -> list[dict]:
+        """CSV-ready per-request reports, admission order preserved."""
+        return [self.request_report(rid) for rid in self._usage]
+
+    def run_total_tokens(self) -> int:
+        return sum(u.total_tokens for u in self._usage.values())
+
+    def run_total_energy(self) -> float:
+        return self.run_total_tokens() * self.e_token

@@ -110,6 +110,73 @@ class TestFaultTolerance:
         assert rep.is_straggler
         assert wd.straggler_count == 1
 
+    @staticmethod
+    def _feed(wd, duration, step=0):
+        """Drive one watchdog step with a synthetic duration (rewinds the
+        start timestamp instead of sleeping)."""
+        import time
+        wd.start(step)
+        wd._t0 = time.monotonic() - duration
+        return wd.stop()
+
+    def test_watchdog_true_median_even_window(self):
+        """Even history windows use the TRUE median (average of the two
+        middle samples); hist[len//2] alone is the upper middle, which
+        inflated the straggler threshold."""
+        wd = ft.StepWatchdog(straggler_factor=3.0, warmup_steps=0)
+        for d in (1.0, 2.0, 3.0, 4.0):
+            self._feed(wd, d)
+        rep = self._feed(wd, 7.6)
+        assert rep.p50 == pytest.approx(2.5, rel=1e-3)
+        # 7.6 > 3 * 2.5: flagged; the biased median (3.0 -> threshold 9.0)
+        # would have let this straggler through
+        assert rep.is_straggler
+
+    def test_watchdog_warmup_counts_steps_observed(self):
+        """Warmup is based on steps SEEN by this watchdog, not on the
+        caller's step numbering — a watchdog attached to a resumed run
+        (step numbers starting high) must still warm up."""
+        wd = ft.StepWatchdog(straggler_factor=2.0, warmup_steps=2)
+        self._feed(wd, 0.01, step=1000)
+        rep = self._feed(wd, 10.0, step=1001)   # still inside warmup
+        assert not rep.is_straggler
+        assert wd.steps_observed == 2
+        self._feed(wd, 0.01, step=1002)
+        rep = self._feed(wd, 30.0, step=1003)   # warm now: flagged
+        assert rep.is_straggler
+        assert wd.straggler_count == 1
+
+    def test_retry_policy_default_not_shared(self):
+        """`policy=None` + construct-inside: a dataclass default instance
+        would be ONE mutable object shared across every call site."""
+        import inspect
+        sig = inspect.signature(ft.run_with_retries)
+        assert sig.parameters["policy"].default is None
+        calls = []
+
+        def body():
+            calls.append(1)
+            if len(calls) < 2:
+                raise ft.Preemption("x")
+            return "ok"
+
+        assert ft.run_with_retries(body) == "ok"   # default policy works
+
+    def test_backoff_is_exponential(self, monkeypatch):
+        sleeps = []
+        monkeypatch.setattr(ft.time, "sleep", sleeps.append)
+        calls = []
+
+        def body():
+            calls.append(1)
+            if len(calls) < 4:
+                raise ft.Preemption("x")
+            return "ok"
+
+        pol = ft.RetryPolicy(backoff_s=0.5)
+        assert ft.run_with_retries(body, pol) == "ok"
+        assert sleeps == [0.5, 1.0, 2.0]   # base * 2^(restart-1)
+
     def test_retry_resumes(self):
         calls = []
 
@@ -175,3 +242,41 @@ class TestEnergyMeter:
         # (chain length 576, Fig. 11) — check the J/token orderings exist
         assert reports["td"].total_energy_per_token != \
             reports["digital"].total_energy_per_token
+
+    def test_tail_segment_priced_separately(self):
+        """k % n_chain != 0: the tail tile runs at its own (shorter) array
+        length.  Pinned against a two-call reference: account(k) must equal
+        account(full part) + account(tail part) exactly, and must differ
+        from pricing every MAC at the full-chain e_mac."""
+        pol = solve_td_policy(4, 4, 576, sigma_max=2.0)
+        MS = energy_meter.MatmulShape
+        whole = energy_meter.account([MS("x", 1000, 64)], pol)
+        full = energy_meter.account([MS("f", 576, 64)], pol)
+        tail = energy_meter.account([MS("t", 424, 64)], pol)
+        assert whole.total_energy_per_token == pytest.approx(
+            full.total_energy_per_token + tail.total_energy_per_token,
+            rel=1e-12)
+        naive = full.total_energy_per_token * (1000 / 576)
+        assert abs(whole.total_energy_per_token - naive) > \
+            1e-6 * naive   # Fig. 9 array-length scaling is not flat
+        # exact multiples of n_chain are untouched (golden-fixture path)
+        twice = energy_meter.account([MS("y", 1152, 64)], pol)
+        assert twice.total_energy_per_token == pytest.approx(
+            2 * full.total_energy_per_token, rel=1e-12)
+
+    def test_request_meter_sums_to_run_total(self):
+        pol = solve_td_policy(4, 4, 576, sigma_max=2.0)
+        shapes = [energy_meter.MatmulShape("x", 100, 16)]
+        m = energy_meter.RequestMeter(shapes, pol)
+        m.on_prefill("a", 7)
+        m.on_decode("a")
+        m.on_prefill("b", 3)
+        for _ in range(4):
+            m.on_decode("b")
+        rows = m.rows()
+        assert [r["request"] for r in rows] == ["a", "b"]
+        assert rows[0]["prefill_tokens"] == 7
+        assert rows[1]["decode_tokens"] == 4
+        assert sum(r["energy_j"] for r in rows) == \
+            pytest.approx(m.run_total_energy(), rel=1e-12)
+        assert m.run_total_tokens() == 15
