@@ -1,0 +1,208 @@
+"""Explorer-service benchmark (acceptance gate of the persistent-explorer
+refactor).
+
+Gates:
+  * **warm vs cold** -- a repeat sweep query against the long-lived
+    `ExplorerService` must be >= 100x faster than the cold sweep that
+    populated it (same process; the warm path is a cache-key lookup, the
+    cold path retraces + compiles + sweeps);
+  * **refinement parity** -- `ExplorerService.refine` on a CI-sized case
+    must return argmin results (redundancy R, TDC q, winner map, vdd_opt,
+    e_mac) BIT-IDENTICAL to a dense oracle sweep over the same virtual
+    axis;
+  * **refinement cost** -- the resolution case must reach >= 1e7-point
+    effective resolution at <= 2e5 evaluated grid points (the whole point
+    of the coarse -> near-optimal-interval recursion);
+  * **corner fan-out** -- concurrent `sweep_scenarios` must be
+    bit-identical to the serial loop; its wall-clock is recorded, and
+    asserted faster only on multi-device hosts (on one device the sweeps
+    share the chip, so there is nothing to win).
+
+Artifacts under ``artifacts/explorer/``: a JSON summary of every gate and
+the refined per-point optimum table as CSV.
+
+``REPRO_EXPLORER_SMOKE=1`` shrinks the cases for the CI fast job: the
+warm-hit and parity gates still assert; the 100x and 1e7-resolution gates
+only assert on the full run.
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import design_grid, explorer
+from repro.core import scenario as sc
+
+OUT_DIR = os.path.join("artifacts", "explorer")
+
+# parity case: broad enough to cover all domains/bit-widths/budgets, small
+# enough that the dense oracle is one cheap sweep
+PARITY_SCENARIO = sc.Scenario("explorer-parity",
+                              ns=(64, 256, 1024), bit_widths=(2, 4),
+                              sigma_maxes=(0.5, 2.0), vdds=(0.40, 0.80))
+# resolution case: narrow point set so the virtual axis carries the size
+RES_SCENARIO = sc.Scenario("explorer-res", ns=(576,), bit_widths=(2, 4),
+                           sigma_maxes=(0.5, 2.0), vdds=(0.40, 0.80))
+WARM_SCENARIO = "edge"
+FANOUT_SCENARIO = "edge"
+
+PARITY_FIELDS = ("redundancy", "tdc_q", "vdd_opt", "e_mac")
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_EXPLORER_SMOKE", "") not in ("", "0")
+
+
+def _oracle(svc: explorer.ExplorerService, scenario: sc.Scenario,
+            dense_values: np.ndarray) -> design_grid.DesignGrid:
+    """The dense-sweep reference: every virtual axis value in one sweep."""
+    axes = svc._corner_axes(sc.get_scenario(scenario), sc.get_corner(None))
+    grid = svc.sweep_axes(**{**axes,
+                             "vdds": tuple(float(v) for v in dense_values)})
+    return design_grid.minimize_over_vdd(grid)
+
+
+def _parity(refined: design_grid.DesignGrid,
+            oracle: design_grid.DesignGrid) -> dict:
+    out = {f: bool(np.array_equal(getattr(refined, f), getattr(oracle, f)))
+           for f in PARITY_FIELDS}
+    out["winner"] = bool(np.array_equal(refined.winners(), oracle.winners()))
+    return out
+
+
+def _write_vdd_opt_csv(res: explorer.RefineResult, path: str) -> str:
+    g = res.grid
+    with open(path, "w", newline="") as f:
+        f.write("domain,bits,n,sigma_max,vdd_opt,e_mac\n")
+        for ix in np.ndindex(*g.shape):
+            f.write(f"{g.domains[ix[0]]},{int(g.bit_widths[ix[1]])},"
+                    f"{int(g.ns[ix[2]])},{float(g.sigma_maxes[ix[3]])},"
+                    f"{g.point_vdd(ix):.6f},{float(g.e_mac[ix]):.6e}\n")
+    return path
+
+
+def run() -> list[str]:
+    rows = []
+    smoke = _smoke()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    summary: dict = {"smoke": smoke}
+    svc = explorer.ExplorerService()
+
+    # --- gate 1: warm-cache repeat query vs cold full sweep ---------------
+    warm_spec = sc.get_scenario(WARM_SCENARIO)
+    if smoke:
+        warm_spec = warm_spec.replace(name="edge-smoke", ns=(64, 576),
+                                      bit_widths=(4,), sigma_maxes=(2.0,),
+                                      vdds=(0.6, 0.8), p_x_ones=(0.5,),
+                                      w_bit_sparsities=(0.7,))
+    t0 = time.perf_counter()
+    g_cold, info_cold = svc.sweep_info(warm_spec, "tt")
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g_warm, info_warm = svc.sweep_info(warm_spec, "tt")
+    t_warm = time.perf_counter() - t0
+    speedup = t_cold / max(t_warm, 1e-9)
+    warm_hit = info_warm["source"] == "memory" and g_warm is g_cold
+    speedup_ok = smoke or speedup >= 100.0
+    rows.append(f"explorer,scenario={warm_spec.name},"
+                f"cold_ms={t_cold*1e3:.1f},warm_ms={t_warm*1e3:.3f},"
+                f"speedup={speedup:.0f}x,"
+                f"derived=warm_hit={warm_hit},"
+                f"derived=warm_speedup_ok={bool(speedup_ok)}")
+    assert warm_hit, "repeat query missed the in-memory grid cache"
+    assert speedup_ok, (f"warm repeat query only {speedup:.0f}x faster "
+                        "than the cold sweep (gate: >= 100x)")
+    summary["warm_vs_cold"] = {"cold_s": t_cold, "warm_s": t_warm,
+                               "speedup": speedup}
+
+    # --- gate 2: refinement parity vs dense oracle ------------------------
+    G_parity = 256 if smoke else 512
+    res_p = svc.refine(PARITY_SCENARIO, target=G_parity, coarse=9,
+                       tau=0.25, max_axis_values=G_parity)
+    parity = _parity(res_p.grid, _oracle(svc, PARITY_SCENARIO,
+                                         res_p.dense_values))
+    parity_ok = all(parity.values())
+    rows.append(f"explorer,refine_parity,target={G_parity},"
+                f"levels={res_p.levels},"
+                f"evaluated_axis_values={len(res_p.evaluated_values)},"
+                + ",".join(f"{k}_identical={v}" for k, v in parity.items())
+                + f",derived=refinement_parity={parity_ok}")
+    assert parity_ok, f"refined argmin diverged from dense oracle: {parity}"
+    summary["refine_parity"] = {"target": G_parity, **parity}
+
+    # --- gate 3: refinement resolution/cost -------------------------------
+    G_res = 4096 if smoke else 1_000_000
+    t0 = time.perf_counter()
+    res_r = svc.refine(RES_SCENARIO, target=G_res, coarse=9, tau=0.25,
+                       max_axis_values=16_000, max_levels=24)
+    t_refine = time.perf_counter() - t0
+    budget_ok = res_r.points_evaluated <= 200_000
+    resolution_ok = smoke or res_r.effective_points >= 10_000_000
+    rows.append(f"explorer,refine_resolution,target={G_res},"
+                f"levels={res_r.levels},"
+                f"points_evaluated={res_r.points_evaluated},"
+                f"effective_points={res_r.effective_points},"
+                f"refine_s={t_refine:.1f},"
+                f"derived=refinement_budget_ok={bool(budget_ok)},"
+                f"derived=refinement_resolution_ok={bool(resolution_ok)}")
+    assert budget_ok, (f"refinement evaluated {res_r.points_evaluated} "
+                       "points (gate: <= 2e5)")
+    assert resolution_ok, (f"refinement reached {res_r.effective_points} "
+                           "effective points (gate: >= 1e7)")
+    summary["refine_resolution"] = {
+        "target": G_res, "levels": res_r.levels,
+        "points_evaluated": res_r.points_evaluated,
+        "effective_points": res_r.effective_points, "seconds": t_refine}
+    rows.append("explorer,artifact="
+                + _write_vdd_opt_csv(res_r, os.path.join(OUT_DIR,
+                                                         "vdd_opt.csv")))
+
+    # --- gate 4: corner fan-out vs serial loop ----------------------------
+    import jax
+    n_dev = len(jax.local_devices())
+    fan_spec = sc.get_scenario(FANOUT_SCENARIO)
+    if smoke:
+        fan_spec = fan_spec.replace(name="edge-smoke-fan", ns=(64, 576),
+                                    bit_widths=(4,), sigma_maxes=(2.0,),
+                                    vdds=(0.6, 0.8), p_x_ones=(0.5,),
+                                    w_bit_sparsities=(0.7,))
+    # populate the jit cache on BOTH paths (jax.default_device commits the
+    # parallel path's executables per device) so the timings measure
+    # steady-state dispatch + execute, not compilation
+    svc.sweep_scenarios(fan_spec, parallel=False)
+    svc.sweep_scenarios(fan_spec, parallel=True, use_cache=False)
+    t0 = time.perf_counter()
+    serial = svc.sweep_scenarios(fan_spec, parallel=False, use_cache=False)
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fan = svc.sweep_scenarios(fan_spec, parallel=True, use_cache=False)
+    t_fan = time.perf_counter() - t0
+    identical = all(np.array_equal(serial[c].e_mac, fan[c].e_mac)
+                    for c in serial)
+    fan_speedup = t_serial / max(t_fan, 1e-9)
+    fan_ok = identical and (n_dev <= 1 or t_fan < t_serial)
+    rows.append(f"explorer,fanout,corners={len(serial)},devices={n_dev},"
+                f"serial_ms={t_serial*1e3:.1f},parallel_ms={t_fan*1e3:.1f},"
+                f"fanout_speedup={fan_speedup:.2f}x,"
+                f"derived=fanout_identical={identical},"
+                f"derived=fanout_ok={bool(fan_ok)}")
+    assert identical, "parallel fan-out diverged from the serial sweep"
+    assert fan_ok, (f"fan-out slower than serial on {n_dev} devices: "
+                    f"{t_fan:.2f}s vs {t_serial:.2f}s")
+    summary["fanout"] = {"devices": n_dev, "serial_s": t_serial,
+                         "parallel_s": t_fan, "identical": identical}
+
+    # --- bookkeeping ------------------------------------------------------
+    st = svc.stats.snapshot()
+    rows.append(f"explorer,stats,queries={st['queries']},"
+                f"memory_hits={st['memory_hits']},misses={st['misses']},"
+                f"points_evaluated={st['points_evaluated']},"
+                f"points_served={st['points_served']},"
+                f"refine_levels={st['refine_levels']}")
+    summary["stats"] = st
+    path = os.path.join(OUT_DIR, "summary.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1)
+    rows.append(f"explorer,artifact={path}")
+    return rows

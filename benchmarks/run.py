@@ -11,9 +11,10 @@ import traceback
 from benchmarks import (bench_arch_energy, bench_attention,
                         bench_design_grid, bench_energy_exact,
                         bench_energy_relaxed, bench_eta_esnr,
-                        bench_noise_tolerance, bench_output_range,
-                        bench_roofline, bench_scenarios, bench_serving,
-                        bench_td_vmm, bench_tdc, bench_tdmac_cell,
+                        bench_explorer, bench_noise_tolerance,
+                        bench_output_range, bench_roofline,
+                        bench_scenarios, bench_serving, bench_td_vmm,
+                        bench_tdc, bench_tdmac_cell,
                         bench_throughput_area)
 
 SUITES = {
@@ -27,6 +28,7 @@ SUITES = {
     "fig12": bench_throughput_area,
     "grid": bench_design_grid,
     "scenarios": bench_scenarios,
+    "explorer": bench_explorer,
     "td_vmm": bench_td_vmm,
     "attention": bench_attention,
     "serving": bench_serving,

@@ -22,6 +22,17 @@ retired `td_vdd_optimized` loop as a grid reduction); `--minimize-m` /
         --grid n=64,576 bits=4 sigma=2.0 --sweep-m 2,8,32 \
         --sweep-tdc-arch --corner ss --techlib 22fdx
 
+Every in-process sweep routes through the long-lived explorer service
+(`repro.core.explorer`), so repeated invocations with `--cache-dir` (or
+`REPRO_EXPLORER_CACHE_DIR`) hit the on-disk grid store instead of
+re-sweeping.  To stop paying even process startup, run a server once and
+query it:
+
+    repro-explore --cache-dir ~/.cache/repro-grids     # or: --serve here
+    PYTHONPATH=src python examples/hw_design_explorer.py \
+        --query sweep --scenario edge --corner ss
+    PYTHONPATH=src python examples/hw_design_explorer.py --query stats
+
 Grid axis syntax: `key=v1,v2,...` (explicit list) or `key=lo..hi[:count]`
 (range; geometric with integer rounding for n, linear otherwise).  Axes:
 n, bits, sigma, vdd, px (activation activity p_x_one), wsp (weight bit
@@ -36,8 +47,10 @@ import numpy as np
 
 from repro.core import constants as C
 from repro.core import design_space as ds
+from repro.core import explorer as explorer_mod
 from repro.core import scenario as sc
 from repro.core import techlib as tl
+from repro.launch import explore as explore_mod
 
 DEFAULT_NS = (16, 32, 64, 128, 256, 576, 1024, 2048, 4096)
 DEFAULT_BITS = (1, 2, 4, 8)
@@ -183,12 +196,57 @@ def main():
                     help="output path for csv/json (default: stdout)")
     ap.add_argument("--crossovers", action="store_true",
                     help="also print domain-crossover boundaries")
+    ap.add_argument("--serve", action="store_true",
+                    help="run a long-lived explorer service on --host/--port "
+                         "and answer --query requests instead of sweeping "
+                         "in-process")
+    ap.add_argument("--query", default=None,
+                    metavar="OP",
+                    choices=["ping", "stats", "sweep", "refine", "shutdown"],
+                    help="send one request to a running explorer service "
+                         "(sweep/refine assemble the payload from "
+                         "--scenario/--corner/--minimize-* flags) and print "
+                         "the JSON reply")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="explorer service host for --serve/--query")
+    ap.add_argument("--port", type=int, default=explore_mod.DEFAULT_PORT,
+                    help="explorer service port for --serve/--query")
+    ap.add_argument("--cache-dir", default=None,
+                    help="on-disk sweep store (keyed on techlib content "
+                         "hash + axes + code salt; default "
+                         "REPRO_EXPLORER_CACHE_DIR)")
     args = ap.parse_args()
 
     minimize = tuple(ax for ax, on in (("vdd", args.minimize_vdd),
                                        ("m", args.minimize_m),
                                        ("tdc_arch", args.minimize_tdc_arch))
                      if on)
+    if args.serve:
+        serve_argv = ["--host", args.host, "--port", str(args.port)]
+        if args.cache_dir:
+            serve_argv += ["--cache-dir", args.cache_dir]
+        explore_mod.main(serve_argv)
+        return
+    if args.query:
+        payload = {"op": args.query}
+        if args.query in ("sweep", "refine"):
+            payload["scenario"] = args.scenario or "paper-relaxed"
+            if args.corner:
+                payload["corner"] = args.corner
+            if args.query == "sweep":
+                payload["minimize_over"] = list(minimize)
+                if args.crossovers:
+                    payload["result"] = "crossovers"
+        resp = explore_mod.request(payload, args.host, args.port)
+        json.dump(resp, sys.stdout, indent=1)
+        sys.stdout.write("\n")
+        if not resp.get("ok"):
+            raise SystemExit(1)
+        return
+    if args.cache_dir:
+        explorer_mod.set_service(
+            explorer_mod.ExplorerService(cache_dir=args.cache_dir))
+    svc = explorer_mod.service()
     sweep_m = _parse_axis("m", args.sweep_m) if args.sweep_m else None
     sweep_tdc = ("hybrid", "sar") if args.sweep_tdc_arch else None
     if args.scenario:
@@ -202,7 +260,7 @@ def main():
             over["techlib"] = args.techlib
         if over:
             spec = spec.replace(**over)
-        g = sc.sweep_scenario(spec, args.corner, minimize_over=minimize)
+        g = svc.sweep(spec, args.corner, minimize_over=minimize)
     else:
         axes = parse_grid(args.grid)
         sigma = axes["sigma"]
@@ -215,7 +273,7 @@ def main():
                            ms=sweep_m or axes["m"],
                            tdc_archs=sweep_tdc or axes["tdc"],
                            techlib=args.techlib or "22fdx")
-        g = sc.sweep_scenario(spec, corner, minimize_over=minimize)
+        g = svc.sweep(spec, corner, minimize_over=minimize)
 
     if args.format == "table":
         print_winner_map(g, args.metric)

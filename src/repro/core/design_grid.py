@@ -505,6 +505,56 @@ def sweep_batched(domains: Sequence[str] = DOMAINS,
 
 
 # ---------------------------------------------------------------------------
+# Grid merging: refinement sweeps concatenate along one traced point axis
+# ---------------------------------------------------------------------------
+# traced point axes a refinement can densify, and the DesignGrid attribute
+# holding that axis's values
+_POINT_AXES = {"n": "ns", "sigma": "sigma_maxes", "vdd": "vdds",
+               "p_x_one": "p_x_ones", "w_bit_sparsity": "w_bit_sparsities"}
+
+
+def concat_along_axis(grids: Sequence["DesignGrid"],
+                      axis_name: str) -> "DesignGrid":
+    """Merge same-shaped grids that differ only in their `axis_name` values
+    into ONE grid whose axis is the sorted union (duplicates dropped, first
+    occurrence kept).
+
+    This is how the incremental-refinement recursion (`core.explorer`)
+    folds each level's dense re-sweep back into the working grid: the
+    merged axis is generally NON-uniform (coarse points plus dense argmin
+    neighborhoods).  Only raw sweeps merge -- grids that already carry a
+    `minimize_over_*` reduction must be reduced AFTER merging (the argmin
+    over a partial axis is not the argmin over the union)."""
+    if axis_name not in _POINT_AXES:
+        raise ValueError(f"cannot concat along {axis_name!r} "
+                         f"(point axes: {sorted(_POINT_AXES)})")
+    grids = list(grids)
+    if not grids:
+        raise ValueError("need at least one grid")
+    attr = _POINT_AXES[axis_name]
+    axis = _AXES.index(axis_name)
+    first = grids[0]
+    for g in grids:
+        for opt in _OPT_FIELDS:
+            if getattr(g, opt) is not None:
+                raise ValueError(
+                    f"cannot concat a grid reduced over {opt[:-4]!r}: merge "
+                    "raw sweeps first, reduce the merged grid")
+        if (g.domains != first.domains or g.tdc_archs != first.tdc_archs
+                or not all(np.array_equal(getattr(g, a), getattr(first, a))
+                           for a in _POINT_AXES.values() if a != attr)
+                or not np.array_equal(g.bit_widths, first.bit_widths)
+                or not np.array_equal(g.ms, first.ms)):
+            raise ValueError("grids differ on a non-concatenated axis")
+    vals = np.concatenate([getattr(g, attr) for g in grids])
+    _, keep = np.unique(vals, return_index=True)   # sorted unique positions
+    fields = {f: np.take(np.concatenate([getattr(g, f) for g in grids],
+                                        axis=axis), keep, axis=axis)
+              for f in _FIELDS}
+    return dataclasses.replace(first, **{attr: vals[keep]}, **fields)
+
+
+# ---------------------------------------------------------------------------
 # Grid reductions: Vdd / m / tdc_arch as minimized-over axes
 # ---------------------------------------------------------------------------
 _VDD_AXIS = _AXES.index("vdd")

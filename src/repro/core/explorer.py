@@ -1,0 +1,656 @@
+"""Persistent design-space explorer service: compiled-sweep cache, corner
+fan-out, and incremental grid refinement.
+
+The paper's deliverable is an efficiency-metric-driven *search* over the
+(domain x N x B x sigma x Vdd x activity x sparsity x m x tdc_arch) space,
+and the batched engine already evaluates >= 4e5 points per corner in one
+jitted call -- but every CLI query used to be a fresh process that
+retraced, recompiled and re-swept the full grid.  This module makes repeat
+queries O(dispatch):
+
+``ExplorerService``
+    A long-lived service wrapping the scenario engine with three layers:
+
+    * **compiled-sweep cache** -- a long-lived process reuses jax's
+      compiled programs for free; on top of that the service caches sweep
+      *results* in memory (LRU) and on disk (`DesignGrid.save_npz` under
+      ``cache_dir``), keyed on (TechLib content hash, corner-applied axis
+      values, static grid shape, minimize_over reductions, code-version
+      salt).  A repeated or reduction-sliced query -- winner map, Pareto
+      frontier, `minimize_over_*` argmin, policy resolve -- returns in
+      milliseconds, across processes when a ``cache_dir`` is configured
+      (``REPRO_EXPLORER_CACHE_DIR``).
+
+    * **corner/techlib fan-out** -- the per-corner sweeps of a scenario
+      are independent jitted calls against distinct static libraries, so
+      `sweep_scenarios(parallel=True)` dispatches them concurrently on a
+      thread pool with corners round-robined over the local devices
+      (`jax.default_device` is thread-local); on a multi-device host every
+      corner's sweep executes on its own chip.
+
+    * **incremental grid refinement** (`refine`) -- a coarse sweep over a
+      virtual dense axis (``target`` points, default the Vdd axis)
+      followed by dense re-sweeps of only the per-point argmin
+      neighborhoods, recursing until every neighborhood is resolved to a
+      single dense step (or the ``max_axis_values`` budget is hit).  All
+      levels merge into ONE grid (`design_grid.concat_along_axis`; the
+      merged axis is non-uniform) that is then reduced
+      (`minimize_over_vdd`), giving >= 1e7-point effective resolution at
+      <= 2e5 evaluated points with the argmin pinned bit-identical to a
+      dense-sweep oracle (gated by `benchmarks/bench_explorer.py`).
+
+    Per-query bookkeeping (hits / misses / points / seconds) lives in
+    `ExplorerStats` -- the long-lived-process monitor idiom: one mutable
+    stats value, snapshot on demand, never reset behind the caller's back.
+
+``service()`` / ``set_service()``
+    The process-wide default instance.  `tdsim.policy` routes every policy
+    solve (`solve_td_policies`, `apply_scenario`) through it, so the
+    serve/train policy-resolve path hits the same cache as the explorer
+    CLI and the `launch.explore` TCP server.
+
+The scalar-question entry points (`evaluate_td` / `optimal_td_vdds`) are
+memoized the same way: the first solve of a layer vector pays one jitted
+call, every later resolve of the same network is a dictionary lookup.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import hashlib
+import inspect
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import chain, design_grid
+from repro.core import constants as C
+from repro.core import scenario as scenario_mod
+from repro.core.techlib import TechLib, get_techlib
+
+__all__ = ["ExplorerService", "ExplorerStats", "RefineResult", "service",
+           "set_service", "grid_cache_key"]
+
+_REDUCERS = {
+    "vdd": design_grid.minimize_over_vdd,
+    "m": design_grid.minimize_over_m,
+    "tdc_arch": design_grid.minimize_over_tdc_arch,
+}
+
+# axis name -> sweep_axes keyword holding that axis's values
+_AXIS_KW = {"n": "ns", "sigma": "sigma_maxes", "vdd": "vdds",
+            "p_x_one": "p_x_ones", "w_bit_sparsity": "w_bit_sparsities"}
+
+
+@functools.lru_cache(maxsize=1)
+def _code_salt() -> str:
+    """Digest of the evaluation-engine sources: any change to the physics
+    or the grid engine invalidates every cached sweep (the on-disk store
+    must never serve numbers an older engine produced)."""
+    from repro.core import analog, cells, digital, tdc, techlib
+    h = hashlib.sha256(b"explorer-code-v1:")
+    for mod in (design_grid, cells, chain, tdc, analog, digital, techlib,
+                __import__("repro.core.constants", fromlist=["constants"])):
+        h.update(inspect.getsource(mod).encode("utf-8"))
+    return h.hexdigest()[:16]
+
+
+def _fmt_floats(vals) -> str:
+    return ",".join(float(v).hex() for v in vals)
+
+
+def grid_cache_key(*, domains, bit_widths, ms, tdc_archs, clip_range,
+                   relax_tdc, ns, sigma_maxes, vdds, p_x_ones,
+                   w_bit_sparsities, lib: TechLib,
+                   minimize_over=()) -> str:
+    """Content key of one sweep: deterministic across processes.
+
+    Components: the code-version salt, the library content hash
+    (`TechLib.content_hash` -- NOT builtin `hash()`, which is salted per
+    process), the static grid shape (domains / bit widths / m / tdc_arch /
+    clip_range / relax_tdc), every traced axis's exact float values
+    (`float.hex`), and the reduction list.  Anything that can change a
+    single output number is in the key."""
+    parts = [
+        "grid-v1", _code_salt(), lib.content_hash(),
+        "domains=" + ",".join(domains),
+        "bits=" + ",".join(str(int(b)) for b in bit_widths),
+        "ms=" + ",".join(str(int(m)) for m in ms),
+        "tdc=" + ",".join(tdc_archs),
+        f"clip={bool(clip_range)}", f"relax={bool(relax_tdc)}",
+        "ns=" + ",".join(str(int(n)) for n in ns),
+        "sigma=" + _fmt_floats(sigma_maxes),
+        "vdd=" + _fmt_floats(vdds),
+        "px=" + _fmt_floats(p_x_ones),
+        "wsp=" + _fmt_floats(w_bit_sparsities),
+        "min=" + ",".join(minimize_over),
+    ]
+    return hashlib.sha256("|".join(parts).encode("ascii")).hexdigest()
+
+
+@dataclasses.dataclass
+class ExplorerStats:
+    """Service counters (monitor idiom: mutate in place, snapshot to read).
+
+    ``points_evaluated`` counts grid points actually solved by the engine;
+    ``points_served`` counts points returned to callers -- the gap is what
+    the cache saved."""
+    queries: int = 0
+    memory_hits: int = 0
+    disk_hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    points_evaluated: int = 0
+    points_served: int = 0
+    eval_seconds: float = 0.0
+    td_queries: int = 0
+    td_hits: int = 0
+    vdd_opt_queries: int = 0
+    vdd_opt_hits: int = 0
+    refine_runs: int = 0
+    refine_levels: int = 0
+    fanout_sweeps: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def hit_rate(self) -> float:
+        return ((self.memory_hits + self.disk_hits) / self.queries
+                if self.queries else 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineResult:
+    """Outcome of one incremental-refinement run.
+
+    ``grid`` is the merged grid after the requested reductions (for the
+    default Vdd refinement: `minimize_over_vdd`, so `vdd_opt` holds each
+    point's supply at dense-virtual resolution); ``merged`` is the raw
+    merged grid (non-uniform refined axis = coarse points + argmin
+    neighborhoods).  ``effective_points`` is the virtual dense resolution
+    the argmin is exact against (other-axes product x ``target``);
+    ``points_evaluated`` is what was actually solved."""
+    grid: design_grid.DesignGrid
+    merged: design_grid.DesignGrid
+    refine_axis: str
+    dense_values: np.ndarray
+    evaluated_values: np.ndarray
+    levels: int
+    points_evaluated: int
+    effective_points: int
+
+
+class ExplorerService:
+    """Long-lived design-space explorer (see module docstring)."""
+
+    def __init__(self, cache_dir: str | None = None,
+                 max_memory_entries: int = 64,
+                 max_point_entries: int = 512):
+        self.cache_dir = cache_dir
+        self._grids: collections.OrderedDict[str, design_grid.DesignGrid] \
+            = collections.OrderedDict()
+        self._points: collections.OrderedDict[str, dict] \
+            = collections.OrderedDict()
+        self._max_grids = int(max_memory_entries)
+        self._max_points = int(max_point_entries)
+        self._lock = threading.RLock()
+        self.stats = ExplorerStats()
+        self.started_at = time.time()
+        if cache_dir:
+            os.makedirs(cache_dir, exist_ok=True)
+
+    # -- cache plumbing ----------------------------------------------------
+    @property
+    def cache_entries(self) -> int:
+        with self._lock:
+            return len(self._grids)
+
+    @property
+    def cache_bytes(self) -> int:
+        with self._lock:
+            return sum(sum(getattr(g, f).nbytes for f in design_grid._FIELDS)
+                       for g in self._grids.values())
+
+    def clear(self) -> None:
+        """Drop the in-memory caches (the disk store is left alone)."""
+        with self._lock:
+            self._grids.clear()
+            self._points.clear()
+
+    def _disk_path(self, key: str) -> str | None:
+        return (os.path.join(self.cache_dir, key + ".npz")
+                if self.cache_dir else None)
+
+    def _grid_get(self, key: str) -> tuple[design_grid.DesignGrid | None,
+                                           str]:
+        with self._lock:
+            g = self._grids.get(key)
+            if g is not None:
+                self._grids.move_to_end(key)
+                return g, "memory"
+        path = self._disk_path(key)
+        if path and os.path.exists(path):
+            g = design_grid.DesignGrid.load_npz(path)
+            self._grid_put(key, g, to_disk=False)
+            return g, "disk"
+        return None, "miss"
+
+    def _grid_put(self, key: str, g: design_grid.DesignGrid,
+                  to_disk: bool = True) -> None:
+        with self._lock:
+            self._grids[key] = g
+            self._grids.move_to_end(key)
+            while len(self._grids) > self._max_grids:
+                self._grids.popitem(last=False)
+                self.stats.evictions += 1
+        path = self._disk_path(key)
+        if to_disk and path and not os.path.exists(path):
+            # the tmp name must keep the .npz suffix (np.savez appends it)
+            tmp = (path[:-len(".npz")]
+                   + f".tmp.{os.getpid()}.{threading.get_ident()}.npz")
+            try:
+                g.save_npz(tmp)
+                os.replace(tmp, path)      # atomic: concurrent writers race
+            finally:                       # benignly to identical content
+                if os.path.exists(tmp):
+                    os.remove(tmp)
+
+    # -- sweeps ------------------------------------------------------------
+    @staticmethod
+    def _normalize_axes(*, domains=design_grid.DOMAINS, ns, bit_widths,
+                        sigma_maxes, vdds, p_x_ones, w_bit_sparsities,
+                        ms, tdc_archs, clip_range=True, relax_tdc=True,
+                        lib=None) -> dict:
+        if sigma_maxes is None:
+            sigma_maxes = (float(chain.sigma_max_exact()),)
+        as_floats = lambda v: tuple(float(x) for x in np.atleast_1d(v))  # noqa: E731
+        return dict(
+            domains=tuple(domains),
+            ns=tuple(int(n) for n in np.atleast_1d(ns)),
+            bit_widths=tuple(int(b) for b in np.atleast_1d(bit_widths)),
+            sigma_maxes=as_floats(sigma_maxes), vdds=as_floats(vdds),
+            p_x_ones=as_floats(p_x_ones),
+            w_bit_sparsities=as_floats(w_bit_sparsities),
+            ms=tuple(int(m) for m in np.atleast_1d(ms)),
+            tdc_archs=((tdc_archs,) if isinstance(tdc_archs, str)
+                       else tuple(str(t) for t in tdc_archs)),
+            clip_range=bool(clip_range), relax_tdc=bool(relax_tdc),
+            lib=get_techlib(lib))
+
+    def sweep_axes(self, minimize_over: Sequence[str] = (),
+                   use_cache: bool = True,
+                   **axes) -> design_grid.DesignGrid:
+        return self.sweep_axes_info(minimize_over=minimize_over,
+                                    use_cache=use_cache, **axes)[0]
+
+    def sweep_axes_info(self, minimize_over: Sequence[str] = (),
+                        use_cache: bool = True,
+                        **axes) -> tuple[design_grid.DesignGrid, dict]:
+        """One (possibly reduced) sweep through the cache.  Returns the
+        grid plus an info dict: ``source`` in {memory, disk, computed} and
+        ``elapsed_ms``.  Cached grids are shared -- treat them as
+        read-only."""
+        ax = self._normalize_axes(**axes)
+        minimize_over = tuple(minimize_over)
+        key = grid_cache_key(**ax, minimize_over=minimize_over)
+        t0 = time.perf_counter()
+        with self._lock:
+            self.stats.queries += 1
+        g, source = self._grid_get(key) if use_cache else (None, "bypass")
+        if g is None:
+            g = design_grid.sweep_batched(
+                domains=ax["domains"], ns=ax["ns"],
+                bit_widths=ax["bit_widths"], sigma_maxes=ax["sigma_maxes"],
+                vdds=ax["vdds"], p_x_ones=ax["p_x_ones"],
+                w_bit_sparsities=ax["w_bit_sparsities"], m=ax["ms"],
+                clip_range=ax["clip_range"], tdc_arch=ax["tdc_archs"],
+                relax_tdc=ax["relax_tdc"], lib=ax["lib"])
+            for axis in minimize_over:
+                try:
+                    g = _REDUCERS[axis](g)
+                except KeyError:
+                    raise ValueError(
+                        f"cannot minimize over axis {axis!r} "
+                        f"(reducible axes: {sorted(_REDUCERS)})") from None
+            if use_cache:
+                self._grid_put(key, g)
+            source = "computed"
+            with self._lock:
+                self.stats.misses += 1
+                self.stats.points_evaluated += g.n_points
+        else:
+            with self._lock:
+                if source == "memory":
+                    self.stats.memory_hits += 1
+                else:
+                    self.stats.disk_hits += 1
+        elapsed = time.perf_counter() - t0
+        with self._lock:
+            self.stats.points_served += g.n_points
+            self.stats.eval_seconds += elapsed
+        return g, {"source": source, "elapsed_ms": elapsed * 1e3,
+                   "key": key}
+
+    @staticmethod
+    def _corner_axes(sc_: scenario_mod.Scenario,
+                     co: scenario_mod.Corner) -> dict:
+        """Scenario axes after the corner's supply shift / budget derate,
+        against the corner-resolved library -- exactly what
+        `scenario.sweep_scenario` feeds `sweep_batched`."""
+        return dict(ns=sc_.ns, bit_widths=sc_.bit_widths,
+                    sigma_maxes=co.apply_sigmas(sc_.sigma_maxes),
+                    vdds=co.apply_vdds(sc_.vdds),
+                    p_x_ones=sc_.p_x_ones,
+                    w_bit_sparsities=sc_.w_bit_sparsities,
+                    ms=sc_.ms, tdc_archs=sc_.tdc_archs,
+                    lib=co.apply_lib(sc_.techlib))
+
+    def sweep(self, scenario, corner=None,
+              minimize_over: Sequence[str] = (),
+              use_cache: bool = True) -> design_grid.DesignGrid:
+        return self.sweep_info(scenario, corner, minimize_over,
+                               use_cache)[0]
+
+    def sweep_info(self, scenario, corner=None,
+                   minimize_over: Sequence[str] = (),
+                   use_cache: bool = True
+                   ) -> tuple[design_grid.DesignGrid, dict]:
+        """`scenario.sweep_scenario` through the cache (bit-identical
+        numbers; only the dispatch path differs)."""
+        sc_ = scenario_mod.get_scenario(scenario)
+        co = scenario_mod.get_corner(corner)
+        g, info = self.sweep_axes_info(
+            minimize_over=minimize_over, use_cache=use_cache,
+            **self._corner_axes(sc_, co))
+        info.update(scenario=sc_.name, corner=co.name)
+        return g, info
+
+    # -- corner fan-out ----------------------------------------------------
+    def sweep_scenarios(self, scenario,
+                        corners: Sequence | None = None,
+                        minimize_over: Sequence[str] = (),
+                        parallel: bool | None = None,
+                        use_cache: bool = True
+                        ) -> dict[str, design_grid.DesignGrid]:
+        """All corners of a scenario, dispatched concurrently.
+
+        Each corner's sweep is an independent jitted call against its own
+        static library, so the fan-out is embarrassingly parallel: a
+        thread per corner, corners round-robined over `jax.local_devices()`
+        (`jax.default_device` is a thread-local jax config context, so
+        each thread commits its sweep to its own chip).  On a single
+        device the threads still overlap compile and host work; the
+        wall-clock win over the serial loop is gated by
+        `bench_explorer` on multi-device hosts.  Results are bit-identical
+        to the serial `scenario.sweep_scenarios`."""
+        import jax
+
+        sc_ = scenario_mod.get_scenario(scenario)
+        cos = [scenario_mod.get_corner(c)
+               for c in (corners if corners is not None else sc_.corners)]
+        if parallel is None:
+            parallel = len(cos) > 1
+        if not parallel or len(cos) <= 1:
+            return {co.name: self.sweep(sc_, co, minimize_over, use_cache)
+                    for co in cos}
+        devices = jax.local_devices()
+
+        def one(i: int, co: scenario_mod.Corner) -> design_grid.DesignGrid:
+            with jax.default_device(devices[i % len(devices)]):
+                return self.sweep(sc_, co, minimize_over, use_cache)
+
+        with ThreadPoolExecutor(max_workers=len(cos)) as ex:
+            futs = [(co.name, ex.submit(one, i, co))
+                    for i, co in enumerate(cos)]
+            out = {name: f.result() for name, f in futs}
+        with self._lock:
+            self.stats.fanout_sweeps += len(cos)
+        return out
+
+    # -- incremental refinement --------------------------------------------
+    def refine(self, scenario, corner=None, *, refine_axis: str = "vdd",
+               lo: float | None = None, hi: float | None = None,
+               target: int = 4096, coarse: int = 9, tau: float = 0.05,
+               max_axis_values: int = 128, max_levels: int = 12,
+               metric: str = "e_mac",
+               minimize_over: Sequence[str] | None = None,
+               use_cache: bool = True) -> RefineResult:
+        """Coarse sweep -> dense re-sweeps of the near-optimal intervals.
+
+        The refined axis is replaced by a VIRTUAL dense grid of ``target``
+        values spanning [lo, hi] (default: the corner-applied scenario
+        axis's span).  Level 0 evaluates a ``coarse`` subsample of the
+        virtual grid's index space; every later level flags the evaluated
+        intervals that could still move some grid point's argmin -- those
+        whose endpoint minimum is within ``tau`` (relative) of that
+        point's current best -- and re-sweeps a ``coarse`` subsample of
+        each flagged interval, recursing until every flagged interval is
+        down to adjacent dense indices (axis resolution met) or
+        ``max_axis_values`` distinct axis values have been evaluated (the
+        point budget).  Each level sweeps ONLY the new values (one cached
+        `sweep_axes` call) and merges via
+        `design_grid.concat_along_axis`.
+
+        The metric is NOT unimodal along Vdd: the integer redundancy/TDC
+        transitions put a sawtooth on the smooth CV^2-like envelope, so
+        pure argmin-neighborhood recursion can lose a narrow notch
+        between two evaluated points.  The ``tau`` band is what makes the
+        recursion robust to those ripples: any interval whose floor comes
+        within ``tau`` of the incumbent minimum is re-swept even if its
+        endpoints are not the argmin.  Intervals exactly flat AT the best
+        value are skipped -- an interior equal value can never displace a
+        first-minimum argmin.  Because every level evaluates exact
+        virtual-grid values, the final argmin is bit-identical to a dense
+        ``target``-point oracle sweep whenever the notch depth exceeds
+        the sampled ripple by less than ``tau`` (gated against the oracle
+        in `bench_explorer`).
+
+        For ``refine_axis="vdd"`` (default) the merged grid is reduced by
+        `minimize_over_vdd` so `vdd_opt` lands on the virtual grid; other
+        axes return the merged grid unreduced unless ``minimize_over``
+        says otherwise.
+        """
+        if refine_axis not in _AXIS_KW:
+            raise ValueError(f"cannot refine axis {refine_axis!r} "
+                             f"(refinable: {sorted(_AXIS_KW)})")
+        if refine_axis == "n":
+            raise ValueError("n is integer-valued; refine a continuous axis")
+        sc_ = scenario_mod.get_scenario(scenario)
+        co = scenario_mod.get_corner(corner)
+        axes = self._corner_axes(sc_, co)
+        kw = _AXIS_KW[refine_axis]
+        base = np.asarray(axes[kw] if axes[kw] is not None
+                          else (float(chain.sigma_max_exact()),), np.float64)
+        lo = float(base.min()) if lo is None else float(lo)
+        hi = float(base.max()) if hi is None else float(hi)
+        target = int(target)
+        if target < 2 or hi <= lo:
+            raise ValueError("need target >= 2 and hi > lo to refine")
+        coarse = max(3, int(coarse))
+        dense = np.linspace(lo, hi, target)
+        ax_pos = design_grid._AXES.index(refine_axis)
+
+        def sweep_at(idx: np.ndarray) -> design_grid.DesignGrid:
+            vals = tuple(float(v) for v in dense[np.sort(idx)])
+            return self.sweep_axes(use_cache=use_cache,
+                                   **{**axes, kw: vals})
+
+        eidx = np.unique(np.round(
+            np.linspace(0, target - 1, min(coarse, target))).astype(int))
+        merged = sweep_at(eidx)
+        levels = 1
+        while levels < max_levels:
+            # per-point interval flags (vectorized).  Two ways an interval
+            # can still move a point's argmin: (1) it brackets the current
+            # argmin (the smooth envelope's minimum lies between the
+            # evaluated neighbors), or (2) the integer design outputs
+            # (redundancy, TDC q) TRANSITION inside it -- each transition
+            # puts a sawtooth notch on the otherwise-smooth metric, and a
+            # notch can undercut the incumbent best without either
+            # endpoint showing it.  Transitions are only worth refining
+            # where the curve is already near the valley: the tau band,
+            # scaled to each point's observed range (capped at |best| so a
+            # curve spanning decades does not flag its whole axis).
+            E = len(eidx)
+            arr = np.moveaxis(getattr(merged, metric), ax_pos,
+                              -1).reshape(-1, E)
+            sign = -arr if metric == "throughput" else arr
+            best = sign.min(axis=-1, keepdims=True)
+            spread = np.minimum(sign.max(axis=-1, keepdims=True) - best,
+                                np.abs(best))
+            near = np.minimum(sign[:, :-1], sign[:, 1:]) <= best + tau * spread
+            trans = np.zeros_like(near)
+            for f in ("redundancy", "tdc_q"):
+                F = np.moveaxis(getattr(merged, f), ax_pos, -1).reshape(-1, E)
+                trans |= F[:, :-1] != F[:, 1:]
+            pos = sign.argmin(axis=-1)
+            bracket = np.zeros_like(near)
+            rows = np.arange(near.shape[0])
+            bracket[rows, np.clip(pos - 1, 0, E - 2)] = True
+            bracket[rows, np.clip(pos, 0, E - 2)] = True
+            flagged = np.any(bracket | (trans & near), axis=0)
+            eset = set(int(i) for i in eidx)
+            new: set[int] = set()
+            for i in np.nonzero(flagged)[0]:
+                left, right = int(eidx[i]), int(eidx[i + 1])
+                if right - left <= 1:
+                    continue          # interval already at dense resolution
+                cand = np.unique(np.round(
+                    np.linspace(left, right, coarse)).astype(int))
+                new.update(int(c) for c in cand if int(c) not in eset)
+            if not new:
+                break                 # every near-optimal interval resolved
+            new_idx = np.asarray(sorted(new), int)
+            room = max_axis_values - len(eidx)
+            if room <= 0:
+                break                 # axis-value budget exhausted
+            if len(new_idx) > room:
+                sel = np.unique(np.round(
+                    np.linspace(0, len(new_idx) - 1, room)).astype(int))
+                new_idx = new_idx[sel]
+            merged = design_grid.concat_along_axis(
+                [merged, sweep_at(new_idx)], refine_axis)
+            eidx = np.union1d(eidx, new_idx)
+            levels += 1
+        if minimize_over is None:
+            minimize_over = ("vdd",) if refine_axis == "vdd" else ()
+        reduced = merged
+        for axis in minimize_over:
+            reduced = _REDUCERS[axis](reduced)
+        with self._lock:
+            self.stats.refine_runs += 1
+            self.stats.refine_levels += levels
+        other = merged.n_points // len(eidx)
+        return RefineResult(grid=reduced, merged=merged,
+                            refine_axis=refine_axis, dense_values=dense,
+                            evaluated_values=dense[eidx], levels=levels,
+                            points_evaluated=merged.n_points,
+                            effective_points=other * target)
+
+    # -- memoized point queries (the policy-resolve path) -------------------
+    def evaluate_td(self, n, sigma_max, vdd=C.VDD_NOM, *, bits: int,
+                    m: int = C.M_DEFAULT, clip_range: bool = True,
+                    tdc_arch: str = "hybrid", relax_tdc: bool = True,
+                    p_x_one=C.P_X_ONE, w_bit_sparsity=C.W_BIT_SPARSITY,
+                    lib: TechLib | str | None = None) -> dict:
+        """`design_grid.evaluate_td_batched` behind a content-keyed memo:
+        re-resolving the same network's layer vector is a dict lookup."""
+        args = np.broadcast_arrays(
+            np.asarray(n, np.float64), np.asarray(sigma_max, np.float64),
+            np.asarray(vdd, np.float64), np.asarray(p_x_one, np.float64),
+            np.asarray(w_bit_sparsity, np.float64))
+        lib_r = get_techlib(lib)
+        h = hashlib.sha256(
+            f"td-v1|{_code_salt()}|{lib_r.content_hash()}|{bits}|{m}|"
+            f"{tdc_arch}|{clip_range}|{relax_tdc}|{args[0].shape}"
+            .encode("ascii"))
+        for a in args:
+            h.update(np.ascontiguousarray(a).tobytes())
+        key = h.hexdigest()
+        with self._lock:
+            self.stats.td_queries += 1
+            hit = self._points.get(key)
+            if hit is not None:
+                self._points.move_to_end(key)
+                self.stats.td_hits += 1
+                return {k: v.copy() for k, v in hit.items()}
+        res = design_grid.evaluate_td_batched(
+            args[0], args[1], args[2], bits=int(bits), m=int(m),
+            clip_range=clip_range, tdc_arch=tdc_arch, relax_tdc=relax_tdc,
+            p_x_one=args[3], w_bit_sparsity=args[4], lib=lib_r)
+        self._point_put(key, res)
+        return {k: v.copy() for k, v in res.items()}
+
+    def optimal_td_vdds(self, n, sigma_max, *, bits: int,
+                        vdds: Sequence[float] = scenario_mod.PAPER_VDD_GRID,
+                        m: int = C.M_DEFAULT, tdc_arch: str = "hybrid",
+                        p_x_one: float = C.P_X_ONE,
+                        w_bit_sparsity: float = C.W_BIT_SPARSITY,
+                        lib: TechLib | str | None = None) -> np.ndarray:
+        """`scenario.optimal_td_vdds` behind the same memo (the per-layer
+        supply argmin of `apply_scenario`)."""
+        n_a = np.atleast_1d(np.asarray(n, np.float64))
+        s_a = np.atleast_1d(np.asarray(sigma_max, np.float64))
+        n_a, s_a = np.broadcast_arrays(n_a, s_a)
+        lib_r = get_techlib(lib)
+        h = hashlib.sha256(
+            f"vddopt-v1|{_code_salt()}|{lib_r.content_hash()}|{bits}|{m}|"
+            f"{tdc_arch}|{float(p_x_one).hex()}|{float(w_bit_sparsity).hex()}"
+            f"|{_fmt_floats(vdds)}|{n_a.shape}".encode("ascii"))
+        h.update(np.ascontiguousarray(n_a).tobytes())
+        h.update(np.ascontiguousarray(s_a).tobytes())
+        key = h.hexdigest()
+        with self._lock:
+            self.stats.vdd_opt_queries += 1
+            hit = self._points.get(key)
+            if hit is not None:
+                self._points.move_to_end(key)
+                self.stats.vdd_opt_hits += 1
+                return hit["vdds"].copy()
+        v = scenario_mod.optimal_td_vdds(
+            n_a, s_a, bits=int(bits), vdds=vdds, m=int(m),
+            tdc_arch=tdc_arch, p_x_one=p_x_one,
+            w_bit_sparsity=w_bit_sparsity, lib=lib_r)
+        self._point_put(key, {"vdds": v})
+        return v.copy()
+
+    def _point_put(self, key: str, value: dict) -> None:
+        with self._lock:
+            self._points[key] = value
+            self._points.move_to_end(key)
+            while len(self._points) > self._max_points:
+                self._points.popitem(last=False)
+                self.stats.evictions += 1
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default service
+# ---------------------------------------------------------------------------
+_SERVICE: ExplorerService | None = None
+_SERVICE_LOCK = threading.Lock()
+
+
+def service() -> ExplorerService:
+    """The process-wide default `ExplorerService` (created on first use;
+    disk cache at ``REPRO_EXPLORER_CACHE_DIR`` when set).  Every policy
+    solve in `tdsim.policy` routes through it."""
+    global _SERVICE
+    with _SERVICE_LOCK:
+        if _SERVICE is None:
+            _SERVICE = ExplorerService(
+                cache_dir=os.environ.get("REPRO_EXPLORER_CACHE_DIR") or None)
+        return _SERVICE
+
+
+def set_service(svc: ExplorerService | None) -> ExplorerService | None:
+    """Swap the default service (tests; returns the previous one)."""
+    global _SERVICE
+    with _SERVICE_LOCK:
+        prev, _SERVICE = _SERVICE, svc
+        return prev

@@ -56,12 +56,48 @@ Public surface
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 from repro.core import constants as C
 from repro.core.constants import DelayCellSpec
 
 __all__ = ["DelayCellSpec", "TechLib", "DEFAULT_LIB", "TECHLIBS",
            "get_techlib"]
+
+
+def _feed_value(h, v) -> None:
+    """Canonical byte encoding of a library value for `content_hash`.
+
+    Floats hash by `float.hex()` (exact bits, locale/repr independent),
+    dataclasses by *declared field order* (`dataclasses.fields`), never by
+    `id()`/`repr()`/builtin `hash()` -- builtin str hashing is salted per
+    process (PYTHONHASHSEED), so a frozen dataclass's `hash()` is NOT a
+    valid cross-process cache key.  This encoding is: stable across
+    processes and hash-seed values, injective on the field tree (every
+    value is length-delimited by type tags), and ordered by the dataclass
+    definition, so two structurally equal libraries always map to the same
+    digest."""
+    if isinstance(v, str):
+        b = v.encode("utf-8")
+        h.update(b"s%d:" % len(b) + b)
+    elif isinstance(v, bool):
+        h.update(b"b1" if v else b"b0")
+    elif isinstance(v, float):
+        h.update(b"f" + v.hex().encode("ascii") + b";")
+    elif isinstance(v, int):
+        h.update(b"i%d;" % v)
+    elif isinstance(v, (tuple, list)):
+        h.update(b"t%d:" % len(v))
+        for x in v:
+            _feed_value(h, x)
+    elif dataclasses.is_dataclass(v):
+        fields = dataclasses.fields(v)
+        h.update(b"d%d:" % len(fields))
+        for f in fields:
+            _feed_value(h, f.name)
+            _feed_value(h, getattr(v, f.name))
+    else:
+        raise TypeError(f"unhashable techlib value {type(v).__name__}")
 
 
 def _scale_cell(c: DelayCellSpec, energy_mult: float, delay_mult: float,
@@ -118,6 +154,19 @@ class TechLib:
     a_seq_mac: float         # m^2, sequential/clock area per MAC
     # shared
     leakage_fraction: float  # static energy adder on all dynamic energies
+
+    def content_hash(self) -> str:
+        """Deterministic cross-process digest of every table value.
+
+        This is the cache-key component the persistent explorer service
+        (`core.explorer`) uses to key compiled/on-disk sweeps on the
+        library *content*: stable field ordering (dataclass declaration
+        order), exact float bits (`float.hex`), no `id()`/`repr()`/builtin
+        `hash()` anywhere -- two processes (or two hash-seed values) always
+        agree, and any table change changes the digest."""
+        h = hashlib.sha256(b"techlib-v1:")
+        _feed_value(h, self)
+        return h.hexdigest()
 
     def cell(self, name: str) -> DelayCellSpec:
         for c in self.delay_cells:

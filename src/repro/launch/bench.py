@@ -1,0 +1,32 @@
+"""`repro-bench`: console entry point for the benchmark harness.
+
+The benchmark suites live in `benchmarks/` at the repo root (they are
+working artifacts, not part of the installed package), so this shim makes
+the installed script work from a repo checkout without the
+``PYTHONPATH=src python -m benchmarks.run`` incantation: it imports
+`benchmarks.run`, falling back to the current working directory when the
+package is not already importable, and forwards the CLI.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    try:
+        from benchmarks import run
+    except ImportError:
+        sys.path.insert(0, os.getcwd())
+        try:
+            from benchmarks import run
+        except ImportError:
+            raise SystemExit(
+                "repro-bench: cannot import the `benchmarks` package -- "
+                "run from a repo checkout (the directory containing "
+                "benchmarks/)") from None
+    run.main()
+
+
+if __name__ == "__main__":
+    main()

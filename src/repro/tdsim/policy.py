@@ -8,7 +8,10 @@ resulting per-chain noise sigma that the simulator must inject.
 
 `solve_td_policies` batch-solves every layer of a network in one jitted call
 (grouped by weight bit width, which is a static table shape); the scalar
-`solve_td_policy` is a thin wrapper over it.  `solve_network_policies` is
+`solve_td_policy` is a thin wrapper over it.  Both the batched solve and the
+supply argmin route through the process-wide `core.explorer` service, so
+re-resolving the same network -- every serve/train restart, every scheduler
+admission -- is a memo lookup instead of a repeat jitted call.  `solve_network_policies` is
 the Fig. 10 -> Fig. 11 coupling: it takes the per-layer sigma_array_max
 vector straight out of `core.noise_tolerance.find_sigma_max_batched` into
 `design_grid.evaluate_td_batched` and returns one `NetworkPolicy` with a
@@ -33,7 +36,7 @@ import numpy as np
 
 from repro.core import chain as chain_mod
 from repro.core import constants as C
-from repro.core import design_grid
+from repro.core import explorer as explorer_mod
 from repro.core import scenario as scenario_mod
 from repro.core.techlib import TechLib
 
@@ -112,10 +115,9 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
         vdd = np.array([specs[i].vdd for i in idxs], np.float64)
         p1 = np.array([specs[i].p_x_one for i in idxs], np.float64)
         wsp = np.array([specs[i].w_bit_sparsity for i in idxs], np.float64)
-        res = design_grid.evaluate_td_batched(n, sig, vdd, bits=bits_w,
-                                              m=m, tdc_arch=tdc_arch,
-                                              p_x_one=p1,
-                                              w_bit_sparsity=wsp, lib=lib)
+        res = explorer_mod.service().evaluate_td(
+            n, sig, vdd, bits=bits_w, m=m, tdc_arch=tdc_arch,
+            p_x_one=p1, w_bit_sparsity=wsp, lib=lib)
         for k, i in enumerate(idxs):
             sp = specs[i]
             out[i] = TDPolicy(
@@ -161,7 +163,7 @@ def apply_scenario(specs: Sequence[TDLayerSpec],
         for i, sp in enumerate(specs):
             order.setdefault(sp.bits_w, []).append(i)
         for bits_w, idxs in order.items():
-            v = scenario_mod.optimal_td_vdds(
+            v = explorer_mod.service().optimal_td_vdds(
                 [specs[i].n_chain for i in idxs],
                 [sig_eff[i] for i in idxs],
                 bits=bits_w, vdds=vdd_grid, m=sc.m,

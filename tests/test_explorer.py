@@ -1,0 +1,249 @@
+"""Explorer-service tests: cache keys, memory/disk hits, refinement
+parity, fan-out parity, policy-path memoization and the TCP front end.
+
+The tentpole guarantees of the persistent-explorer refactor:
+
+  * the compiled-sweep cache is KEYED ON CONTENT (techlib content hash,
+    corner-applied axis values, static shape, reductions, code salt) --
+    same question, same grid; any changed ingredient, a different key;
+  * cache hits are bit-identical to the direct engine call, memory or
+    disk;
+  * `concat_along_axis` + refinement reproduce a dense oracle argmin
+    exactly on a small case (the deep gate lives in bench_explorer);
+  * the threaded corner fan-out equals the serial loop bit-identically;
+  * the `tdsim.policy` resolve path routes through the memoized service:
+    re-resolving a network is a lookup, not a repeat jitted call;
+  * the JSON-line server answers ping/stats/sweep/resolve and a repeat
+    sweep over the wire is a cache hit.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import design_grid
+from repro.core import explorer
+from repro.core import scenario as sc
+from repro.launch import explore
+
+# one tiny scenario shared across tests so the jitted sweep compiles once
+TINY = sc.Scenario("tiny", ns=(64, 576), bit_widths=(4,),
+                   sigma_maxes=(2.0,), vdds=(0.6, 0.8))
+
+
+@pytest.fixture()
+def svc():
+    return explorer.ExplorerService()
+
+
+class TestCacheKey:
+    def base(self, **over):
+        kw = dict(domains=design_grid.DOMAINS, bit_widths=(4,), ms=(8,),
+                  tdc_archs=("hybrid",), clip_range=True, relax_tdc=True,
+                  ns=(64, 576), sigma_maxes=(2.0,), vdds=(0.6, 0.8),
+                  p_x_ones=(0.5,), w_bit_sparsities=(0.7,),
+                  lib=sc.CORNERS["tt"].apply_lib(), minimize_over=())
+        kw.update(over)
+        return explorer.grid_cache_key(**kw)
+
+    def test_deterministic_and_sensitive(self):
+        assert self.base() == self.base()
+        assert self.base() != self.base(vdds=(0.6, 0.8, 0.7))
+        assert self.base() != self.base(bit_widths=(2,))
+        assert self.base() != self.base(minimize_over=("vdd",))
+        assert self.base() != self.base(relax_tdc=False)
+        assert self.base() != self.base(
+            lib=sc.CORNERS["ss"].apply_lib())
+
+    def test_float_values_keyed_exactly(self):
+        # float.hex keying: nearby but distinct values are distinct keys
+        assert self.base(vdds=(0.6, 0.8)) != self.base(
+            vdds=(0.6, np.nextafter(0.8, 1.0)))
+
+
+class TestGridCache:
+    def test_memory_hit_returns_same_grid(self, svc):
+        g1, i1 = svc.sweep_info(TINY, "tt")
+        g2, i2 = svc.sweep_info(TINY, "tt")
+        assert i1["source"] == "computed" and i2["source"] == "memory"
+        assert g2 is g1
+        assert svc.stats.memory_hits == 1 and svc.stats.misses == 1
+        ref = sc.sweep_scenario(TINY, "tt")
+        np.testing.assert_array_equal(g1.e_mac, ref.e_mac)
+
+    def test_distinct_corner_distinct_entry(self, svc):
+        g_tt = svc.sweep(TINY, "tt")
+        g_ss = svc.sweep(TINY, "ss")
+        assert svc.stats.misses == 2
+        assert not np.array_equal(g_tt.e_mac, g_ss.e_mac)
+
+    def test_reduction_keys_separately(self, svc):
+        g = svc.sweep(TINY, "tt")
+        red = svc.sweep(TINY, "tt", minimize_over=("vdd",))
+        assert svc.stats.misses == 2 and red.vdd_opt is not None
+        np.testing.assert_array_equal(
+            red.e_mac, design_grid.minimize_over_vdd(g).e_mac)
+
+    def test_disk_round_trip_across_services(self, tmp_path):
+        a = explorer.ExplorerService(cache_dir=str(tmp_path))
+        g1, i1 = a.sweep_info(TINY, "tt")
+        assert i1["source"] == "computed"
+        assert any(p.endswith(".npz") for p in os.listdir(tmp_path))
+        b = explorer.ExplorerService(cache_dir=str(tmp_path))
+        g2, i2 = b.sweep_info(TINY, "tt")
+        assert i2["source"] == "disk" and b.stats.disk_hits == 1
+        for f in design_grid._FIELDS:
+            np.testing.assert_array_equal(getattr(g2, f), getattr(g1, f), f)
+
+    def test_use_cache_false_bypasses(self, svc):
+        svc.sweep(TINY, "tt")
+        _, info = svc.sweep_info(TINY, "tt", use_cache=False)
+        assert info["source"] == "computed"
+
+
+class TestConcat:
+    def test_rejects_reduced_and_mismatched(self):
+        axes = dict(ns=(64,), bit_widths=(4,), sigma_maxes=2.0)
+        a = design_grid.sweep_batched(**axes, vdds=(0.4, 0.8))
+        with pytest.raises(ValueError, match="reduced"):
+            design_grid.concat_along_axis(
+                [design_grid.minimize_over_vdd(a), a], "vdd")
+        b = design_grid.sweep_batched(ns=(576,), bit_widths=(4,),
+                                      sigma_maxes=2.0, vdds=(0.5, 0.6))
+        with pytest.raises(ValueError, match="differ"):
+            design_grid.concat_along_axis([a, b], "vdd")
+        with pytest.raises(ValueError, match="cannot concat"):
+            design_grid.concat_along_axis([a], "m")
+
+    def test_duplicate_values_first_kept(self):
+        axes = dict(ns=(64,), bit_widths=(4,), sigma_maxes=2.0)
+        a = design_grid.sweep_batched(**axes, vdds=(0.4, 0.8))
+        m = design_grid.concat_along_axis(
+            [a, design_grid.sweep_batched(**axes, vdds=(0.4, 0.6))], "vdd")
+        assert tuple(m.vdds) == (0.4, 0.6, 0.8)
+
+
+class TestRefine:
+    def test_parity_vs_dense_oracle(self, svc):
+        res = svc.refine(TINY, "tt", target=128, coarse=9, tau=0.25,
+                         max_axis_values=128)
+        axes = svc._corner_axes(sc.get_scenario(TINY), sc.get_corner("tt"))
+        oracle = design_grid.minimize_over_vdd(svc.sweep_axes(
+            **{**axes, "vdds": tuple(float(v) for v in res.dense_values)}))
+        for f in ("e_mac", "redundancy", "tdc_q", "vdd_opt"):
+            np.testing.assert_array_equal(getattr(res.grid, f),
+                                          getattr(oracle, f), f)
+        assert res.effective_points == (res.merged.n_points
+                                        // len(res.evaluated_values)) * 128
+
+    def test_budget_and_accounting(self, svc):
+        res = svc.refine(TINY, "tt", target=4096, coarse=9,
+                         max_axis_values=40)
+        assert len(res.evaluated_values) <= 40
+        assert res.points_evaluated == res.merged.n_points
+        assert res.effective_points == (res.merged.n_points
+                                        // len(res.evaluated_values)) * 4096
+        assert svc.stats.refine_runs == 1
+        assert svc.stats.refine_levels == res.levels
+
+    def test_rejects_bad_axis(self, svc):
+        with pytest.raises(ValueError):
+            svc.refine(TINY, refine_axis="n")
+        with pytest.raises(ValueError):
+            svc.refine(TINY, refine_axis="m")
+
+
+class TestFanOut:
+    def test_parallel_equals_serial(self, svc):
+        spec = TINY.replace(corners=("tt", "ff", "ss"))
+        serial = svc.sweep_scenarios(spec, parallel=False)
+        fan = svc.sweep_scenarios(spec, parallel=True, use_cache=False)
+        assert list(fan) == ["tt", "ff", "ss"]
+        for c in serial:
+            for f in design_grid._FIELDS:
+                np.testing.assert_array_equal(getattr(fan[c], f),
+                                              getattr(serial[c], f), f)
+        assert svc.stats.fanout_sweeps == 3
+
+
+class TestPolicyPath:
+    def test_evaluate_td_memoized_and_identical(self, svc):
+        n = np.array([64.0, 576.0])
+        s = np.array([2.0, 2.0])
+        r1 = svc.evaluate_td(n, s, 0.8, bits=4)
+        r2 = svc.evaluate_td(n, s, 0.8, bits=4)
+        assert svc.stats.td_queries == 2 and svc.stats.td_hits == 1
+        ref = design_grid.evaluate_td_batched(n, s, 0.8, bits=4)
+        for k in ref:
+            np.testing.assert_array_equal(r1[k], np.asarray(ref[k]), k)
+            np.testing.assert_array_equal(r2[k], r1[k], k)
+        # hits hand back copies: mutating a result must not poison the memo
+        r2["redundancy"][:] = -1
+        np.testing.assert_array_equal(
+            svc.evaluate_td(n, s, 0.8, bits=4)["redundancy"],
+            r1["redundancy"])
+
+    def test_optimal_td_vdds_memoized_and_identical(self, svc):
+        v1 = svc.optimal_td_vdds([64, 2048], [2.0, 2.0], bits=4)
+        v2 = svc.optimal_td_vdds([64, 2048], [2.0, 2.0], bits=4)
+        assert svc.stats.vdd_opt_hits == 1
+        np.testing.assert_array_equal(
+            v1, sc.optimal_td_vdds([64, 2048], [2.0, 2.0], bits=4))
+        np.testing.assert_array_equal(v1, v2)
+
+    def test_solve_policies_route_through_service(self, svc):
+        from repro.tdsim import policy as pol
+        prev = explorer.set_service(svc)
+        try:
+            specs = [pol.TDLayerSpec(4, 4, 576, 2.0),
+                     pol.TDLayerSpec(4, 4, 64, 1.0)]
+            out1 = pol.solve_td_policies(pol.apply_scenario(specs,
+                                                            "vdd-opt"))
+            assert svc.stats.td_queries >= 1
+            assert svc.stats.vdd_opt_queries >= 1
+            out2 = pol.solve_td_policies(pol.apply_scenario(specs,
+                                                            "vdd-opt"))
+            assert svc.stats.td_hits >= 1 and svc.stats.vdd_opt_hits >= 1
+            assert out1 == out2
+        finally:
+            explorer.set_service(prev)
+
+
+class TestServer:
+    def test_wire_protocol(self, svc):
+        server = explore.ExplorerServer(svc, port=0).start_background()
+        host, port = server.address
+        try:
+            assert explore.request({"op": "ping"}, host, port)["ok"]
+            r1 = explore.request({"op": "sweep", "scenario": TINY.name},
+                                 host, port)
+            # named lookup fails for an unregistered scenario: errors come
+            # back over the wire instead of killing the server
+            assert not r1["ok"] and "unknown scenario" in r1["error"]
+            r1 = explore.request(
+                {"op": "sweep", "scenario": "paper-relaxed"}, host, port)
+            r2 = explore.request(
+                {"op": "sweep", "scenario": "paper-relaxed"}, host, port)
+            assert r1["ok"] and r1["source"] == "computed"
+            assert r2["ok"] and r2["source"] == "memory"
+            assert r2["n_points"] == r1["n_points"]
+            st = explore.request({"op": "stats"}, host, port)
+            assert st["stats"]["memory_hits"] >= 1
+            rs = explore.request(
+                {"op": "resolve", "scenario": "vdd-opt",
+                 "layers": [{"bits_w": 4, "n_chain": 576,
+                             "sigma_max": 2.0}]}, host, port)
+            assert rs["ok"] and rs["policies"][0]["redundancy"] >= 1
+        finally:
+            server.shutdown()
+
+    def test_dispatch_unknown_op(self, svc):
+        r = explore.dispatch(svc, {"op": "frobnicate"})
+        assert not r["ok"] and "unknown op" in r["error"]
+
+    def test_json_round_trip_of_payloads(self, svc):
+        r = explore.dispatch(svc, {"op": "sweep", "scenario":
+                                   "paper-relaxed", "result": "crossovers"})
+        json.dumps(r)   # must be pure-JSON serializable
+        assert r["ok"] and isinstance(r["crossovers"], list)

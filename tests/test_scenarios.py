@@ -153,6 +153,47 @@ class TestNpzRoundTrip:
         np.testing.assert_array_equal(rt.vdd_opt, g.vdd_opt)
         assert np.isnan(rt.vdds).all()
 
+    def test_round_trip_refined_nonuniform_stacked_reductions(self,
+                                                              tmp_path):
+        """A refinement-style grid -- non-uniform merged Vdd axis, stacked
+        minimize_over_* reductions -- must survive save_npz/load_npz
+        bit-identically (it is the on-disk cache format of the explorer
+        service)."""
+        axes = dict(ns=(64, 576), bit_widths=(4,), sigma_maxes=SIGMA,
+                    m=(8, 16), tdc_arch=("hybrid", "sar"))
+        # merge two sweeps into one NON-uniform axis (coarse + a dense
+        # argmin neighborhood), exactly like the refinement recursion
+        coarse = ds.sweep_batched(**axes, vdds=(0.40, 0.60, 0.80))
+        fine = ds.sweep_batched(**axes, vdds=(0.55, 0.575, 0.625, 0.65))
+        g = design_grid.concat_along_axis([coarse, fine], "vdd")
+        assert np.all(np.diff(g.vdds) > 0) and len(g.vdds) == 7
+        assert np.ptp(np.diff(g.vdds)) > 0          # non-uniform spacing
+        g = design_grid.minimize_over_tdc_arch(
+            design_grid.minimize_over_m(design_grid.minimize_over_vdd(g)))
+        rt = design_grid.DesignGrid.load_npz(
+            g.save_npz(os.path.join(tmp_path, "refined.npz")))
+        assert rt.domains == g.domains
+        for f in ("ns", "bit_widths", "sigma_maxes", "vdds", "p_x_ones",
+                  "w_bit_sparsities", "ms", "e_mac", "throughput",
+                  "area_per_mac", "redundancy", "tdc_q", "l_osc",
+                  "sigma_chain", "latency", "vdd_opt", "m_opt",
+                  "tdc_arch_opt"):
+            np.testing.assert_array_equal(np.asarray(getattr(rt, f)),
+                                          np.asarray(getattr(g, f)), f)
+
+    def test_concat_matches_union_sweep(self):
+        """Merging per-level sweeps must be bit-identical to sweeping the
+        union axis directly (the refinement correctness prerequisite)."""
+        axes = dict(ns=(64, 576), bit_widths=(4,), sigma_maxes=SIGMA)
+        a = ds.sweep_batched(**axes, vdds=(0.40, 0.80))
+        b = ds.sweep_batched(**axes, vdds=(0.52, 0.65))
+        merged = design_grid.concat_along_axis([a, b], "vdd")
+        union = ds.sweep_batched(**axes, vdds=(0.40, 0.52, 0.65, 0.80))
+        for f in ("e_mac", "throughput", "redundancy", "tdc_q",
+                  "sigma_chain", "latency"):
+            np.testing.assert_array_equal(getattr(merged, f),
+                                          getattr(union, f), f)
+
 
 class TestScenarioPolicies:
     def test_apply_scenario_picks_grid_vdd(self):

@@ -63,6 +63,48 @@ class TestDefaultParity:
         assert rebuilt != tl.DEFAULT_LIB
 
 
+class TestContentHash:
+    """`TechLib.content_hash` backs the explorer's ON-DISK cache keys, so
+    it must be deterministic across processes -- unlike builtin `hash()`,
+    whose str-field hashing is salted per process (PYTHONHASHSEED)."""
+
+    def test_stable_across_processes_and_hash_seeds(self):
+        import os
+        import subprocess
+        import sys
+        prog = ("from repro.core.techlib import get_techlib;"
+                "print(get_techlib('22fdx').content_hash())")
+        digests = set()
+        for seed in ("0", "1", "12345"):
+            env = {**os.environ, "PYTHONHASHSEED": seed}
+            env["PYTHONPATH"] = os.pathsep.join(
+                p for p in (env.get("PYTHONPATH"), "src") if p)
+            out = subprocess.run([sys.executable, "-c", prog], env=env,
+                                 capture_output=True, text=True, check=True)
+            digests.add(out.stdout.strip())
+        assert len(digests) == 1, \
+            f"content_hash varies across processes: {digests}"
+        assert digests.pop() == tl.get_techlib("22fdx").content_hash()
+
+    def test_distinguishes_libraries_and_corners(self):
+        base = tl.get_techlib("22fdx").content_hash()
+        assert len(base) == 64 and int(base, 16) >= 0   # hex sha256
+        assert tl.get_techlib("22fdx-lp").content_hash() != base
+        # identity corner: same object, same digest
+        assert sc.CORNERS["tt"].apply_lib().content_hash() == base
+        # a real corner perturbs the tables, so the digest must move
+        assert sc.CORNERS["ss"].apply_lib().content_hash() != base
+        assert (sc.CORNERS["ss"].apply_lib().content_hash()
+                != sc.CORNERS["ff"].apply_lib().content_hash())
+
+    def test_repeatable_in_process(self):
+        a = tl.DEFAULT_LIB.content_hash()
+        assert a == tl.DEFAULT_LIB.content_hash()
+        rebuilt = tl.DEFAULT_LIB.at_corner(sc.Corner("x", mismatch_mult=2.0))
+        again = tl.DEFAULT_LIB.at_corner(sc.Corner("x", mismatch_mult=2.0))
+        assert rebuilt.content_hash() == again.content_hash() != a
+
+
 class TestCornerPhysics:
     def test_ss_ff_move_td_energy_and_noise(self):
         """At identical (N, B, sigma, Vdd): ss (slower/leakier/noisier
