@@ -1,0 +1,315 @@
+"""Chaos gate: fault-injected checkpointed QAT + drift-adaptive serving.
+
+Drives both halves of the stack through deterministic `ft.FaultSchedule`s
+(seeded, replayable bit-identically) covering every fault class the
+robustness layer claims to survive: preemptions, straggler stalls,
+checkpoint corruption, explorer-server outages and activity-drift
+excursions.
+
+Gates (asserted on every backend — these are recovery properties, not
+kernel-compile properties):
+
+  * **train**: with the newest checkpoint bit-flipped and a preemption
+    right behind it, the QAT session resumes from the last INTACT step
+    (digest-verified fallback) and its post-resume loss trajectory is
+    bit-identical to a fault-free oracle from that step; recovery replay
+    is bounded by the checkpoint cadence.
+  * **serve/parity**: a schedule with a stall, a mid-run preemption and
+    an explorer outage loses ZERO admitted requests and reproduces the
+    fault-free run's greedy outputs bit-identically (drain + re-admit
+    continuations).
+  * **serve/drift**: a TD-mode adaptive engine hit by a drift excursion
+    re-resolves its (R, q) operating point at the measured activity and
+    hot-swaps it with ZERO recompiles (one compiled decode program for
+    the whole run); the re-priced meter records measurable J/token
+    savings vs pricing every token at the static worst-case rate.
+  * **explorer degradation**: the TCP client against a dead server fails
+    fast (split connect timeout, bounded retries) and degrades to the
+    in-process grid — the local policies match a direct solve and the
+    outage is counted in `ExplorerStats.fallback_resolves`.
+
+Artifacts under ``artifacts/chaos/``:
+
+  * ``schedule_train.json`` / ``schedule_serve.json``  the exact fault
+    schedules (replayable via ``ft.FaultSchedule.load``)
+  * ``summary.json``  per-half summaries + gate verdicts, including the
+    drift-adaptation energy savings
+
+``REPRO_CHAOS_SMOKE=1`` shrinks both halves for fast iteration/CI.
+"""
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import repro.configs as cfgs
+from repro import ft
+from repro.configs.base import ShapeCfg, TDExecCfg
+from repro.core import explorer as explorer_mod
+from repro.launch import explore
+from repro.launch import train as train_lib
+from repro.launch.scheduler import ContinuousBatchingEngine
+from repro.launch.serve import synthetic_requests
+from repro.tdsim import policy as td_policy
+
+OUT_DIR = os.path.join("artifacts", "chaos")
+
+TRAIN_ARCH, SERVE_ARCH = "granite-8b", "qwen3-8b"
+TRAIN_STEPS, CKPT_EVERY = 18, 4
+STREAMS, CAPACITY, PROMPT, GEN = 256, 16, 16, 32
+TRAIN_STEPS_SMOKE = 12
+STREAMS_SMOKE, CAPACITY_SMOKE, PROMPT_SMOKE, GEN_SMOKE = 24, 4, 8, 24
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_CHAOS_SMOKE", "").strip() in ("1", "true")
+
+
+# ---------------------------------------------------------------------------
+# train half: corrupt-then-preempt, recover from the last intact step
+# ---------------------------------------------------------------------------
+def _train_losses(arch, shape, steps, ckpt_dir, schedule, record):
+    def session():
+        return train_lib.run(arch, shape, steps, ckpt_dir,
+                             ckpt_every=CKPT_EVERY, log_every=10 ** 9,
+                             schedule=schedule, record=record)
+
+    _, losses = ft.run_with_retries(
+        session, policy=ft.RetryPolicy(backoff_s=0.0),
+        on_restart=lambda n, e: None)
+    return losses
+
+
+def run_train_half(steps):
+    arch = cfgs.get_smoke(TRAIN_ARCH).replace(td=TDExecCfg(mode="quant"))
+    shape = ShapeCfg("chaos", 32, 2, "train")
+
+    # fault-free oracle: same seed, same data stream, no checkpoint dir
+    rec_o = {}
+    oracle = _train_losses(arch, shape, steps, None, None, rec_o)
+
+    # chaos: checkpoints publish at steps 4, 8, ...; the corruption lands
+    # on the NEWEST published step right before a preemption, so recovery
+    # must fall back one full checkpoint interval
+    fault_at = 2 * CKPT_EVERY + 1
+    sched = ft.FaultSchedule([
+        ft.FaultEvent(2, "stall", {"duration_s": 0.01}),
+        ft.FaultEvent(fault_at, "ckpt_corrupt", {"mode": "bitflip",
+                                                 "seed": 3}),
+        ft.FaultEvent(fault_at + 1, "preempt"),
+    ])
+    sched_json = sched.to_json()
+    rec = {}
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        losses = _train_losses(arch, shape, steps, ckpt_dir, sched, rec)
+
+    resume = rec["starts"][-1]
+    intact = CKPT_EVERY          # step 8 was corrupted -> step 4 survives
+    kinds = {k for _, k in rec["faults"]}
+    assert {"preempt", "ckpt_corrupt", "stall"} <= kinds, rec["faults"]
+    assert len(rec["starts"]) == 2, \
+        f"expected exactly one restart, got starts={rec['starts']}"
+    assert resume == intact, \
+        f"resumed from {resume}, not the last intact step {intact}"
+    # bounded recovery: replay at most ckpt cadence + steps past the
+    # newest (corrupted) checkpoint
+    replay = (fault_at + 1) - resume
+    assert replay <= 2 * CKPT_EVERY + 1, f"unbounded recovery: {replay}"
+    assert np.array_equal(losses, oracle[resume:]), \
+        "post-resume loss trajectory diverged from the fault-free oracle"
+
+    return {"steps": steps, "resume_step": resume,
+            "last_intact_step": intact, "starts": rec["starts"],
+            "faults": [{"step": s, "kind": k} for s, k in rec["faults"]],
+            "replayed_steps": replay,
+            "oracle_loss_parity": True}, sched_json
+
+
+# ---------------------------------------------------------------------------
+# serve half: zero-loss parity under chaos + drift-adaptation savings
+# ---------------------------------------------------------------------------
+def _serve_run(arch, streams, capacity, s_cache, prompt, gen, params=None,
+               adapt=False, schedule=None):
+    eng = ContinuousBatchingEngine(arch, capacity=capacity, s_cache=s_cache,
+                                   seed=0, params=params, adapt=adapt)
+    eng.warmup()
+    reqs = synthetic_requests(streams, prompt, gen, arch.model.vocab, seed=7)
+    t0 = time.monotonic()
+    for r in reqs:
+        r.arrival_s = t0
+    out = eng.run(reqs, retry_policy=ft.RetryPolicy(backoff_s=0.0),
+                  schedule=schedule)
+    out["outputs"] = {rid: list(r.generated) for rid, r in eng.done.items()}
+    return eng, out
+
+
+def run_parity(streams, capacity, prompt, gen):
+    """Quant-mode scheduler through stall + preempt + explorer outage:
+    zero admitted requests lost, greedy outputs bit-identical."""
+    s_cache = prompt + gen
+    arch = cfgs.get_smoke(SERVE_ARCH).replace(td=TDExecCfg(mode="quant"))
+    eng0, base = _serve_run(arch, streams, capacity, s_cache, prompt, gen)
+
+    fire_at = max(2, base["steps"] // 2)
+    sched = ft.FaultSchedule([
+        ft.FaultEvent(1, "stall", {"duration_s": 0.01}),
+        ft.FaultEvent(fire_at, "preempt"),
+        ft.FaultEvent(fire_at + 2, "explorer_outage", {"up": False}),
+    ])
+    sched_json = sched.to_json()
+    eng, pre = _serve_run(arch, streams, capacity, s_cache, prompt, gen,
+                          params=eng0.params, schedule=sched)
+
+    kinds = {f["kind"] for f in pre["faults"]}
+    assert {"preempt", "stall", "explorer_outage"} <= kinds, pre["faults"]
+    lost = streams - pre["requests"]
+    assert lost == 0, f"chaos schedule lost {lost} admitted requests"
+    assert pre["outputs"] == base["outputs"], \
+        "chaos run diverged from the fault-free greedy outputs"
+    readmissions = sum(r["readmissions"] for r in pre["per_request"])
+    assert readmissions >= 1, "preemption never drained any request"
+    assert not eng.explorer_up, "outage event did not mark the explorer down"
+
+    return {"streams": streams, "requests": pre["requests"], "lost": lost,
+            "readmissions": readmissions,
+            "faults": pre["faults"],
+            "tokens_per_s": pre["tokens_per_s"],
+            "output_parity": True}, sched_json
+
+
+def run_drift(streams, capacity, prompt, gen):
+    """TD-mode adaptive engine through a drift excursion: re-resolve at the
+    measured activity, hot-swap with zero recompiles, bank the savings."""
+    s_cache = prompt + gen
+    arch = cfgs.get_smoke(SERVE_ARCH).replace(td=TDExecCfg(mode="td"))
+    sched = ft.FaultSchedule([
+        ft.FaultEvent(2, "drift", {"factor": 0.5}),
+    ])
+    eng, out = _serve_run(arch, streams, capacity, s_cache, prompt, gen,
+                          adapt=True, schedule=sched)
+
+    lost = streams - out["requests"]
+    assert lost == 0, f"drift run lost {lost} admitted requests"
+    assert out["adaptations"] >= 1, \
+        f"drift excursion never triggered an adaptation: {out}"
+    assert out["meter_policy_swaps"] >= 1, "meter was never re-priced"
+    n_compiles = eng._decode._cache_size()
+    assert n_compiles == 1, \
+        f"hot-swap recompiled the decode program ({n_compiles} entries)"
+
+    # static worst-case: every token priced at the highest rate the run
+    # ever saw (the anchor rate before the excursion dropped activity)
+    worst_rate = max(eng.meter.rate_history)
+    tokens = eng.meter.run_total_tokens()
+    static_j = worst_rate * tokens
+    adaptive_j = eng.meter.run_total_energy()
+    saved_j = static_j - adaptive_j
+    assert saved_j > 0, \
+        f"drift adaptation saved nothing: {adaptive_j:.3e} vs {static_j:.3e}"
+
+    return {"streams": streams, "adaptations": out["adaptations"],
+            "drift_excursions": out["drift_excursions"],
+            "p_x_one_anchor": float(eng.drift.anchor),
+            "p_x_one_measured": out["p_x_one_measured"],
+            "decode_compiles": n_compiles,
+            "meter_policy_swaps": out["meter_policy_swaps"],
+            "rate_history_j_per_token": eng.meter.rate_history,
+            "tokens": tokens,
+            "j_static_worst_case": static_j,
+            "j_adaptive": adaptive_j,
+            "j_saved": saved_j,
+            "savings_pct": 100.0 * saved_j / static_j}
+
+
+def run_explorer_outage():
+    """Client degradation against a DEAD server: fast typed failure, local
+    fallback identical to a direct solve, outage counted in stats."""
+    specs = [td_policy.TDLayerSpec(bits_a=4, bits_w=4, n_chain=64,
+                                   sigma_max=2.0)]
+    before = explorer_mod.service().stats.fallback_resolves
+    t0 = time.monotonic()
+    pols, source = explore.resolve_with_fallback(
+        specs, host="127.0.0.1", port=1,          # nothing listens on :1
+        connect_timeout=0.2, read_timeout=0.2, retries=1, backoff_s=0.0,
+        retry_seed=0)
+    elapsed = time.monotonic() - t0
+    stats = explorer_mod.service().stats
+    assert source == "local", f"dead server resolved via {source!r}"
+    assert stats.fallback_resolves == before + 1, \
+        "outage not counted in ExplorerStats.fallback_resolves"
+    assert elapsed < 10.0, f"dead-server fallback took {elapsed:.1f}s"
+    local = td_policy.solve_td_policies(specs)
+    assert len(pols) == len(local) == 1
+    assert (pols[0].redundancy, pols[0].tdc_q) == \
+        (local[0].redundancy, local[0].tdc_q), \
+        "fallback policies differ from a direct local solve"
+    return {"source": source, "fallback_s": elapsed,
+            "fallback_resolves": stats.fallback_resolves,
+            "policy_matches_local": True}
+
+
+def write_artifacts(summary, sched_train, sched_serve) -> list[str]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    paths = []
+    for name, payload in (("schedule_train.json", sched_train),
+                          ("schedule_serve.json", sched_serve)):
+        p = os.path.join(OUT_DIR, name)
+        with open(p, "w") as f:
+            f.write(payload)
+        paths.append(p)
+    p = os.path.join(OUT_DIR, "summary.json")
+    with open(p, "w") as f:
+        json.dump(summary, f, indent=1)
+    paths.append(p)
+    return paths
+
+
+def run() -> list[str]:
+    smoke = _smoke()
+    steps = TRAIN_STEPS_SMOKE if smoke else TRAIN_STEPS
+    streams = STREAMS_SMOKE if smoke else STREAMS
+    capacity = CAPACITY_SMOKE if smoke else CAPACITY
+    prompt = PROMPT_SMOKE if smoke else PROMPT
+    gen = GEN_SMOKE if smoke else GEN
+
+    train_sum, sched_train = run_train_half(steps)
+    parity_sum, sched_serve = run_parity(streams, capacity, prompt, gen)
+    drift_sum = run_drift(max(4, streams // 4), capacity, prompt, gen)
+    outage_sum = run_explorer_outage()
+
+    gates = {"train_resumed_from_intact": True,
+             "train_oracle_loss_parity": True,
+             "serve_zero_lost": True,
+             "serve_output_parity": True,
+             "drift_adaptations": drift_sum["adaptations"],
+             "drift_zero_recompile": True,
+             "drift_j_saved": drift_sum["j_saved"],
+             "explorer_local_fallback": True}
+    summary = {"smoke": smoke, "train": train_sum, "serve_parity": parity_sum,
+               "serve_drift": drift_sum, "explorer_outage": outage_sum,
+               "gates": gates}
+
+    out = [
+        f"chaos,half=train,steps={steps},resume={train_sum['resume_step']},"
+        f"replayed={train_sum['replayed_steps']},"
+        f"faults={len(train_sum['faults'])},"
+        f"derived=oracle_loss_parity=True",
+        f"chaos,half=serve,streams={streams},lost={parity_sum['lost']},"
+        f"readmissions={parity_sum['readmissions']},"
+        f"derived=zero_loss_output_parity=True",
+        f"chaos,half=drift,adaptations={drift_sum['adaptations']},"
+        f"compiles={drift_sum['decode_compiles']},"
+        f"j_adaptive={drift_sum['j_adaptive']:.3e},"
+        f"j_static={drift_sum['j_static_worst_case']:.3e},"
+        f"saved_pct={drift_sum['savings_pct']:.1f},"
+        f"derived=drift_savings_positive=True",
+        f"chaos,half=explorer,source={outage_sum['source']},"
+        f"fallback_s={outage_sum['fallback_s']:.2f},"
+        f"derived=degrades_to_local=True",
+    ]
+    for p in write_artifacts(summary, sched_train, sched_serve):
+        out.append(f"chaos,artifact={p}")
+    out.append("chaos,gate_ok=True,derived=fault_schedule_survived=True")
+    return out

@@ -8,7 +8,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (bench_arch_energy, bench_attention,
+from benchmarks import (bench_arch_energy, bench_attention, bench_chaos,
                         bench_design_grid, bench_energy_exact,
                         bench_energy_relaxed, bench_eta_esnr,
                         bench_explorer, bench_noise_tolerance,
@@ -32,6 +32,7 @@ SUITES = {
     "td_vmm": bench_td_vmm,
     "attention": bench_attention,
     "serving": bench_serving,
+    "chaos": bench_chaos,
     "roofline": bench_roofline,
     "arch_energy": bench_arch_energy,
 }

@@ -1,7 +1,7 @@
-"""Checkpointing: atomic, async-capable, elastic-remesh-aware.
+"""Checkpointing: atomic, async-capable, integrity-checked, elastic-remesh-aware.
 
 Format: one directory per step containing
-  manifest.msgpack   {step, names, shapes, dtypes, meta}
+  manifest.msgpack   {step, names, shapes, dtypes, digests, meta}
   arrays.npz         flat name -> host numpy array
 
 Properties needed at 1000-node scale (and implemented here in their
@@ -10,7 +10,15 @@ single-process form, with the multi-host extension points noted):
     partial checkpoint.  (Multi-host: per-host shard files + a commit marker
     written by host 0 after a barrier.)
   * async save      — device->host copy happens synchronously (cheap), disk
-    serialization on a background thread so the train loop is not blocked.
+    serialization on a background thread.  The returned `SaveHandle`
+    CAPTURES background failures: `wait()` re-raises them, and the next
+    `save()` into the same directory re-raises a still-unobserved failure
+    instead of silently dropping checkpoints onto a full/broken disk.
+  * integrity       — the manifest records a sha256 digest per array;
+    `restore()` verifies every digest (and the manifest/archive structure)
+    and, when no explicit step is requested, falls back to the newest
+    INTACT step — a bit-flipped or truncated latest checkpoint costs one
+    checkpoint interval, never a garbage restore.
   * elastic restore — arrays are saved UNSHARDED (host-gathered); restore
     re-shards onto whatever mesh the new job built, so pod counts can change
     between runs.  (At real scale this becomes per-shard files + resharding
@@ -19,6 +27,7 @@ single-process form, with the multi-host extension points noted):
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import shutil
 import threading
@@ -28,6 +37,11 @@ import msgpack
 import numpy as np
 
 
+class CorruptCheckpoint(RuntimeError):
+    """A checkpoint step failed integrity verification (bad digest,
+    unreadable archive, missing manifest, missing arrays)."""
+
+
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -35,10 +49,69 @@ def _flatten(tree):
     return names, [v for _, v in flat], treedef
 
 
+def _digest(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+class SaveHandle:
+    """Join handle of one async save.  The background thread never raises
+    into the void: its exception is captured here and re-raised by
+    `wait()` (and by the NEXT `save()` into the same directory, so a train
+    loop that never waits still finds out on the following interval)."""
+
+    def __init__(self, step: int):
+        self.step = int(step)
+        self.error: BaseException | None = None
+        self._thread: threading.Thread | None = None
+
+    def _run(self, fn):
+        try:
+            fn()
+        except BaseException as e:      # noqa: BLE001 — captured, not dropped
+            self.error = e
+
+    def start(self, fn) -> "SaveHandle":
+        self._thread = threading.Thread(target=self._run, args=(fn,),
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def done(self) -> bool:
+        return self._thread is None or not self._thread.is_alive()
+
+    def wait(self, timeout: float | None = None) -> None:
+        """Block until the write finishes; re-raise its failure, if any."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if self.error is not None:
+            err, self.error = self.error, None   # observed exactly once
+            raise RuntimeError(
+                f"async checkpoint save of step {self.step} failed"
+            ) from err
+
+    # drop-in for the bare threading.Thread this API used to return
+    def join(self, timeout: float | None = None) -> None:
+        self.wait(timeout)
+
+
+# last unobserved handle per checkpoint dir — lets the next save() surface a
+# background failure whose wait() nobody called
+_last_handle: dict[str, SaveHandle] = {}
+_last_handle_lock = threading.Lock()
+
+
 def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
-         keep_last: int = 3, async_write: bool = True
-         ) -> threading.Thread | None:
+         keep_last: int = 3, async_write: bool = True) -> SaveHandle | None:
     """Save `tree` (params/opt_state/anything pytree) at `step`."""
+    key = os.path.abspath(ckpt_dir)
+    with _last_handle_lock:
+        prev = _last_handle.pop(key, None)
+    if prev is not None and prev.done() and prev.error is not None:
+        prev.wait()     # re-raises: a dropped checkpoint is not survivable
+    elif prev is not None and not prev.done():
+        with _last_handle_lock:     # still writing: keep tracking it
+            _last_handle[key] = prev
+
     names, vals, _ = _flatten(tree)
     host_vals = [np.asarray(jax.device_get(v)) for v in vals]
     manifest = {
@@ -46,6 +119,7 @@ def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
         "names": names,
         "shapes": [list(v.shape) for v in host_vals],
         "dtypes": [str(v.dtype) for v in host_vals],
+        "digests": [_digest(v) for v in host_vals],
         "meta": meta or {},
     }
 
@@ -65,9 +139,10 @@ def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
         _retain(ckpt_dir, keep_last)
 
     if async_write:
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
-        return t
+        handle = SaveHandle(step).start(_write)
+        with _last_handle_lock:
+            _last_handle[key] = handle
+        return handle
     _write()
     return None
 
@@ -92,9 +167,43 @@ def latest_steps(ckpt_dir: str) -> list[int]:
     return sorted(out)
 
 
+def _load_verified(ckpt_dir: str, step: int) -> tuple[dict, list[np.ndarray]]:
+    """Read + integrity-check one step; any failure (missing manifest,
+    unreadable/truncated archive, digest mismatch) is a CorruptCheckpoint."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        with np.load(os.path.join(d, "arrays.npz")) as data:
+            arrays = [data[f"a{i}"] for i in range(len(manifest["names"]))]
+    except CorruptCheckpoint:
+        raise
+    except Exception as e:   # noqa: BLE001 — any read failure IS corruption
+        raise CorruptCheckpoint(f"step {step} unreadable: {e!r}") from e
+    digests = manifest.get("digests")
+    if digests is not None:     # pre-digest checkpoints verify structurally
+        bad = [manifest["names"][i] for i, (a, want)
+               in enumerate(zip(arrays, digests)) if _digest(a) != want]
+        if bad:
+            raise CorruptCheckpoint(
+                f"step {step} digest mismatch: {bad[:5]}")
+    return manifest, arrays
+
+
+def verify(ckpt_dir: str, step: int) -> None:
+    """Integrity-check one step (raises CorruptCheckpoint)."""
+    _load_verified(ckpt_dir, step)
+
+
 def restore(ckpt_dir: str, like_tree, step: int | None = None,
             shardings=None) -> tuple[int, object, dict]:
     """Restore into the structure of `like_tree`.
+
+    With `step=None`, candidate steps are tried newest-first and the first
+    one that passes integrity verification wins — a corrupt or partially
+    written latest checkpoint falls back to the last intact step.  An
+    EXPLICIT step never falls back: the caller asked for that step, so a
+    corrupt one raises CorruptCheckpoint.
 
     shardings: optional matching pytree of jax.sharding.Sharding — arrays are
     device_put onto it (elastic remesh: the mesh may differ from save time).
@@ -103,12 +212,21 @@ def restore(ckpt_dir: str, like_tree, step: int | None = None,
     steps = latest_steps(ckpt_dir)
     if not steps:
         raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    step = steps[-1] if step is None else step
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
-    data = np.load(os.path.join(d, "arrays.npz"))
-    arrays = [data[f"a{i}"] for i in range(len(manifest["names"]))]
+    candidates = [step] if step is not None else list(reversed(steps))
+    manifest = arrays = None
+    reasons: list[str] = []
+    for cand in candidates:
+        try:
+            manifest, arrays = _load_verified(ckpt_dir, cand)
+            step = cand
+            break
+        except CorruptCheckpoint as e:
+            if len(candidates) == 1:
+                raise
+            reasons.append(str(e))
+    if manifest is None:
+        raise CorruptCheckpoint(
+            f"no intact checkpoint in {ckpt_dir}: {reasons}")
 
     names, vals, treedef = _flatten(like_tree)
     by_name = dict(zip(manifest["names"], arrays))

@@ -72,12 +72,16 @@ def _point(domain: str, res: dict, n: int, bits: int, m: int,
 def evaluate_td(n: int, bits: int, sigma_max: float, m: int = C.M_DEFAULT,
                 vdd: float = C.VDD_NOM, clip_range: bool = True,
                 tdc_arch: str = "hybrid", relax_tdc: bool = True,
+                p_x_one: float = C.P_X_ONE,
+                w_bit_sparsity: float = C.W_BIT_SPARSITY,
                 lib=None) -> DesignPoint:
     """Size-1 wrapper over the batched TD evaluator: the (R, q) co-solution
-    of Eq. 5-7 for one point (`lib` selects the technology library)."""
+    of Eq. 5-7 for one point (`lib` selects the technology library;
+    `p_x_one`/`w_bit_sparsity` the input statistics the pricing assumes)."""
     res = evaluate_points("td", n, sigma_max, vdd, bits=bits, m=m,
                           clip_range=clip_range, tdc_arch=tdc_arch,
-                          relax_tdc=relax_tdc, lib=lib)
+                          relax_tdc=relax_tdc, p_x_one=p_x_one,
+                          w_bit_sparsity=w_bit_sparsity, lib=lib)
     aux = {"e_cell": float(res["e_cell"]), "e_tdc": float(res["e_tdc"]),
            "l_osc": int(round(float(res["l_osc"]))),
            "latency": float(res["latency"]), "vdd": float(vdd),
@@ -88,9 +92,13 @@ def evaluate_td(n: int, bits: int, sigma_max: float, m: int = C.M_DEFAULT,
 
 def evaluate_analog(n: int, bits: int, sigma_max: float,
                     m: int = C.M_DEFAULT, vdd: float = C.VDD_NOM,
-                    clip_range: bool = True, lib=None) -> DesignPoint:
+                    clip_range: bool = True,
+                    p_x_one: float = C.P_X_ONE,
+                    w_bit_sparsity: float = C.W_BIT_SPARSITY,
+                    lib=None) -> DesignPoint:
     res = evaluate_points("analog", n, sigma_max, vdd, bits=bits, m=m,
-                          clip_range=clip_range, lib=lib)
+                          clip_range=clip_range, p_x_one=p_x_one,
+                          w_bit_sparsity=w_bit_sparsity, lib=lib)
     aux = {"enob": float(res["enob"]), "e_adc": float(res["e_adc"]),
            "e_cap": float(res["e_cap"])}
     return _point("analog", res, n, bits, m, sigma_max, aux)
@@ -98,8 +106,12 @@ def evaluate_analog(n: int, bits: int, sigma_max: float,
 
 def evaluate_digital(n: int, bits: int, sigma_max: float = 0.0,
                      m: int = C.M_DEFAULT,
-                     vdd: float = C.VDD_NOM, lib=None) -> DesignPoint:
+                     vdd: float = C.VDD_NOM,
+                     p_x_one: float = C.P_X_ONE,
+                     w_bit_sparsity: float = C.W_BIT_SPARSITY,
+                     lib=None) -> DesignPoint:
     res = evaluate_points("digital", n, sigma_max, vdd, bits=bits, m=m,
+                          p_x_one=p_x_one, w_bit_sparsity=w_bit_sparsity,
                           lib=lib)
     return _point("digital", res, n, bits, m, sigma_max, {})
 

@@ -155,6 +155,7 @@ class ExplorerStats:
     refine_runs: int = 0
     refine_levels: int = 0
     fanout_sweeps: int = 0
+    fallback_resolves: int = 0   # remote resolves degraded to this process
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)

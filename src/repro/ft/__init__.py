@@ -1,0 +1,47 @@
+"""Fault tolerance: the production robustness layer.
+
+The TD stack's paper claim -- energy wins under approximation that
+preserves accuracy -- only matters at production scale if the stack
+survives the faults production brings.  This package is that layer,
+promoted out of the old single-file `launch/ft.py`:
+
+``repro.ft.retry``
+    `RetryPolicy` (capped exponential backoff with deterministic seeded
+    jitter so synchronized restarts don't stampede), `run_with_retries`,
+    the `Preemption` signal and the `RETRYABLE` classification.
+``repro.ft.watchdog``
+    `StepWatchdog`: rolling step-time p50 with straggler flagging.
+``repro.ft.chaos``
+    Deterministic chaos engine: a seeded `FaultSchedule` injects, at
+    declared steps, preemptions, straggler stalls, checkpoint corruption
+    (bit-flip / truncation of ``arrays.npz``), explorer-server outages
+    and operating-point drift excursions -- the same schedule replays
+    bit-identically for tests and benches (JSON round-trip).
+``repro.ft.drift``
+    Graceful degradation for serving: cheap running estimators of the
+    measured operating point (`measure_p_x_one` inside the jitted serve
+    step, `weight_bit_sparsity` once from params), the `DriftEstimator`
+    EMA + threshold, and `ResolverChain` (primary resolver with a
+    fallback -- e.g. explorer TCP client degrading to the in-process
+    cached grid when the server is unreachable).
+
+`launch/ft.py` remains as a thin import shim for old call sites.
+"""
+from repro.ft.chaos import (CHAOS_KINDS, CORRUPT_MODES, FaultEvent,
+                            FaultSchedule, corrupt_checkpoint,
+                            excursion_trace)
+from repro.ft.drift import (DriftEstimator, ResolverChain, measure_p_x_one,
+                            weight_bit_sparsity)
+from repro.ft.retry import (RETRYABLE, Preemption, RetryPolicy,
+                            backoff_delays, run_with_retries)
+from repro.ft.watchdog import StepWatchdog, WatchdogReport
+
+__all__ = [
+    "CHAOS_KINDS", "CORRUPT_MODES", "FaultEvent", "FaultSchedule",
+    "corrupt_checkpoint", "excursion_trace",
+    "DriftEstimator", "ResolverChain", "measure_p_x_one",
+    "weight_bit_sparsity",
+    "RETRYABLE", "Preemption", "RetryPolicy", "backoff_delays",
+    "run_with_retries",
+    "StepWatchdog", "WatchdogReport",
+]

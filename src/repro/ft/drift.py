@@ -1,0 +1,129 @@
+"""Operating-point drift: measurement, detection, degraded resolution.
+
+The optimal TD operating point (R, q, Vdd) depends on the input statistics
+the solve assumed -- `p_x_one` (activation bit density) and
+`w_bit_sparsity` (PR 3's scenario engine).  When live traffic drifts away
+from those statistics the deployed policy is mispriced: either it burns
+energy on a worst-case margin the workload no longer needs, or it
+undershoots the error budget.  This module is the serving-side feedback
+loop:
+
+`measure_p_x_one`
+    Cheap running estimator of the activation bit density, pure jnp so it
+    fuses into the jitted serve step (maxabs-quantize the embedding
+    activations to the policy's bit width, offset-encode, average the bit
+    planes -- the exact statistic `cells.input_distribution` prices).
+`weight_bit_sparsity`
+    One-shot weight-side statistic from the deployed params (weights do
+    not drift during serving; measured once at engine build).
+`DriftEstimator`
+    Host-side EMA + threshold: smooths the per-step measurements and
+    flags when the smoothed value leaves a relative band around the
+    anchor (the statistic the CURRENT policy was resolved at).  `rearm`
+    moves the anchor after a re-resolve so the detector does not re-fire
+    on the excursion it just adapted to.
+`ResolverChain`
+    Graceful degradation for policy resolution: try the primary resolver
+    (the explorer TCP client), catch its "unreachable" errors and degrade
+    to the fallback (the in-process cached grid) instead of failing the
+    request.  Recovers automatically when the primary answers again.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.quant import bitserial
+
+
+def measure_p_x_one(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Activation bit density of ``x`` under B-bit maxabs quantization:
+    the fraction of ones across all offset-encoded bit planes (a scalar
+    f32).  Pure jnp -- jit/fuse freely inside the serve step."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(x / s), -(qmax + 1.0), qmax).astype(jnp.int32)
+    planes = bitserial.bit_planes(bitserial.to_offset(codes, bits), bits)
+    return jnp.mean(planes.astype(jnp.float32))
+
+
+def weight_bit_sparsity(w: jnp.ndarray, bits: int = 4) -> float:
+    """Fraction of ZERO bits in the B-bit maxabs codes of ``w`` (the
+    Section IV 'weight bitwise sparsity' statistic; ~0.70 for ResNet18).
+    One-shot host-side measurement -- weights are static during serving."""
+    return float(1.0 - measure_p_x_one(jnp.asarray(w), bits))
+
+
+@dataclasses.dataclass
+class DriftEstimator:
+    """EMA drift detector over a running operating-point statistic.
+
+    ``anchor`` is the value the current policy was resolved at; `update`
+    folds one measurement into the EMA and returns True when the smoothed
+    value has left ``(1 +/- threshold) * anchor``.  ``warmup`` raw samples
+    must arrive before the detector may fire (a half-seeded EMA would flag
+    the very first batch).  After the caller re-resolves, `rearm(new)`
+    moves the anchor and re-enters warmup so the detector tracks the NEW
+    operating point instead of re-firing on the old excursion.
+    """
+    anchor: float
+    alpha: float = 0.1          # EMA weight of each new sample
+    threshold: float = 0.2      # relative band half-width around anchor
+    warmup: int = 4
+    value: float | None = None  # current EMA (None until first sample)
+    samples: int = 0
+    excursions: int = 0
+
+    def update(self, measured: float) -> bool:
+        m = float(measured)
+        self.value = m if self.value is None else \
+            (1.0 - self.alpha) * self.value + self.alpha * m
+        self.samples += 1
+        if self.samples < self.warmup:
+            return False
+        drifted = abs(self.value - self.anchor) > self.threshold * abs(self.anchor)
+        if drifted:
+            self.excursions += 1
+        return drifted
+
+    def rearm(self, anchor: float) -> None:
+        self.anchor = float(anchor)
+        self.value = None
+        self.samples = 0
+
+
+class ResolverChain:
+    """primary-then-fallback policy resolution.
+
+    ``primary`` and ``fallback`` share a call signature; a primary failure
+    of one of the ``catches`` types degrades to the fallback (counted in
+    ``fallbacks``, surfaced via ``degraded``) -- anything else propagates.
+    A later primary success clears ``degraded``: outage over.
+    """
+
+    def __init__(self, primary: Callable, fallback: Callable,
+                 catches: tuple[type[BaseException], ...] = (OSError,
+                                                            TimeoutError),
+                 on_fallback: Callable[[BaseException], None] | None = None):
+        self.primary = primary
+        self.fallback = fallback
+        self.catches = catches
+        self.on_fallback = on_fallback
+        self.calls = 0
+        self.fallbacks = 0
+        self.degraded = False
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        try:
+            out = self.primary(*args, **kwargs)
+        except self.catches as e:
+            self.fallbacks += 1
+            self.degraded = True
+            if self.on_fallback is not None:
+                self.on_fallback(e)
+            return self.fallback(*args, **kwargs)
+        self.degraded = False
+        return out

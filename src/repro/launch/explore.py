@@ -33,7 +33,11 @@ Protocol (request ``op`` field):
 ``shutdown``
     Stop the server after replying.
 
-`request` is the client helper the example CLI's ``--query`` mode uses.
+`request` is the client helper the example CLI's ``--query`` mode uses:
+split connect/read timeouts and bounded jittered retries, raising the
+typed `ExplorerUnreachable` when the server stays dark so callers can
+degrade (`resolve_with_fallback` routes a failed remote resolve to the
+in-process cached grid instead of failing the request).
 """
 from __future__ import annotations
 
@@ -52,7 +56,18 @@ from repro.core import scenario as scenario_mod
 
 DEFAULT_PORT = int(os.environ.get("REPRO_EXPLORER_PORT", "7749"))
 
-__all__ = ["ExplorerServer", "request", "dispatch", "main", "DEFAULT_PORT"]
+__all__ = ["ExplorerServer", "ExplorerUnreachable", "request",
+           "resolve_with_fallback", "dispatch", "main", "DEFAULT_PORT"]
+
+
+class ExplorerUnreachable(ConnectionError):
+    """The explorer server did not answer within the retry budget.
+
+    A ConnectionError (hence OSError) so it is retryable under
+    `ft.RETRYABLE` and catchable by `ft.ResolverChain`'s default filter;
+    callers that can degrade catch THIS type specifically and fall back
+    to in-process resolution (stale local cache) rather than treating it
+    like a data error."""
 
 
 def _jsonable(v):
@@ -109,10 +124,15 @@ def _resolve_payload(svc: explorer_mod.ExplorerService, req: dict) -> dict:
     # server never needs
     from repro.tdsim import policy as policy_mod
 
+    dflt = policy_mod.TDLayerSpec()
     specs = [policy_mod.TDLayerSpec(
         bits_a=int(l.get("bits_a", 4)), bits_w=int(l.get("bits_w", 4)),
         n_chain=int(l.get("n_chain", 576)),
-        sigma_max=l.get("sigma_max"), vdd=float(l.get("vdd", 0.8)))
+        sigma_max=l.get("sigma_max"), vdd=float(l.get("vdd", 0.8)),
+        p_x_one=float(l.get("p_x_one", dflt.p_x_one)),
+        w_bit_sparsity=float(l.get("w_bit_sparsity", dflt.w_bit_sparsity)),
+        m=int(l.get("m", dflt.m)),
+        tdc_arch=str(l.get("tdc_arch", dflt.tdc_arch)))
         for l in req["layers"]]
     if req.get("scenario"):
         specs = policy_mod.apply_scenario(
@@ -124,6 +144,7 @@ def _resolve_payload(svc: explorer_mod.ExplorerService, req: dict) -> dict:
          "redundancy": p.redundancy, "tdc_q": p.tdc_q,
          "sigma_chain": p.sigma_chain, "vdd": p.vdd,
          "m": p.m, "tdc_arch": p.tdc_arch,
+         "p_x_one": p.p_x_one, "w_bit_sparsity": p.w_bit_sparsity,
          "sigma_max": p.sigma_max} for p in pols]}
 
 
@@ -209,17 +230,95 @@ class ExplorerServer:
 
 
 def request(payload: dict, host: str = "127.0.0.1",
-            port: int = DEFAULT_PORT, timeout: float = 300.0) -> dict:
-    """Send one request to a running explorer server, return its reply."""
-    with socket.create_connection((host, port), timeout=timeout) as sk:
-        sk.sendall(json.dumps(payload).encode() + b"\n")
-        buf = b""
-        while not buf.endswith(b"\n"):
-            chunk = sk.recv(65536)
-            if not chunk:
-                break
-            buf += chunk
-    return json.loads(buf)
+            port: int = DEFAULT_PORT, timeout: float | None = None,
+            connect_timeout: float = 2.0, read_timeout: float = 300.0,
+            retries: int = 2, backoff_s: float = 0.2,
+            retry_seed: int | None = None) -> dict:
+    """Send one request to a running explorer server, return its reply.
+
+    Connection setup and response read get SEPARATE budgets: a dead server
+    fails in ``connect_timeout`` seconds (not the read budget a giant
+    first-time sweep legitimately needs), and the read budget only starts
+    once the server has accepted the query.  Connect/read failures retry
+    up to ``retries`` times under the jittered exponential backoff of
+    `ft.RetryPolicy`; when all attempts fail, the typed
+    `ExplorerUnreachable` carries the last error for callers that degrade
+    to local resolution.  ``timeout`` (legacy) sets both budgets at once.
+    """
+    from repro import ft
+
+    if timeout is not None:
+        connect_timeout = read_timeout = timeout
+    policy = ft.RetryPolicy(max_restarts=retries, backoff_s=backoff_s,
+                            seed=retry_seed)
+    attempt = 0
+    while True:
+        try:
+            with socket.create_connection((host, port),
+                                          timeout=connect_timeout) as sk:
+                sk.settimeout(read_timeout)
+                sk.sendall(json.dumps(payload).encode() + b"\n")
+                buf = b""
+                while not buf.endswith(b"\n"):
+                    chunk = sk.recv(65536)
+                    if not chunk:
+                        break
+                    buf += chunk
+            if not buf:
+                raise ConnectionError("server closed without replying")
+            return json.loads(buf)
+        except (OSError, TimeoutError) as e:
+            attempt += 1
+            if attempt > retries:
+                raise ExplorerUnreachable(
+                    f"explorer at {host}:{port} unreachable after "
+                    f"{attempt} attempt(s): {e!r}") from e
+            time.sleep(policy.delay_s(attempt))
+
+
+def resolve_with_fallback(specs, host: str = "127.0.0.1",
+                          port: int = DEFAULT_PORT,
+                          scenario=None, corner=None,
+                          **request_kw) -> tuple[list, str]:
+    """Resolve per-layer TD policies via the explorer server, degrading to
+    the in-process cached grid when it is unreachable.
+
+    ``specs`` is a list of `tdsim.policy.TDLayerSpec`.  Returns
+    ``(policies, source)`` with source ``"remote"`` or ``"local"``; the
+    local path counts in `ExplorerStats.fallback_resolves`.  A reachable
+    server that REJECTS the query (``ok: false``) raises — that is a data
+    error, not an outage."""
+    from repro.tdsim import policy as policy_mod
+
+    payload = {"op": "resolve",
+               "layers": [{"bits_a": sp.bits_a, "bits_w": sp.bits_w,
+                           "n_chain": sp.n_chain, "sigma_max": sp.sigma_max,
+                           "vdd": sp.vdd, "p_x_one": sp.p_x_one,
+                           "w_bit_sparsity": sp.w_bit_sparsity,
+                           "m": sp.m, "tdc_arch": sp.tdc_arch}
+                          for sp in specs]}
+    if scenario is not None:
+        payload["scenario"] = scenario
+        payload["corner"] = corner
+    try:
+        resp = request(payload, host, port, **request_kw)
+    except ExplorerUnreachable:
+        explorer_mod.service().stats.fallback_resolves += 1
+        if scenario is not None:
+            specs = policy_mod.apply_scenario(specs, scenario, corner)
+        return policy_mod.solve_td_policies(specs), "local"
+    if not resp.get("ok"):
+        raise RuntimeError(f"explorer resolve failed: {resp.get('error')}")
+    pols = [policy_mod.TDPolicy(
+        mode="td", bits_a=int(p["bits_a"]), bits_w=int(p["bits_w"]),
+        n_chain=int(p["n_chain"]), redundancy=int(p["redundancy"]),
+        sigma_chain=float(p["sigma_chain"]), tdc_q=int(p["tdc_q"]),
+        m=int(p["m"]), tdc_arch=p["tdc_arch"], vdd=float(p["vdd"]),
+        p_x_one=float(p.get("p_x_one", policy_mod.C.P_X_ONE)),
+        w_bit_sparsity=float(p.get("w_bit_sparsity",
+                                   policy_mod.C.W_BIT_SPARSITY)),
+        sigma_max=p["sigma_max"]) for p in resp["policies"]]
+    return pols, "remote"
 
 
 def main(argv=None) -> None:

@@ -1,108 +1,26 @@
-"""Fault tolerance and straggler mitigation for the training loop.
+"""Compatibility shim: fault tolerance moved to the `repro.ft` package.
 
-Single-process implementations of the cluster-scale mechanisms, with the
-same interfaces a multi-host deployment would use:
-
-  * Heartbeat/step-time watchdog: tracks a rolling step-time distribution;
-    a step exceeding p50 * straggler_factor is flagged (at scale: triggers
-    hot-spare swap or collective reconfiguration; here: logged + counted,
-    and a standing policy object decides restart vs skip).
-  * RetryPolicy: classify exceptions into retryable (preemption-like,
-    transient I/O) vs fatal; run_with_retries re-enters the train loop from
-    the last checkpoint — the loop body is idempotent by construction
-    (stateless data stream + checkpointed step).
-  * Elastic remesh on restore is handled by checkpoint.restore(shardings=…):
-    a restarted job may come up with a different device count.
+The single-file module grew into a subsystem — `repro.ft.retry`
+(RetryPolicy with capped/jittered backoff, run_with_retries, Preemption),
+`repro.ft.watchdog` (StepWatchdog), `repro.ft.chaos` (deterministic fault
+schedules) and `repro.ft.drift` (operating-point drift detection and
+degraded resolution).  Import `repro.ft` directly; this shim keeps the old
+`repro.launch.ft` call sites working.
 """
-from __future__ import annotations
-
-import dataclasses
-import time
-from collections import deque
-from typing import Callable
-
-
-@dataclasses.dataclass
-class WatchdogReport:
-    step: int
-    duration: float
-    p50: float
-    is_straggler: bool
-
-
-class StepWatchdog:
-    def __init__(self, straggler_factor: float = 3.0, window: int = 50,
-                 warmup_steps: int = 3):
-        self.factor = straggler_factor
-        self.times: deque = deque(maxlen=window)
-        self.warmup = warmup_steps
-        self.straggler_count = 0
-        self.steps_observed = 0
-        self._t0 = None
-        self._step = -1
-
-    def start(self, step: int):
-        self._step = step
-        self._t0 = time.monotonic()
-
-    def stop(self) -> WatchdogReport:
-        dur = time.monotonic() - self._t0
-        hist = sorted(self.times)
-        if hist:
-            # true median: average the two middle samples on even windows
-            # (hist[len//2] alone is the UPPER middle — biased high)
-            mid = len(hist) // 2
-            p50 = (hist[mid] if len(hist) % 2
-                   else 0.5 * (hist[mid - 1] + hist[mid]))
-        else:
-            p50 = dur
-        # warmup counts every step SEEN, not just the non-straggler samples
-        # kept in `times` — otherwise a noisy warmup keeps extending itself
-        warm = self.steps_observed >= self.warmup
-        self.steps_observed += 1
-        straggler = warm and dur > self.factor * p50
-        if straggler:
-            self.straggler_count += 1
-        else:
-            self.times.append(dur)   # keep the baseline uncontaminated
-        return WatchdogReport(self._step, dur, p50, straggler)
-
-
-class Preemption(RuntimeError):
-    """Raised by the environment (or tests) to simulate node loss."""
-
-
-RETRYABLE = (Preemption, OSError, TimeoutError)
-
-
-@dataclasses.dataclass
-class RetryPolicy:
-    max_restarts: int = 5
-    backoff_s: float = 0.1
-
-
-def run_with_retries(body: Callable[[], object],
-                     policy: RetryPolicy | None = None,
-                     on_restart: Callable[[int, BaseException], None]
-                     | None = None):
-    """Run `body` (a full train session that resumes from the latest
-    checkpoint) restarting on retryable failures.
-
-    `policy=None` constructs a fresh RetryPolicy per call — a dataclass
-    default instance would be one MUTABLE object shared by every call site
-    (a caller tweaking `policy.max_restarts` would change everyone else's).
-    """
-    if policy is None:
-        policy = RetryPolicy()
-    restarts = 0
-    while True:
-        try:
-            return body()
-        except RETRYABLE as e:          # noqa: PERF203
-            restarts += 1
-            if restarts > policy.max_restarts:
-                raise
-            if on_restart is not None:
-                on_restart(restarts, e)
-            # exponential backoff: base * 2^(restart-1), not a linear ramp
-            time.sleep(policy.backoff_s * 2.0 ** (restarts - 1))
+from repro.ft import (  # noqa: F401
+    CHAOS_KINDS,
+    FaultEvent,
+    FaultSchedule,
+    corrupt_checkpoint,
+    DriftEstimator,
+    ResolverChain,
+    measure_p_x_one,
+    weight_bit_sparsity,
+    RETRYABLE,
+    Preemption,
+    RetryPolicy,
+    backoff_delays,
+    run_with_retries,
+    StepWatchdog,
+    WatchdogReport,
+)

@@ -27,7 +27,18 @@ asks for:
     drains in-flight requests back onto the queue as continuations
     (prompt + tokens generated so far) instead of killing the run, so no
     admitted request is ever lost and greedy outputs are bit-identical to
-    an uninterrupted run.
+    an uninterrupted run.  `run(schedule=...)` additionally consumes a
+    deterministic `ft.FaultSchedule` (preemptions, stalls, drift
+    excursions, explorer outages) — the chaos bench's injection path.
+  * **Drift adaptation** (``adapt=True``) — the jitted decode step also
+    returns the measured activation bit density (`ft.drift`), smoothed by
+    a `DriftEstimator`; on a threshold crossing the engine re-resolves
+    the per-layer (R, q) policies at the MEASURED statistics through
+    `resolver` (default: the in-process explorer grid; a `ResolverChain`
+    degrades a dead explorer server to the local cache) and hot-swaps the
+    operating point: (sigma, q) are runtime operands of the SAME compiled
+    decode program (zero recompiles) and the energy meter re-prices
+    future tokens (`RequestMeter.set_policy`).
 
 Scope: decoder-family, pure-attention, token-only models (the bucketed
 prefill relies on causal masking to keep pad junk out of the prefix;
@@ -43,10 +54,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch import ft
+from repro import ft
 from repro.launch import steps as steps_lib
 from repro.models import common, get_api, matmul_shapes, transformer
 from repro.roofline import model as roofline_model
+from repro.tdsim import policy as td_policy
 from repro.tdsim.energy_meter import RequestMeter
 
 __all__ = ["Request", "Slot", "ContinuousBatchingEngine"]
@@ -100,7 +112,9 @@ class ContinuousBatchingEngine:
                  prompt_pad: int | None = None, seed: int = 0,
                  eos_id: int | None = None, params=None,
                  meter_domain: str = "td", kv_block: int = 64,
-                 continuous: bool = True, clock=time.monotonic):
+                 continuous: bool = True, clock=time.monotonic,
+                 adapt: bool = False, drift_threshold: float = 0.2,
+                 resolver=None):
         cfg = arch.model
         if cfg.family != "decoder":
             raise ValueError("scheduler requires a decoder-family model")
@@ -142,8 +156,14 @@ class ContinuousBatchingEngine:
                                donate_argnums=(0,))
         shape = steps_lib.ShapeCfg("serve", self.s_cache, self.capacity,
                                    "decode")
-        self._decode = jax.jit(steps_lib.build_serve_step(arch, shape),
-                               donate_argnums=(2,))
+        self.adapt = adapt
+        if adapt:
+            self._decode = jax.jit(
+                steps_lib.build_adaptive_serve_step(arch, shape),
+                donate_argnums=(2,))
+        else:
+            self._decode = jax.jit(steps_lib.build_serve_step(arch, shape),
+                                   donate_argnums=(2,))
 
         pol0 = common.pol_at(self.pol, 0)
         self.meter = (RequestMeter(matmul_shapes(cfg), pol0,
@@ -152,6 +172,21 @@ class ContinuousBatchingEngine:
                                               is not None else 2.0))
                       if pol0.mode != "precise" else None)
         self.watchdog = ft.StepWatchdog()
+
+        # drift adaptation + chaos-schedule state (host-side)
+        self._ops = common.td_policy_ops(self.pol)
+        self.resolver = (td_policy.solve_td_policies if resolver is None
+                         else resolver)
+        self.drift = (ft.DriftEstimator(anchor=pol0.p_x_one,
+                                        threshold=drift_threshold)
+                      if adapt else None)
+        self._wsp = (ft.weight_bit_sparsity(self.params["embed"]["table"],
+                                            pol0.bits_w) if adapt else None)
+        self._drift_gain = 1.0       # chaos drift excursion multiplier
+        self.adaptations = 0
+        self.explorer_up = True
+        self.on_outage = None        # callable(up: bool), wired by benches
+        self.fault_log: list = []
 
         self.queue: deque[Request] = deque()
         self.slots = [Slot(i) for i in range(self.capacity)]
@@ -243,8 +278,13 @@ class ContinuousBatchingEngine:
         if not active:
             return bool(self.queue)
         self.watchdog.start(self.steps_run)
-        self._tok, self._state = self._decode(self.params, self._tok,
-                                              self._state)
+        if self.adapt:
+            self._tok, self._state, px = self._decode(
+                self.params, self._tok, self._state, self._ops)
+        else:
+            px = None
+            self._tok, self._state = self._decode(self.params, self._tok,
+                                                  self._state)
         jax.block_until_ready(self._tok)
         self.watchdog.stop()
         self.steps_run += 1
@@ -253,7 +293,69 @@ class ContinuousBatchingEngine:
         for slot in active:
             self._record_token(slot.request, int(toks[slot.index, 0]), now)
             self._retire_or_keep(slot)
+        if px is not None and self.drift.update(float(px) * self._drift_gain):
+            self._readapt()
         return bool(self.queue or self.active)
+
+    # ------------------------------------------------------------------
+    # drift adaptation: re-resolve at the measured operating point
+    # ------------------------------------------------------------------
+    def _readapt(self) -> None:
+        """The smoothed activity left the band the current policy was
+        priced for: re-resolve every TD layer at the MEASURED statistics
+        and hot-swap (sigma, q) as runtime operands + the meter's J/token
+        rate — no recompile (the decode program is unchanged)."""
+        measured = float(self.drift.value)
+        layer_pols = (list(self.pol.layers)
+                      if isinstance(self.pol, td_policy.NetworkPolicy)
+                      else [self.pol])
+        td_idx = [i for i, p in enumerate(layer_pols) if p.mode == "td"]
+        if td_idx:
+            specs = [td_policy.TDLayerSpec(
+                bits_a=layer_pols[i].bits_a, bits_w=layer_pols[i].bits_w,
+                n_chain=layer_pols[i].n_chain,
+                sigma_max=layer_pols[i].sigma_max,
+                vdd=layer_pols[i].vdd, p_x_one=measured,
+                w_bit_sparsity=self._wsp, m=layer_pols[i].m,
+                tdc_arch=layer_pols[i].tdc_arch,
+                techlib=layer_pols[i].techlib) for i in td_idx]
+            for i, p in zip(td_idx, self.resolver(specs)):
+                layer_pols[i] = p
+            solved = (td_policy.NetworkPolicy(
+                          layers=tuple(layer_pols), top=self.pol.top,
+                          attn=self.pol.attn)
+                      if isinstance(self.pol, td_policy.NetworkPolicy)
+                      else layer_pols[0])
+            self._ops = common.td_policy_ops(solved)
+            self.pol = solved
+        pol0 = common.pol_at(self.pol, 0)
+        if self.meter is not None:
+            # quant-mode meters re-price at the measured statistics too
+            # (their policy carries no solved operating point of its own)
+            self.meter.set_policy(
+                pol0 if td_idx else pol0.replace(p_x_one=measured,
+                                                 w_bit_sparsity=self._wsp),
+                sigma_max=(None if pol0.sigma_max is not None else 2.0))
+        self.drift.rearm(measured)
+        self.adaptations += 1
+
+    # ------------------------------------------------------------------
+    # chaos-schedule consumption
+    # ------------------------------------------------------------------
+    def _apply_faults(self, events) -> None:
+        for ev in events:
+            self.fault_log.append((self.steps_run, ev.kind))
+            if ev.kind == "preempt":
+                raise ft.Preemption(f"chaos preempt at step {self.steps_run}")
+            if ev.kind == "stall":
+                time.sleep(float(ev.params.get("duration_s", 0.05)))
+            elif ev.kind == "drift":
+                self._drift_gain = float(ev.params.get("factor", 1.0))
+            elif ev.kind == "explorer_outage":
+                self.explorer_up = bool(ev.params.get("up", False))
+                if self.on_outage is not None:
+                    self.on_outage(self.explorer_up)
+            # "ckpt_corrupt" targets the training half; logged, no-op here
 
     def warmup(self) -> None:
         """Compile the prefill/insert/decode programs by running one dummy
@@ -270,6 +372,8 @@ class ContinuousBatchingEngine:
         self.watchdog = ft.StepWatchdog()
         if self.meter is not None:
             self.meter._usage.clear()
+        if self.drift is not None:
+            self.drift.rearm(self.drift.anchor)
         self._reset_device_state()
 
     # ------------------------------------------------------------------
@@ -290,11 +394,15 @@ class ContinuousBatchingEngine:
         return len(inflight)
 
     def run(self, requests=None, retry_policy: ft.RetryPolicy | None = None,
-            inject=None) -> dict:
+            inject=None, schedule: "ft.FaultSchedule | None" = None) -> dict:
         """Drive the loop to completion under retry protection.
 
         `inject(step_index)` (tests/bench) may raise `ft.Preemption` to
-        simulate node loss; the engine drains and re-admits.
+        simulate node loss; the engine drains and re-admits.  `schedule`
+        is a deterministic `ft.FaultSchedule` consumed fire-once per step:
+        preemptions drain-and-retry, stalls sleep (the watchdog flags
+        them), drift events scale the measured activity, explorer outages
+        toggle `explorer_up`/`on_outage`.
         """
         if requests is not None:
             self.submit_all(requests)
@@ -302,6 +410,8 @@ class ContinuousBatchingEngine:
 
         def body():
             while True:
+                if schedule is not None:
+                    self._apply_faults(schedule.pop(self.steps_run))
                 if inject is not None:
                     inject(self.steps_run)
                 if not self.step():
@@ -349,9 +459,15 @@ class ContinuousBatchingEngine:
                "ms_per_token_p50": float(np.median(p50)) if p50 else 0.0,
                "ms_per_token_p99": (float(np.percentile(p99, 99))
                                     if p99 else 0.0),
+               "adaptations": self.adaptations,
+               "faults": [{"step": s, "kind": k} for s, k in self.fault_log],
                "per_request": rows}
+        if self.drift is not None:
+            out["p_x_one_measured"] = self.drift.value
+            out["drift_excursions"] = self.drift.excursions
         if self.meter is not None:
             out["energy_j_total"] = self.meter.run_total_energy()
             out["j_per_token"] = (out["energy_j_total"] /
                                   max(1, self.meter.run_total_tokens()))
+            out["meter_policy_swaps"] = self.meter.policy_swaps
         return out

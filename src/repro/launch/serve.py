@@ -110,12 +110,13 @@ def synthetic_requests(n: int, prompt_len: int, gen: int,
 
 
 def run_scheduler(arch, streams: int, prompt_len: int, gen: int,
-                  capacity: int, seed: int = 0):
+                  capacity: int, seed: int = 0, adapt: bool = False):
     """Continuous-batching serve: ragged streams through the scheduler."""
     # independent key streams: the engine consumes the params seed, the
     # prompt sampler its own fold — mirrors run()'s per-consumer split
     eng = ContinuousBatchingEngine(arch, capacity=capacity,
-                                   s_cache=prompt_len + gen, seed=seed)
+                                   s_cache=prompt_len + gen, seed=seed,
+                                   adapt=adapt)
     reqs = synthetic_requests(streams, prompt_len, gen, arch.model.vocab,
                               seed=seed + 1)
     t_arrival = time.monotonic()
@@ -134,6 +135,10 @@ def run_scheduler(arch, streams: int, prompt_len: int, gen: int,
         print(f"[serve/sched] TD energy: {out['energy_j_total']:.3e} J "
               f"total, {out['j_per_token']:.3e} J/token "
               f"({eng.meter.domain} domain, per-request rows available)")
+    if adapt:
+        print(f"[serve/sched] drift: p_x_one={out['p_x_one_measured']:.3f} "
+              f"(policy anchor {common.pol_at(eng.pol, 0).p_x_one:.3f}), "
+              f"{out['adaptations']} adaptation(s)")
     return out
 
 
@@ -155,6 +160,10 @@ def main():
                     help="scheduler mode: number of synthetic streams")
     ap.add_argument("--capacity", type=int, default=4,
                     help="scheduler mode: concurrent KV-cache slots")
+    ap.add_argument("--adapt", action="store_true",
+                    help="scheduler mode: measure activation activity in "
+                    "the decode step and hot-swap the TD operating point "
+                    "(policy + energy rate) when it drifts")
     ap.add_argument("--td", default=None,
                     choices=[None, "precise", "quant", "td"])
     ap.add_argument("--td-per-layer", default=None,
@@ -170,7 +179,7 @@ def main():
                                 td_attn=args.td_attn)
     if args.scheduler:
         run_scheduler(arch, args.streams, args.prompt_len, args.gen,
-                      args.capacity, seed=args.seed)
+                      args.capacity, seed=args.seed, adapt=args.adapt)
     else:
         run(arch, args.batch, args.prompt_len, args.gen, seed=args.seed)
 

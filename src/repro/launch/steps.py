@@ -103,6 +103,35 @@ def build_serve_step(arch: ArchConfig, shape: ShapeCfg):
     return serve_step
 
 
+def build_adaptive_serve_step(arch: ArchConfig, shape: ShapeCfg):
+    """Drift-adaptive decode step: `build_serve_step` plus (a) the policy's
+    (sigma_chain, tdc_q) rebound to a runtime ``ops`` operand
+    (`common.runtime_td_policy` — hot-swappable with zero recompiles) and
+    (b) a fused running estimate of the activation bit density
+    (`ft.drift.measure_p_x_one` over this step's token embeddings), the
+    operating-point statistic the drift detector watches.  Returns
+    ``(next_tok, new_state, p_x_one)``."""
+    from repro.ft import drift as ft_drift
+
+    cfg = arch.model
+    pol = common.resolve_arch_policy(arch)
+    api = get_api(cfg)
+    compute_dt = DTYPES[arch.train.compute_dtype]
+    bits_a = common.pol_at(pol, 0).bits_a
+
+    def serve_step(params, tok, state, ops):
+        p_c = common.cast_tree(params, compute_dt)
+        pol_rt = common.runtime_td_policy(pol, ops)
+        logits, new_state = api["decode_step"](p_c, tok, state, cfg, pol_rt)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        px = ft_drift.measure_p_x_one(
+            common.embed(params["embed"], tok[:, 0]).astype(jnp.float32),
+            bits_a)
+        return next_tok, new_state, px
+
+    return serve_step
+
+
 def build_ragged_prefill_step(arch: ArchConfig, prompt_pad: int):
     """Bucketed prefill for the continuous-batching serve engine.
 

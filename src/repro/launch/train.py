@@ -22,7 +22,7 @@ from repro.checkpoint import ckpt
 from repro.configs.base import ShapeCfg
 from repro.data.pipeline import PrefetchLoader
 from repro.data.synthetic import DataCfg, SyntheticStream
-from repro.launch import ft
+from repro import ft
 from repro.launch import td_cli
 from repro.launch import steps as steps_lib
 from repro.models import get_api
@@ -38,9 +38,15 @@ def build_session(arch, shape, ckpt_dir, seed=0):
     opt_state = adamw.init_opt_state(params)
     start_step = 0
     if ckpt_dir and ckpt.latest_steps(ckpt_dir):
-        start_step, (params, opt_state), _ = ckpt.restore(
-            ckpt_dir, (params, opt_state))
-        print(f"[train] resumed from step {start_step}")
+        try:
+            start_step, (params, opt_state), _ = ckpt.restore(
+                ckpt_dir, (params, opt_state))
+            print(f"[train] resumed from step {start_step}")
+        except ckpt.CorruptCheckpoint as e:
+            # every published step failed verification: the run is still
+            # recoverable — from scratch (the freshly initialized params
+            # above), which beats dying with data on disk we can't trust
+            print(f"[train] no intact checkpoint, cold start: {e}")
     train_step = jax.jit(steps_lib.build_train_step(arch, shape),
                          donate_argnums=(0, 1))
     return params, opt_state, train_step, start_step
@@ -48,10 +54,26 @@ def build_session(arch, shape, ckpt_dir, seed=0):
 
 def run(arch, shape: ShapeCfg, steps: int, ckpt_dir: str | None,
         ckpt_every: int = 50, log_every: int = 10, seed: int = 0,
-        fail_at: int | None = None):
+        fail_at: int | None = None,
+        schedule: "ft.FaultSchedule | None" = None,
+        record: dict | None = None):
+    """One train session from the latest checkpoint to `steps`.
+
+    `schedule` injects a deterministic `ft.FaultSchedule` (fire-once):
+    preemptions raise through to the caller's `ft.run_with_retries`,
+    stalls sleep through a step (watchdog food), ``ckpt_corrupt`` events
+    corrupt the newest published checkpoint on disk — the restore-fallback
+    path recovers from the last intact step on the next restart.
+    `record`, when given, is filled in place (``starts``: the resume step
+    of each session entry; ``faults``: (step, kind) fired) so chaos
+    benches can check recovery against a fault-free oracle.
+    """
     cfg = arch.model
     params, opt_state, train_step, start = build_session(
         arch, shape, ckpt_dir, seed)
+    if record is not None:
+        record.setdefault("starts", []).append(start)
+        record.setdefault("faults", [])
     stream = SyntheticStream(
         DataCfg(vocab=cfg.vocab, seq_len=shape.seq_len,
                 global_batch=shape.global_batch, seed=seed))
@@ -73,6 +95,25 @@ def run(arch, shape: ShapeCfg, steps: int, ckpt_dir: str | None,
                     batch["labels"] = batch["labels"][:, n_vis:]
             if fail_at is not None and i == fail_at:
                 raise ft.Preemption(f"injected failure at step {i}")
+            if schedule is not None:
+                for ev in schedule.pop(i):
+                    if record is not None:
+                        record["faults"].append((i, ev.kind))
+                    if ev.kind == "stall":
+                        time.sleep(float(ev.params.get("duration_s", 0.05)))
+                    elif ev.kind == "ckpt_corrupt" and ckpt_dir:
+                        # storage fault against the NEWEST published step;
+                        # wait out an in-flight save so the corruption
+                        # lands on a complete checkpoint (deterministic)
+                        if pending_save is not None:
+                            pending_save.join()
+                            pending_save = None
+                        ft.corrupt_checkpoint(
+                            ckpt_dir, ev.params.get("mode", "bitflip"),
+                            seed=int(ev.params.get("seed", 0)))
+                    elif ev.kind == "preempt":
+                        raise ft.Preemption(f"chaos preempt at step {i}")
+                    # drift / explorer_outage target the serving half
             watchdog.start(i)
             params, opt_state, metrics = train_step(
                 params, opt_state, batch, jnp.uint32(i))

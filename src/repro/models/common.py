@@ -113,6 +113,42 @@ def resolve_arch_policy(arch) -> td_policy.TDPolicy | td_policy.NetworkPolicy:
     return base
 
 
+def runtime_td_policy(pol, ops: jnp.ndarray):
+    """Rebind every "td"-mode layer policy's (sigma_chain, tdc_q) to the
+    runtime operand array ``ops`` — the zero-recompile hot-swap hook of the
+    drift-adaptive serve step.
+
+    ``ops`` is ``(2,)`` f32 ``[sigma, q]`` applied to every TD layer, or
+    ``(L, 2)`` for per-layer operating points.  Both ride into the Pallas
+    kernel as traced SMEM operands (`tdsim.td_linear`), so feeding a new
+    ``ops`` value re-runs the SAME compiled program at the new operating
+    point.  Non-"td" policies (precise/quant) pass through untouched; a
+    NetworkPolicy's `top`/`attn` are left as solved (the hot path the
+    drift loop re-resolves is the per-layer matmuls)."""
+    ops = jnp.asarray(ops, jnp.float32)
+
+    def bind(p: td_policy.TDPolicy, row) -> td_policy.TDPolicy:
+        if p.mode != "td":
+            return p
+        return p.replace(sigma_chain=row[0], tdc_q=row[1])
+
+    if isinstance(pol, td_policy.NetworkPolicy):
+        rows = [ops[i] if ops.ndim == 2 else ops for i in range(len(pol))]
+        return dataclasses.replace(
+            pol, layers=tuple(bind(p, r)
+                              for p, r in zip(pol.layers, rows)))
+    return bind(pol, ops[0] if ops.ndim == 2 else ops)
+
+
+def td_policy_ops(pol) -> jnp.ndarray:
+    """The ``(L, 2)`` (or ``(2,)`` for a plain policy) runtime operand
+    array of a SOLVED policy — the value `runtime_td_policy` rebinds."""
+    if isinstance(pol, td_policy.NetworkPolicy):
+        return jnp.asarray([[p.sigma_chain, p.tdc_q] for p in pol.layers],
+                           jnp.float32)
+    return jnp.asarray([pol.sigma_chain, pol.tdc_q], jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # Sharding constraints (no-ops outside a mesh context)
 # ---------------------------------------------------------------------------

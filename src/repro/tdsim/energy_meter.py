@@ -51,8 +51,10 @@ def account(shapes: list[MatmulShape], pol: TDPolicy, domain: str = "td",
     scenario grid-argmin supply), `pol.m`/`pol.tdc_arch` (the periphery the
     solve assumed; `m=` overrides), `pol.techlib` (the corner-resolved
     technology library the (R, q) solve ran against -- so --corner reports
-    match the physics the policy actually executes) and, when `sigma_max`
-    is not given, the budget the policy was solved for (`pol.sigma_max`;
+    match the physics the policy actually executes), the input statistics
+    the solve assumed (`pol.p_x_one`/`pol.w_bit_sparsity` -- drift-adapted
+    policies re-price at the measured activity) and, when `sigma_max` is
+    not given, the budget the policy was solved for (`pol.sigma_max`;
     exact regime when the policy carries none).
     """
     if sigma_max is None:
@@ -60,6 +62,7 @@ def account(shapes: list[MatmulShape], pol: TDPolicy, domain: str = "td",
     s_max = (design_space.sigma_exact() if sigma_max is None else sigma_max)
     m = pol.m if m is None else m
     kw = {"tdc_arch": pol.tdc_arch} if domain == "td" else {}
+    kw.update(p_x_one=pol.p_x_one, w_bit_sparsity=pol.w_bit_sparsity)
     per_layer = {}
     tot_macs = 0.0
     tot_e = 0.0
@@ -109,9 +112,12 @@ def compare_domains(shapes: list[MatmulShape], pol: TDPolicy,
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class RequestUsage:
-    """Token tally for one in-flight request."""
+    """Token + energy tally for one in-flight request.  ``energy_j`` is
+    banked incrementally at the rate in force when each token was
+    processed, so a mid-run policy hot-swap re-prices only the FUTURE."""
     prefill_tokens: int = 0
     decode_tokens: int = 0
+    energy_j: float = 0.0
 
     @property
     def total_tokens(self) -> int:
@@ -122,37 +128,59 @@ class RequestMeter:
     """Per-request TD energy accumulation for the serving engine.
 
     `account()` prices one processed token for the model/policy; the meter
-    multiplies that rate by each request's own token tally (prompt tokens
+    banks that rate against each request's own token tally (prompt tokens
     processed at prefill + generated tokens), so the serve loop gets
     J/token PER REQUEST rather than per run.  By construction the sum of
-    per-request energies equals `run_total_energy()` (= rate * total
-    tokens), which the serving tests pin.
+    per-request energies equals `run_total_energy()` (which the serving
+    tests pin) -- under a fixed policy that is simply rate * total tokens.
+
+    `set_policy` re-prices the meter for a drift-adapted operating point:
+    energy already banked stays priced at the rate in force when it was
+    spent; only tokens processed AFTER the swap run at the new rate.
     """
 
     def __init__(self, shapes: list[MatmulShape], pol: TDPolicy,
                  domain: str = "td", sigma_max: float | None = None):
         self.domain = domain
-        self.per_token_report = account(shapes, pol, domain, sigma_max)
+        self._shapes = list(shapes)
+        self._usage: dict = {}
+        self.policy_swaps = 0
+        self.rate_history: list[float] = []
+        self.set_policy(pol, sigma_max)
+        self.policy_swaps = 0       # the initial pricing is not a swap
+
+    def set_policy(self, pol: TDPolicy,
+                   sigma_max: float | None = None) -> float:
+        """Re-price future tokens at `pol`'s operating point (drift
+        adaptation hot-swap).  Returns the new J/token rate."""
+        self.per_token_report = account(self._shapes, pol, self.domain,
+                                        sigma_max)
         self.e_token = self.per_token_report.total_energy_per_token
         self.macs_token = self.per_token_report.total_macs_per_token
-        self._usage: dict = {}
+        self.policy_swaps += 1
+        self.rate_history.append(self.e_token)
+        return self.e_token
 
     def _u(self, rid) -> RequestUsage:
         return self._usage.setdefault(rid, RequestUsage())
 
     def on_prefill(self, rid, n_tokens: int) -> None:
-        self._u(rid).prefill_tokens += int(n_tokens)
+        u = self._u(rid)
+        u.prefill_tokens += int(n_tokens)
+        u.energy_j += int(n_tokens) * self.e_token
 
     def on_decode(self, rid, n_tokens: int = 1) -> None:
-        self._u(rid).decode_tokens += int(n_tokens)
+        u = self._u(rid)
+        u.decode_tokens += int(n_tokens)
+        u.energy_j += int(n_tokens) * self.e_token
 
     def request_energy(self, rid) -> float:
         """Joules attributed to a request so far (prefill + decode)."""
-        return self._u(rid).total_tokens * self.e_token
+        return self._u(rid).energy_j
 
     def request_report(self, rid) -> dict:
         u = self._u(rid)
-        e = u.total_tokens * self.e_token
+        e = u.energy_j
         return {"request": rid, "domain": self.domain,
                 "prefill_tokens": u.prefill_tokens,
                 "decode_tokens": u.decode_tokens,
@@ -170,4 +198,4 @@ class RequestMeter:
         return sum(u.total_tokens for u in self._usage.values())
 
     def run_total_energy(self) -> float:
-        return self.run_total_tokens() * self.e_token
+        return sum(u.energy_j for u in self._usage.values())

@@ -54,6 +54,8 @@ class TDPolicy:
     m: int = C.M_DEFAULT         # delay-line parallelism the solve assumed
     tdc_arch: str = "hybrid"     # TDC architecture the solve assumed
     vdd: float = C.VDD_NOM       # operating supply the (R, q) solve assumed
+    p_x_one: float = C.P_X_ONE   # activation bit density the solve assumed
+    w_bit_sparsity: float = C.W_BIT_SPARSITY  # weight bit sparsity assumed
     sigma_max: float | None = None   # error budget the solve ran at
                                      # (None = exact regime / not solved)
     techlib: TechLib | None = None   # technology library the solve ran at
@@ -128,6 +130,8 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
                 tdc_q=int(res["tdc_q"][k]),
                 m=sp.m, tdc_arch=sp.tdc_arch,
                 vdd=float(vdd[k]),
+                p_x_one=float(p1[k]),
+                w_bit_sparsity=float(wsp[k]),
                 sigma_max=sp.sigma_max,
                 techlib=sp.techlib)
     return out  # type: ignore[return-value]

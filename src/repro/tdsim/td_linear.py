@@ -119,20 +119,22 @@ def _fq_matmul(x, w, s_a, s_w, bits_a: int, bits_w: int):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _td_matmul_ste(pol_static: TDPolicy, x, w, s_a, s_w, sigma, seed):
+def _td_matmul_ste(pol_static: TDPolicy, x, w, s_a, s_w, sigma, q, seed):
     """Pallas forward / fake-quant backward.  ``pol_static`` is the hashable
-    policy skeleton (sigma_chain stripped to 0.0); the live sigma rides in
-    as the traced ``sigma`` operand, the noise seed as uint32 ``seed``."""
+    policy skeleton (sigma_chain stripped to 0.0, tdc_q to 1); the live
+    sigma and TDC coarsening ride in as the traced ``sigma``/``q``
+    operands, the noise seed as uint32 ``seed`` — so a serving engine can
+    hot-swap the operating point without a recompile."""
     x_int = lsq.lsq_quantize_int(x, s_a, pol_static.bits_a, signed=True)
     w_int = lsq.lsq_quantize_int(w, s_w, pol_static.bits_w, signed=True)
-    pol = pol_static.replace(sigma_chain=sigma)
+    pol = pol_static.replace(sigma_chain=sigma, tdc_q=q)
     y_int = td_ops.td_vmm_seeded(x_int, w_int, pol, seed)
     y = y_int * (jnp.maximum(s_a, 1e-8) * jnp.maximum(s_w, 1e-8))
     return y.astype(jnp.result_type(x, w))
 
 
-def _td_matmul_ste_fwd(pol_static, x, w, s_a, s_w, sigma, seed):
-    y = _td_matmul_ste(pol_static, x, w, s_a, s_w, sigma, seed)
+def _td_matmul_ste_fwd(pol_static, x, w, s_a, s_w, sigma, q, seed):
+    y = _td_matmul_ste(pol_static, x, w, s_a, s_w, sigma, q, seed)
     return y, (x, w, s_a, s_w)
 
 
@@ -144,7 +146,7 @@ def _td_matmul_ste_bwd(pol_static, res, g):
         x, w, s_a, s_w)
     gx, gw, gsa, gsw = vjp(g.astype(jnp.result_type(x, w)))
     return (gx, gw, gsa, gsw, jnp.zeros((), jnp.float32),
-            np.zeros((), jax.dtypes.float0))
+            jnp.zeros((), jnp.float32), np.zeros((), jax.dtypes.float0))
 
 
 _td_matmul_ste.defvjp(_td_matmul_ste_fwd, _td_matmul_ste_bwd)
@@ -169,8 +171,9 @@ def td_matmul(x: jnp.ndarray, w: jnp.ndarray,
         key = jax.random.PRNGKey(0)
     seed = td_ref.derive_seed(key)
     sigma = jnp.asarray(pol.sigma_chain, jnp.float32)
-    pol_static = pol.replace(sigma_chain=0.0)
-    return _td_matmul_ste(pol_static, x, w, s_a, s_w, sigma, seed)
+    q = jnp.asarray(pol.tdc_q, jnp.float32)
+    pol_static = pol.replace(sigma_chain=0.0, tdc_q=1)
+    return _td_matmul_ste(pol_static, x, w, s_a, s_w, sigma, q, seed)
 
 
 def linear(params: dict, x: jnp.ndarray, pol: TDPolicy,

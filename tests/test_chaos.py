@@ -1,0 +1,340 @@
+"""Chaos/robustness layer: fault schedules, checkpoint integrity +
+fallback, async-save error propagation, backoff cap/jitter, explorer
+client degradation, drift detection/adaptation, scheduler-under-chaos.
+
+Pins the PR-9 semantics:
+  * `ft.FaultSchedule` fires each event exactly once (even across a
+    restart that skips the declared step), round-trips through JSON, and
+    generates bit-identically from a seed;
+  * `ckpt.restore()` verifies per-array sha256 digests and falls back to
+    the newest INTACT step under every declared corruption mode — an
+    EXPLICIT step never falls back;
+  * async `ckpt.save` failures re-raise on `wait()` AND on the next
+    `save()` into the same dir (nothing vanishes on a full disk);
+  * `ft.RetryPolicy` backoff is capped and its jitter seeded/bounded;
+  * `explore.request` against a dead server fails FAST with the typed
+    `ExplorerUnreachable` and `resolve_with_fallback` degrades to the
+    in-process grid;
+  * the drift estimator warms up, fires on a real excursion, rearms; the
+    adaptive engine hot-swaps (sigma, q) with ZERO decode recompiles.
+"""
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as cfgs
+from repro import ft
+from repro.checkpoint import ckpt
+from repro.configs.base import TDExecCfg
+from repro.core import explorer as explorer_mod
+from repro.launch import explore
+from repro.launch.scheduler import ContinuousBatchingEngine, Request
+from repro.tdsim import policy as td_policy
+
+
+# ---------------------------------------------------------------------------
+# fault schedules
+# ---------------------------------------------------------------------------
+class TestFaultSchedule:
+    def test_json_round_trip(self):
+        sched = ft.FaultSchedule([
+            ft.FaultEvent(3, "stall", {"duration_s": 0.1}),
+            ft.FaultEvent(5, "ckpt_corrupt", {"mode": "bitflip", "seed": 9}),
+            ft.FaultEvent(7, "preempt"),
+        ], seed=42)
+        back = ft.FaultSchedule.from_json(sched.to_json())
+        assert back.pending == sched.pending
+        assert back.seed == 42
+        assert back.to_json() == sched.to_json()
+
+    def test_pop_fires_once_and_catches_skipped(self):
+        sched = ft.FaultSchedule([ft.FaultEvent(2, "stall"),
+                                  ft.FaultEvent(4, "preempt")])
+        assert sched.pop(1) == []
+        # a restarted loop jumps straight to step 5: BOTH pending events
+        # at <= 5 fire now, exactly once
+        fired = sched.pop(5)
+        assert [ev.kind for ev in fired] == ["stall", "preempt"]
+        assert sched.pop(5) == []
+        assert sched.pending == []
+        assert [ev.kind for ev in sched.fired] == ["stall", "preempt"]
+
+    def test_generate_is_seed_deterministic(self):
+        a = ft.FaultSchedule.generate(seed=7, steps=50)
+        b = ft.FaultSchedule.generate(seed=7, steps=50)
+        c = ft.FaultSchedule.generate(seed=8, steps=50)
+        assert a.to_json() == b.to_json()
+        assert a.to_json() != c.to_json()
+        assert all(ev.kind in ft.CHAOS_KINDS for ev in a.pending)
+
+    def test_save_load(self, tmp_path):
+        sched = ft.FaultSchedule.generate(seed=3, steps=20)
+        p = sched.save(str(tmp_path / "sched.json"))
+        assert ft.FaultSchedule.load(p).to_json() == sched.to_json()
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            ft.FaultEvent(1, "meteor_strike")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity + fallback
+# ---------------------------------------------------------------------------
+def _tree(step: int) -> dict:
+    return {"w": np.full((8, 8), float(step), np.float32),
+            "b": np.arange(4, dtype=np.float32) + step}
+
+
+def _publish(d: str, steps=(1, 2)) -> None:
+    for s in steps:
+        ckpt.save(d, s, _tree(s), async_write=False)
+
+
+class TestRestoreUnderCorruption:
+    @pytest.mark.parametrize("mode", ["bitflip", "truncate", "rm_manifest"])
+    def test_corrupt_newest_falls_back(self, tmp_path, mode):
+        d = str(tmp_path)
+        _publish(d)
+        assert ft.corrupt_checkpoint(d, mode, seed=5) == 2
+        with pytest.raises(ckpt.CorruptCheckpoint):
+            ckpt.verify(d, 2)
+        step, tree, _ = ckpt.restore(d, _tree(0))
+        assert step == 1
+        np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+
+    def test_tmp_litter_is_invisible(self, tmp_path):
+        d = str(tmp_path)
+        _publish(d)
+        assert ft.corrupt_checkpoint(d, "tmp_litter") is None
+        assert ckpt.latest_steps(d) == [1, 2]     # the .tmp dir never counts
+        step, tree, _ = ckpt.restore(d, _tree(0))
+        assert step == 2
+        np.testing.assert_array_equal(tree["w"], _tree(2)["w"])
+
+    def test_all_corrupt_raises_not_garbage(self, tmp_path):
+        d = str(tmp_path)
+        _publish(d)
+        ft.corrupt_checkpoint(d, "truncate", step=1)
+        ft.corrupt_checkpoint(d, "bitflip", step=2, seed=1)
+        with pytest.raises(ckpt.CorruptCheckpoint, match="no intact"):
+            ckpt.restore(d, _tree(0))
+
+    def test_explicit_step_never_falls_back(self, tmp_path):
+        d = str(tmp_path)
+        _publish(d)
+        ft.corrupt_checkpoint(d, "bitflip", step=2, seed=7)
+        with pytest.raises(ckpt.CorruptCheckpoint):
+            ckpt.restore(d, _tree(0), step=2)
+
+    def test_intact_restore_still_verifies(self, tmp_path):
+        d = str(tmp_path)
+        _publish(d)
+        step, tree, _ = ckpt.restore(d, _tree(0))
+        assert step == 2
+        ckpt.verify(d, 1)
+        ckpt.verify(d, 2)
+
+
+class TestAsyncSaveErrors:
+    def _broken_savez(self, monkeypatch):
+        def boom(*a, **kw):
+            raise OSError(28, "No space left on device")
+        monkeypatch.setattr(ckpt.np, "savez", boom)
+
+    def test_wait_reraises_background_failure(self, tmp_path, monkeypatch):
+        self._broken_savez(monkeypatch)
+        h = ckpt.save(str(tmp_path), 1, _tree(1))
+        with pytest.raises(RuntimeError, match="step 1 failed") as ei:
+            h.wait()
+        assert isinstance(ei.value.__cause__, OSError)
+        h.wait()        # observed exactly once: second wait is clean
+
+    def test_unobserved_failure_surfaces_on_next_save(self, tmp_path,
+                                                      monkeypatch):
+        d = str(tmp_path)
+        self._broken_savez(monkeypatch)
+        h = ckpt.save(d, 1, _tree(1))       # nobody calls wait()
+        while not h.done():
+            time.sleep(0.005)
+        monkeypatch.undo()                  # disk "recovers"
+        with pytest.raises(RuntimeError, match="step 1 failed"):
+            ckpt.save(d, 2, _tree(2))
+        # after the failure is observed, saving works again
+        ckpt.save(d, 3, _tree(3)).wait()
+        assert ckpt.latest_steps(d) == [3]
+
+
+# ---------------------------------------------------------------------------
+# retry backoff: cap + seeded jitter
+# ---------------------------------------------------------------------------
+class TestRetryBackoff:
+    def test_max_backoff_caps_exponential(self):
+        pol = ft.RetryPolicy(max_restarts=6, backoff_s=1.0,
+                             max_backoff_s=4.0, jitter=0.0)
+        assert ft.backoff_delays(pol, 6) == [1.0, 2.0, 4.0, 4.0, 4.0, 4.0]
+
+    def test_jitter_bounded_and_seeded(self):
+        pol = ft.RetryPolicy(backoff_s=1.0, max_backoff_s=8.0,
+                             jitter=0.25, seed=13)
+        delays = ft.backoff_delays(pol, 4)
+        for base, d in zip([1.0, 2.0, 4.0, 8.0], delays):
+            assert base * 0.75 <= d <= base * 1.25
+            assert d != base            # jitter actually applied
+        # same seed replays, different seeds spread (anti-stampede)
+        assert ft.backoff_delays(pol, 4) == delays
+        other = ft.RetryPolicy(backoff_s=1.0, max_backoff_s=8.0,
+                               jitter=0.25, seed=14)
+        assert ft.backoff_delays(other, 4) != delays
+
+
+# ---------------------------------------------------------------------------
+# explorer client: fast typed failure + local degradation
+# ---------------------------------------------------------------------------
+class TestExplorerDegradation:
+    def test_dead_server_fails_fast_and_typed(self):
+        t0 = time.monotonic()
+        with pytest.raises(explore.ExplorerUnreachable) as ei:
+            explore.request({"op": "ping"}, host="127.0.0.1", port=1,
+                            connect_timeout=0.2, retries=1, backoff_s=0.0,
+                            retry_seed=0)
+        assert time.monotonic() - t0 < 5.0
+        # typed as a ConnectionError so ft.RETRYABLE / ResolverChain
+        # default filters catch it
+        assert isinstance(ei.value, ConnectionError)
+        assert any(issubclass(explore.ExplorerUnreachable, t)
+                   for t in ft.RETRYABLE)
+
+    def test_resolve_with_fallback_degrades_to_local(self):
+        specs = [td_policy.TDLayerSpec(bits_a=4, bits_w=4, n_chain=64,
+                                       sigma_max=2.0)]
+        before = explorer_mod.service().stats.fallback_resolves
+        pols, source = explore.resolve_with_fallback(
+            specs, host="127.0.0.1", port=1, connect_timeout=0.2,
+            retries=0, backoff_s=0.0, retry_seed=0)
+        assert source == "local"
+        assert explorer_mod.service().stats.fallback_resolves == before + 1
+        local = td_policy.solve_td_policies(specs)
+        assert (pols[0].redundancy, pols[0].tdc_q) == \
+            (local[0].redundancy, local[0].tdc_q)
+
+
+# ---------------------------------------------------------------------------
+# drift measurement + detection + degraded resolution
+# ---------------------------------------------------------------------------
+class TestDrift:
+    def test_measure_p_x_one_tracks_magnitude(self):
+        k = jnp.arange(512, dtype=jnp.float32).reshape(8, 64)
+        dense = measure = ft.measure_p_x_one(k / 511.0, bits=4)
+        sparse = ft.measure_p_x_one(jnp.where(k % 8 == 0, k, 0.0) / 511.0,
+                                    bits=4)
+        assert 0.0 < float(sparse) < float(dense) <= 1.0
+        # deterministic (pure function of the input)
+        assert float(measure) == float(ft.measure_p_x_one(k / 511.0, bits=4))
+
+    def test_weight_bit_sparsity_complements(self):
+        w = jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)),
+                        jnp.float32)
+        s = ft.weight_bit_sparsity(w, bits=4)
+        assert s == pytest.approx(1.0 - float(ft.measure_p_x_one(w, bits=4)))
+
+    def test_estimator_warmup_threshold_rearm(self):
+        est = ft.DriftEstimator(anchor=0.5, alpha=0.5, threshold=0.2,
+                                warmup=3)
+        # within band: never fires, even past warmup
+        assert not any(est.update(0.52) for _ in range(6))
+        # excursion: suppressed during (re)warmup, then fires
+        est.rearm(0.5)
+        fired = [est.update(0.1) for _ in range(6)]
+        assert not any(fired[:2])       # samples 1..2 < warmup
+        assert any(fired[2:])
+        assert est.excursions >= 1
+        # rearm at the NEW operating point: no refire on the old excursion
+        est.rearm(est.value)
+        assert not any(est.update(est.anchor) for _ in range(6))
+
+    def test_resolver_chain_degrades_and_recovers(self):
+        state = {"up": False}
+        seen = []
+
+        def primary(x):
+            if not state["up"]:
+                raise ConnectionRefusedError("explorer down")
+            return ("remote", x)
+
+        chain = ft.ResolverChain(primary, lambda x: ("local", x),
+                                 on_fallback=seen.append)
+        assert chain(1) == ("local", 1)
+        assert chain.degraded and chain.fallbacks == 1 and len(seen) == 1
+        state["up"] = True
+        assert chain(2) == ("remote", 2)
+        assert not chain.degraded       # outage over
+
+    def test_resolver_chain_data_errors_propagate(self):
+        def primary(x):
+            raise ValueError("bad spec")    # NOT an outage
+
+        chain = ft.ResolverChain(primary, lambda x: "local")
+        with pytest.raises(ValueError):
+            chain(1)
+        assert chain.fallbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler under a chaos schedule
+# ---------------------------------------------------------------------------
+def _reqs(n=4, plen=5, gen=6):
+    rng = np.random.default_rng(11)
+    return [Request(rid=i,
+                    prompt=rng.integers(3, 50, size=plen).astype(np.int32),
+                    max_new_tokens=gen)
+            for i in range(n)]
+
+
+class TestSchedulerChaos:
+    def test_schedule_parity_zero_loss(self):
+        arch = cfgs.get_smoke("qwen3-8b").replace(td=TDExecCfg(mode="quant"))
+        eng0 = ContinuousBatchingEngine(arch, capacity=2, s_cache=16,
+                                        seed=0, kv_block=8)
+        base = eng0.run(_reqs())
+        base_out = {rid: list(r.generated) for rid, r in eng0.done.items()}
+
+        sched = ft.FaultSchedule([
+            ft.FaultEvent(1, "stall", {"duration_s": 0.01}),
+            ft.FaultEvent(3, "preempt"),
+            ft.FaultEvent(5, "explorer_outage", {"up": False}),
+        ])
+        outages = []
+        eng = ContinuousBatchingEngine(arch, capacity=2, s_cache=16,
+                                       seed=0, params=eng0.params,
+                                       kv_block=8)
+        eng.on_outage = outages.append
+        out = eng.run(_reqs(), retry_policy=ft.RetryPolicy(backoff_s=0.0),
+                      schedule=sched)
+        assert out["requests"] == base["requests"] == 4     # zero lost
+        assert {rid: list(r.generated)
+                for rid, r in eng.done.items()} == base_out
+        assert {f["kind"] for f in out["faults"]} == \
+            {"stall", "preempt", "explorer_outage"}
+        assert sum(r.readmissions for r in eng.done.values()) >= 1
+        assert outages == [False] and not eng.explorer_up
+
+    def test_drift_excursion_adapts_without_recompile(self):
+        arch = cfgs.get_smoke("qwen3-8b").replace(td=TDExecCfg(mode="td"))
+        eng = ContinuousBatchingEngine(arch, capacity=2, s_cache=24,
+                                       seed=0, kv_block=8, adapt=True,
+                                       drift_threshold=0.1)
+        sched = ft.FaultSchedule([ft.FaultEvent(1, "drift",
+                                                {"factor": 0.5})])
+        rate0 = eng.meter.rate_history[0]
+        out = eng.run(_reqs(n=3, plen=4, gen=14),
+                      retry_policy=ft.RetryPolicy(backoff_s=0.0),
+                      schedule=sched)
+        assert out["requests"] == 3
+        assert out["adaptations"] >= 1
+        assert out["meter_policy_swaps"] >= 1
+        assert eng._decode._cache_size() == 1       # zero recompiles
+        # the sparser measured activity re-priced the meter downward
+        assert eng.meter.rate_history[-1] < rate0

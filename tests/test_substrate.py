@@ -163,8 +163,9 @@ class TestFaultTolerance:
         assert ft.run_with_retries(body) == "ok"   # default policy works
 
     def test_backoff_is_exponential(self, monkeypatch):
+        from repro.ft import retry as ft_retry
         sleeps = []
-        monkeypatch.setattr(ft.time, "sleep", sleeps.append)
+        monkeypatch.setattr(ft_retry.time, "sleep", sleeps.append)
         calls = []
 
         def body():
@@ -173,7 +174,7 @@ class TestFaultTolerance:
                 raise ft.Preemption("x")
             return "ok"
 
-        pol = ft.RetryPolicy(backoff_s=0.5)
+        pol = ft.RetryPolicy(backoff_s=0.5, jitter=0.0)
         assert ft.run_with_retries(body, pol) == "ok"
         assert sleeps == [0.5, 1.0, 2.0]   # base * 2^(restart-1)
 
