@@ -9,12 +9,12 @@ import sys
 import traceback
 
 from benchmarks import (bench_arch_energy, bench_attention, bench_chaos,
-                        bench_design_grid, bench_energy_exact,
-                        bench_energy_relaxed, bench_eta_esnr,
-                        bench_explorer, bench_noise_tolerance,
-                        bench_output_range, bench_roofline,
-                        bench_scenarios, bench_serving, bench_td_vmm,
-                        bench_tdc, bench_tdmac_cell,
+                        bench_design_grid, bench_drift_traces,
+                        bench_energy_exact, bench_energy_relaxed,
+                        bench_eta_esnr, bench_explorer,
+                        bench_noise_tolerance, bench_output_range,
+                        bench_roofline, bench_scenarios, bench_serving,
+                        bench_td_vmm, bench_tdc, bench_tdmac_cell,
                         bench_throughput_area)
 
 SUITES = {
@@ -33,6 +33,7 @@ SUITES = {
     "attention": bench_attention,
     "serving": bench_serving,
     "chaos": bench_chaos,
+    "drift": bench_drift_traces,
     "roofline": bench_roofline,
     "arch_energy": bench_arch_energy,
 }

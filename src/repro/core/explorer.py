@@ -224,6 +224,15 @@ class ExplorerService:
             self._grids.clear()
             self._points.clear()
 
+    def count_fallback(self) -> int:
+        """Record one remote resolve degraded to this process, under the
+        service lock -- the drift loop's staged rebuild threads and the
+        main step loop may both degrade concurrently, and a bare
+        ``stats.fallback_resolves += 1`` is a read-modify-write race."""
+        with self._lock:
+            self.stats.fallback_resolves += 1
+            return self.stats.fallback_resolves
+
     def _disk_path(self, key: str) -> str | None:
         return (os.path.join(self.cache_dir, key + ".npz")
                 if self.cache_dir else None)

@@ -28,18 +28,18 @@ promoted out of the old single-file `launch/ft.py`:
 `launch/ft.py` remains as a thin import shim for old call sites.
 """
 from repro.ft.chaos import (CHAOS_KINDS, CORRUPT_MODES, FaultEvent,
-                            FaultSchedule, corrupt_checkpoint,
-                            excursion_trace)
-from repro.ft.drift import (DriftEstimator, ResolverChain, measure_p_x_one,
-                            weight_bit_sparsity)
+                            FaultSchedule, TraceSegment, TrafficTrace,
+                            corrupt_checkpoint, excursion_trace)
+from repro.ft.drift import (DriftEstimator, ResolverChain, StagedRebuild,
+                            measure_p_x_one, weight_bit_sparsity)
 from repro.ft.retry import (RETRYABLE, Preemption, RetryPolicy,
                             backoff_delays, run_with_retries)
 from repro.ft.watchdog import StepWatchdog, WatchdogReport
 
 __all__ = [
     "CHAOS_KINDS", "CORRUPT_MODES", "FaultEvent", "FaultSchedule",
-    "corrupt_checkpoint", "excursion_trace",
-    "DriftEstimator", "ResolverChain", "measure_p_x_one",
+    "TraceSegment", "TrafficTrace", "corrupt_checkpoint", "excursion_trace",
+    "DriftEstimator", "ResolverChain", "StagedRebuild", "measure_p_x_one",
     "weight_bit_sparsity",
     "RETRYABLE", "Preemption", "RetryPolicy", "backoff_delays",
     "run_with_retries",

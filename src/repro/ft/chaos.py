@@ -229,3 +229,170 @@ def excursion_trace(seed: int, steps: int, base: float = 0.25,
     rng = np.random.default_rng(int(seed))
     walk = np.cumsum(rng.uniform(-shift, shift, size=int(steps)))
     return np.clip(base + walk, 0.05, 0.95)
+
+
+# ---------------------------------------------------------------------------
+# Traffic traces (multi-hour workload models for the drift-adaptive engine)
+# ---------------------------------------------------------------------------
+ACTIVITY_BOUNDS = (0.05, 4.0)    # multiplier on the measured p_x_one
+SPARSITY_BOUNDS = (0.0, 1.0)     # w_bit_sparsity of the traffic mix
+LOAD_BOUNDS = (0.05, 1.0)        # admission pressure (fraction of capacity)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSegment:
+    """One piecewise-constant stretch of traffic.
+
+    ``steps`` scheduler decode steps during which the workload runs at
+    ``activity`` (a MULTIPLIER on the measured activation bit density --
+    the same knob as the chaos ``drift`` event's ``factor``),
+    ``sparsity`` (the traffic mix's weight-bit-sparsity statistic fed to
+    the re-resolve) and ``load`` (admission pressure: the fraction of
+    free slots the scheduler may fill per step)."""
+    steps: int
+    activity: float = 1.0
+    sparsity: float | None = None    # None = keep the deployed statistic
+    load: float = 1.0
+
+    def __post_init__(self):
+        if int(self.steps) <= 0:
+            raise ValueError(f"segment needs steps >= 1, got {self.steps}")
+        lo, hi = ACTIVITY_BOUNDS
+        if not (lo <= float(self.activity) <= hi):
+            raise ValueError(f"activity {self.activity} outside {lo}..{hi}")
+        if self.sparsity is not None and not (
+                SPARSITY_BOUNDS[0] <= float(self.sparsity)
+                <= SPARSITY_BOUNDS[1]):
+            raise ValueError(f"sparsity {self.sparsity} outside 0..1")
+        if not (0.0 < float(self.load) <= LOAD_BOUNDS[1]):
+            raise ValueError(f"load {self.load} outside (0, 1]")
+
+
+class TrafficTrace:
+    """A deterministic multi-hour traffic model: ordered piecewise
+    activity/sparsity/load segments that replay bit-identically.
+
+    The first-class successor of `excursion_trace`: where the random walk
+    produced an anonymous per-step array, a trace is plain data -- seeded
+    generation (`generate`), exact JSON round-trip (`to_json` ->
+    `from_json`), and step-indexed lookup (`at(step)`; steps past the end
+    hold the final segment, so a serve run longer than the trace keeps its
+    last operating point).  `ContinuousBatchingEngine.run(trace=...)`
+    replays one through the drift-adaptation loop, and
+    `benchmarks/bench_drift_traces.py` archives the traces it gated under
+    ``artifacts/drift/``.
+    """
+
+    def __init__(self, segments, seed: int = 0):
+        self.seed = int(seed)
+        self.segments: tuple[TraceSegment, ...] = tuple(segments)
+        if not self.segments:
+            raise ValueError("a trace needs >= 1 segment")
+        starts = np.cumsum([0] + [int(s.steps) for s in self.segments])
+        self._starts = starts[:-1]
+        self.total_steps = int(starts[-1])
+
+    # -- step-indexed replay ----------------------------------------------
+    def segment_index(self, step: int) -> int:
+        if step < 0:
+            raise ValueError(f"step must be >= 0, got {step}")
+        return min(int(np.searchsorted(self._starts, step, side="right")) - 1,
+                   len(self.segments) - 1)
+
+    def at(self, step: int) -> TraceSegment:
+        """The segment in force at ``step`` (the tail segment persists
+        past ``total_steps``)."""
+        return self.segments[self.segment_index(step)]
+
+    def boundaries(self) -> list[tuple[int, int]]:
+        """Per-segment [start, end) step intervals -- contiguous, gapless,
+        monotonically covering [0, total_steps)."""
+        return [(int(s), int(s) + seg.steps)
+                for s, seg in zip(self._starts, self.segments)]
+
+    def activity_curve(self, steps: int | None = None) -> np.ndarray:
+        """Per-step activity multipliers (replayed, length ``steps``)."""
+        n = self.total_steps if steps is None else int(steps)
+        return np.asarray([self.at(t).activity for t in range(n)], np.float64)
+
+    # -- replay / persistence ---------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {"seed": self.seed,
+             "segments": [{"steps": s.steps, "activity": s.activity,
+                           "sparsity": s.sparsity, "load": s.load}
+                          for s in self.segments]},
+            indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TrafficTrace":
+        d = json.loads(text)
+        return cls([TraceSegment(int(s["steps"]),
+                                 float(s.get("activity", 1.0)),
+                                 (None if s.get("sparsity") is None
+                                  else float(s["sparsity"])),
+                                 float(s.get("load", 1.0)))
+                    for s in d.get("segments", [])],
+                   seed=int(d.get("seed", 0)))
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TrafficTrace":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, TrafficTrace)
+                and self.seed == other.seed
+                and self.segments == other.segments)
+
+    def __repr__(self) -> str:
+        return (f"TrafficTrace(seed={self.seed}, "
+                f"segments={len(self.segments)}, "
+                f"total_steps={self.total_steps})")
+
+    # -- seeded generation --------------------------------------------------
+    @classmethod
+    def generate(cls, seed: int, steps: int, n_segments: int = 6,
+                 activity_range=(0.4, 1.6), sparsity_range=(0.4, 0.9),
+                 load_range=(0.5, 1.0)) -> "TrafficTrace":
+        """A seeded random trace: ``n_segments`` piecewise segments whose
+        step counts partition [0, steps).  Same seed -> identical trace,
+        bit for bit (`random.Random`, like `FaultSchedule.generate`)."""
+        rng = random.Random(int(seed))
+        steps = max(1, int(steps))
+        n_segments = max(1, min(int(n_segments), steps))
+        # n_segments - 1 distinct interior cut points -> positive durations
+        cuts = sorted(rng.sample(range(1, steps), n_segments - 1)) \
+            if n_segments > 1 else []
+        edges = [0] + cuts + [steps]
+        segs = []
+        for a, b in zip(edges[:-1], edges[1:]):
+            segs.append(TraceSegment(
+                steps=b - a,
+                activity=round(rng.uniform(*activity_range), 4),
+                sparsity=round(rng.uniform(*sparsity_range), 4),
+                load=round(rng.uniform(*load_range), 4)))
+        return cls(segs, seed=seed)
+
+    @classmethod
+    def from_excursion(cls, seed: int, steps: int, segment: int = 16,
+                       base: float = 0.25, shift: float = 0.1
+                       ) -> "TrafficTrace":
+        """Bucket an `excursion_trace` random walk into piecewise segments:
+        each ``segment``-step bucket's mean activity, normalized by
+        ``base`` so it becomes the multiplier a trace carries."""
+        walk = excursion_trace(seed, steps, base=base, shift=shift)
+        lo, hi = ACTIVITY_BOUNDS
+        segs = []
+        for a in range(0, int(steps), int(segment)):
+            chunk = walk[a:a + int(segment)]
+            segs.append(TraceSegment(
+                steps=len(chunk),
+                activity=float(np.clip(chunk.mean() / base, lo, hi))))
+        return cls(segs, seed=seed)

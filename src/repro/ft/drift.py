@@ -31,6 +31,7 @@ loop:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable
 
 import jax.numpy as jnp
@@ -38,15 +39,31 @@ import jax.numpy as jnp
 from repro.quant import bitserial
 
 
-def measure_p_x_one(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+def measure_p_x_one(x: jnp.ndarray, bits: int = 4,
+                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Activation bit density of ``x`` under B-bit maxabs quantization:
     the fraction of ones across all offset-encoded bit planes (a scalar
-    f32).  Pure jnp -- jit/fuse freely inside the serve step."""
+    f32).  Pure jnp -- jit/fuse freely inside the serve step.
+
+    ``mask`` (optional, broadcastable to ``x.shape[0]``) selects which
+    leading-axis rows count: a continuous-batching engine passes its
+    occupancy mask so stale activations in recycled-but-free slots do not
+    pollute the measured statistic.  An all-zero mask returns 0.5 (the
+    uninformative prior) rather than NaN.
+    """
     qmax = 2.0 ** (bits - 1) - 1.0
     s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
     codes = jnp.clip(jnp.round(x / s), -(qmax + 1.0), qmax).astype(jnp.int32)
     planes = bitserial.bit_planes(bitserial.to_offset(codes, bits), bits)
-    return jnp.mean(planes.astype(jnp.float32))
+    planes = planes.astype(jnp.float32)      # (bits, *x.shape), LSB first
+    if mask is None:
+        return jnp.mean(planes)
+    m = jnp.reshape(mask.astype(jnp.float32), (-1,) + (1,) * (x.ndim - 1))
+    w = jnp.broadcast_to(m, x.shape)
+    tot = jnp.float32(bits) * jnp.sum(w)
+    return jnp.where(tot > 0,
+                     jnp.sum(planes * w[None, ...]) / jnp.maximum(tot, 1.0),
+                     jnp.float32(0.5))
 
 
 def weight_bit_sparsity(w: jnp.ndarray, bits: int = 4) -> float:
@@ -92,6 +109,65 @@ class DriftEstimator:
         self.anchor = float(anchor)
         self.value = None
         self.samples = 0
+
+
+class StagedRebuild:
+    """A policy rebuild running off-thread, to be installed at a later
+    step boundary.
+
+    The supply-spanning re-resolve (Vdd argmin over the scenario grid +
+    full per-layer policy solve + meter re-price) is too slow to run
+    inside a decode step, so the scheduler stages it: `StagedRebuild`
+    runs ``fn`` on a daemon thread and the engine polls at each step
+    boundary, installing the result atomically when ready.
+
+    Error contract -- the same as checkpoint `SaveHandle`: an exception
+    in the worker thread is captured, not printed-and-lost, and re-raised
+    exactly once (wrapped in RuntimeError with the original as __cause__)
+    on the next `poll()` / `wait()`.  A resolver failure inside the
+    rebuild thread therefore surfaces on the next decode step instead of
+    dying silently with the thread.
+    """
+
+    def __init__(self, fn: Callable[[], object], name: str = "staged-rebuild"):
+        self.result: object | None = None
+        self.error: BaseException | None = None
+        self._raised = False
+        self._thread = threading.Thread(target=self._run, args=(fn,),
+                                        name=name, daemon=True)
+        self._thread.start()
+
+    def _run(self, fn: Callable[[], object]) -> None:
+        try:
+            self.result = fn()
+        except BaseException as e:       # noqa: BLE001 -- re-raised on poll
+            self.error = e
+
+    @property
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def _surface(self) -> None:
+        if self.error is not None and not self._raised:
+            self._raised = True
+            raise RuntimeError(
+                f"staged rebuild '{self._thread.name}' failed: "
+                f"{self.error!r}") from self.error
+
+    def poll(self) -> object | None:
+        """Non-blocking: the result if the rebuild finished, else None.
+        Raises (once) if the rebuild thread died with an exception."""
+        if not self.done:
+            return None
+        self._surface()
+        return self.result
+
+    def wait(self, timeout: float | None = None) -> object | None:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("staged rebuild still running")
+        self._surface()
+        return self.result
 
 
 class ResolverChain:

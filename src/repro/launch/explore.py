@@ -138,7 +138,13 @@ def _resolve_payload(svc: explorer_mod.ExplorerService, req: dict) -> dict:
         specs = policy_mod.apply_scenario(
             specs, req["scenario"], req.get("corner"),
             minimize_vdd=bool(req.get("minimize_vdd", True)))
-    pols = policy_mod.solve_td_policies(specs)
+    if req.get("vdd_grid"):
+        # supply-spanning resolve: per-layer Vdd argmin at each spec's own
+        # input statistics before the (R, q) solve (drift re-resolve path)
+        pols = policy_mod.solve_td_policies_over_vdd(
+            specs, [float(v) for v in req["vdd_grid"]])
+    else:
+        pols = policy_mod.solve_td_policies(specs)
     return {"ok": True, "op": "resolve", "policies": [
         {"bits_a": p.bits_a, "bits_w": p.bits_w, "n_chain": p.n_chain,
          "redundancy": p.redundancy, "tdc_q": p.tdc_q,
@@ -278,16 +284,20 @@ def request(payload: dict, host: str = "127.0.0.1",
 
 def resolve_with_fallback(specs, host: str = "127.0.0.1",
                           port: int = DEFAULT_PORT,
-                          scenario=None, corner=None,
+                          scenario=None, corner=None, vdd_grid=None,
                           **request_kw) -> tuple[list, str]:
     """Resolve per-layer TD policies via the explorer server, degrading to
     the in-process cached grid when it is unreachable.
 
     ``specs`` is a list of `tdsim.policy.TDLayerSpec`.  Returns
     ``(policies, source)`` with source ``"remote"`` or ``"local"``; the
-    local path counts in `ExplorerStats.fallback_resolves`.  A reachable
-    server that REJECTS the query (``ok: false``) raises — that is a data
-    error, not an outage."""
+    local path counts in `ExplorerStats.fallback_resolves` (via the
+    lock-guarded `count_fallback` -- this may run inside a staged rebuild
+    thread concurrently with the serve loop).  ``vdd_grid`` requests the
+    supply-spanning resolve (per-layer Vdd argmin over that grid at each
+    spec's own statistics) on both the remote and the degraded path.  A
+    reachable server that REJECTS the query (``ok: false``) raises — that
+    is a data error, not an outage."""
     from repro.tdsim import policy as policy_mod
 
     payload = {"op": "resolve",
@@ -300,12 +310,17 @@ def resolve_with_fallback(specs, host: str = "127.0.0.1",
     if scenario is not None:
         payload["scenario"] = scenario
         payload["corner"] = corner
+    if vdd_grid is not None:
+        payload["vdd_grid"] = [float(v) for v in vdd_grid]
     try:
         resp = request(payload, host, port, **request_kw)
     except ExplorerUnreachable:
-        explorer_mod.service().stats.fallback_resolves += 1
+        explorer_mod.service().count_fallback()
         if scenario is not None:
             specs = policy_mod.apply_scenario(specs, scenario, corner)
+        if vdd_grid is not None:
+            return policy_mod.solve_td_policies_over_vdd(
+                specs, vdd_grid), "local"
         return policy_mod.solve_td_policies(specs), "local"
     if not resp.get("ok"):
         raise RuntimeError(f"explorer resolve failed: {resp.get('error')}")

@@ -31,14 +31,36 @@ asks for:
     deterministic `ft.FaultSchedule` (preemptions, stalls, drift
     excursions, explorer outages) — the chaos bench's injection path.
   * **Drift adaptation** (``adapt=True``) — the jitted decode step also
-    returns the measured activation bit density (`ft.drift`), smoothed by
-    a `DriftEstimator`; on a threshold crossing the engine re-resolves
-    the per-layer (R, q) policies at the MEASURED statistics through
-    `resolver` (default: the in-process explorer grid; a `ResolverChain`
-    degrades a dead explorer server to the local cache) and hot-swaps the
-    operating point: (sigma, q) are runtime operands of the SAME compiled
-    decode program (zero recompiles) and the energy meter re-prices
-    future tokens (`RequestMeter.set_policy`).
+    returns the measured activation bit density (`ft.drift`, masked to
+    OCCUPIED slots), smoothed by a `DriftEstimator`; on a threshold
+    crossing the engine adapts in TWO PHASES.  Phase 1 (synchronous, the
+    same decode step): re-resolve the per-layer (R, q) policies at the
+    MEASURED statistics through `resolver` (default: the in-process
+    explorer grid; a `ResolverChain` degrades a dead explorer server to
+    the local cache) and hot-swap (sigma, q) as runtime operands of the
+    SAME compiled decode program (zero recompiles), re-pricing the meter
+    forward-only.  Phase 2 (staged, ``supply_span=True``): a
+    `ft.StagedRebuild` worker re-resolves the full policy set SPANNING
+    the scenario grid's Vdd axis (`solve_td_policies_over_vdd` — per-
+    layer supply argmin at the measured statistics through the memoized
+    explorer) and pre-prices the meter off-thread; the engine polls at
+    each step boundary and installs (ops, policy, J/token rate)
+    atomically between decode steps — still zero recompiles (Vdd never
+    enters the compiled program; it is physics pricing + the solve's
+    operating point), zero dropped requests, and a worker exception
+    surfaces on the next step (`StagedRebuild.poll`, the checkpoint
+    `SaveHandle` contract).  Every install lands in ``swap_log``;
+    replaying that log through a second engine via ``scripted_swaps``
+    (drift detection off, same compiled program) must reproduce greedy
+    outputs bit-identically — the swap-parity oracle the drift bench
+    gates.
+  * **Traffic traces** (``run(trace=...)``) — a seeded `ft.TrafficTrace`
+    drives the loop through multi-hour workload excursions: each
+    segment's ``activity`` scales the measured bit density (the chaos
+    ``drift`` event knob), ``sparsity`` overrides the weight-sparsity
+    statistic fed to re-resolves, and ``load`` throttles admissions to a
+    fraction of capacity.  Deterministic replay: same trace, same
+    outputs.
 
 Scope: decoder-family, pure-attention, token-only models (the bucketed
 prefill relies on causal masking to keep pad junk out of the prefix;
@@ -114,7 +136,9 @@ class ContinuousBatchingEngine:
                  meter_domain: str = "td", kv_block: int = 64,
                  continuous: bool = True, clock=time.monotonic,
                  adapt: bool = False, drift_threshold: float = 0.2,
-                 resolver=None):
+                 resolver=None, supply_span: bool = True,
+                 supply_resolver=None, vdd_grid=None,
+                 scripted_swaps=None):
         cfg = arch.model
         if cfg.family != "decoder":
             raise ValueError("scheduler requires a decoder-family model")
@@ -177,6 +201,12 @@ class ContinuousBatchingEngine:
         self._ops = common.td_policy_ops(self.pol)
         self.resolver = (td_policy.solve_td_policies if resolver is None
                          else resolver)
+        self.supply_span = bool(supply_span)
+        self.vdd_grid = vdd_grid     # None = the paper's supply grid
+        self.supply_resolver = (
+            supply_resolver if supply_resolver is not None
+            else lambda specs: td_policy.solve_td_policies_over_vdd(
+                specs, self.vdd_grid))
         self.drift = (ft.DriftEstimator(anchor=pol0.p_x_one,
                                         threshold=drift_threshold)
                       if adapt else None)
@@ -187,6 +217,26 @@ class ContinuousBatchingEngine:
         self.explorer_up = True
         self.on_outage = None        # callable(up: bool), wired by benches
         self.fault_log: list = []
+
+        # staged supply swap + trace-replay state
+        self._staged: ft.StagedRebuild | None = None
+        self._adapt_gen = 0          # bumps per excursion; staleness check
+        self._staged_gen = -1        # generation the in-flight rebuild saw
+        self._last_measured: tuple[float, float] | None = None
+        self.swap_log: list[dict] = []   # installs: step / kind / ops / vdds
+        self.supply_spans = 0            # staged installs that moved a Vdd
+        self.staged_installs = 0
+        self.trace: "ft.TrafficTrace | None" = None
+        # scripted_swaps: the swap-parity oracle. A recorded swap_log (or
+        # [(step, ops)] pairs) replayed verbatim at step boundaries with
+        # drift DETECTION disabled — the same compiled adaptive program,
+        # only the swap machinery differs, so greedy outputs must match
+        # the live run bit for bit.
+        self._scripted = None
+        if scripted_swaps is not None:
+            ss = [(int(e["step"]), e["ops"]) if isinstance(e, dict)
+                  else (int(e[0]), e[1]) for e in scripted_swaps]
+            self._scripted = deque(sorted(ss, key=lambda e: e[0]))
 
         self.queue: deque[Request] = deque()
         self.slots = [Slot(i) for i in range(self.capacity)]
@@ -269,18 +319,36 @@ class ContinuousBatchingEngine:
 
     def step(self) -> bool:
         """One scheduler tick.  Returns False when no work remains."""
+        # staged supply swaps and scripted (oracle) swaps install HERE, at
+        # the step boundary: the decode below is the first to see new ops
+        self._poll_staged()
+        if self._scripted is not None:
+            while self._scripted and self._scripted[0][0] <= self.steps_run:
+                _, ops = self._scripted.popleft()
+                self._ops = jnp.asarray(ops, jnp.float32)
+        seg = self.trace.at(self.steps_run) if self.trace is not None \
+            else None
         if self.continuous or not self.active:
+            budget = self.capacity if seg is None else \
+                max(1, int(np.ceil(seg.load * self.capacity)))
             for slot in self.slots:
+                if budget <= 0:
+                    break
                 if slot.free and self.queue:
                     self._admit(slot)
                     self._retire_or_keep(slot)   # max_new_tokens == 1
+                    budget -= 1
         active = self.active
         if not active:
             return bool(self.queue)
         self.watchdog.start(self.steps_run)
         if self.adapt:
+            occupancy = np.zeros((self.capacity,), np.float32)
+            for s in active:
+                occupancy[s.index] = 1.0
             self._tok, self._state, px = self._decode(
-                self.params, self._tok, self._state, self._ops)
+                self.params, self._tok, self._state, self._ops,
+                jnp.asarray(occupancy))
         else:
             px = None
             self._tok, self._state = self._decode(self.params, self._tok,
@@ -293,51 +361,140 @@ class ContinuousBatchingEngine:
         for slot in active:
             self._record_token(slot.request, int(toks[slot.index, 0]), now)
             self._retire_or_keep(slot)
-        if px is not None and self.drift.update(float(px) * self._drift_gain):
-            self._readapt()
+        if px is not None and self._scripted is None:
+            gain = self._drift_gain * (seg.activity if seg is not None
+                                       else 1.0)
+            if self.drift.update(float(px) * gain):
+                self._readapt()
         return bool(self.queue or self.active)
 
     # ------------------------------------------------------------------
     # drift adaptation: re-resolve at the measured operating point
     # ------------------------------------------------------------------
+    def _measured_wsp(self) -> float:
+        """Weight-sparsity statistic for re-resolves: the active trace
+        segment's traffic mix when it declares one, else the one-shot
+        measurement from the deployed params."""
+        if self.trace is not None:
+            seg = self.trace.at(self.steps_run)
+            if seg.sparsity is not None:
+                return float(seg.sparsity)
+        return self._wsp
+
+    def _td_specs(self, measured: float, wsp: float) -> list:
+        """Per-TD-layer re-resolve questions at the measured statistics
+        (each layer keeps its own budget/shape/arch/techlib/vdd)."""
+        return [td_policy.TDLayerSpec(
+                    bits_a=p.bits_a, bits_w=p.bits_w, n_chain=p.n_chain,
+                    sigma_max=p.sigma_max, vdd=p.vdd, p_x_one=measured,
+                    w_bit_sparsity=wsp, m=p.m, tdc_arch=p.tdc_arch,
+                    techlib=p.techlib)
+                for p in (common.pol_at(self.pol, i)
+                          for i in common.td_layer_indices(self.pol))]
+
+    @staticmethod
+    def _td_vdds(pol) -> tuple:
+        return tuple(common.pol_at(pol, i).vdd
+                     for i in common.td_layer_indices(pol))
+
+    def _meter_sigma(self):
+        pol0 = common.pol_at(self.pol, 0)
+        return None if pol0.sigma_max is not None else 2.0
+
     def _readapt(self) -> None:
         """The smoothed activity left the band the current policy was
-        priced for: re-resolve every TD layer at the MEASURED statistics
-        and hot-swap (sigma, q) as runtime operands + the meter's J/token
-        rate — no recompile (the decode program is unchanged)."""
+        priced for — adapt in two phases.  Phase 1, HERE, synchronously:
+        re-resolve every TD layer at the MEASURED statistics (supply
+        unchanged) and hot-swap (sigma, q) as runtime operands + the
+        meter's J/token rate — no recompile (the decode program is
+        unchanged).  Phase 2, staged: kick off the supply-spanning full
+        rebuild on a worker thread; `_poll_staged` installs it at a later
+        step boundary."""
         measured = float(self.drift.value)
-        layer_pols = (list(self.pol.layers)
-                      if isinstance(self.pol, td_policy.NetworkPolicy)
-                      else [self.pol])
-        td_idx = [i for i, p in enumerate(layer_pols) if p.mode == "td"]
-        if td_idx:
-            specs = [td_policy.TDLayerSpec(
-                bits_a=layer_pols[i].bits_a, bits_w=layer_pols[i].bits_w,
-                n_chain=layer_pols[i].n_chain,
-                sigma_max=layer_pols[i].sigma_max,
-                vdd=layer_pols[i].vdd, p_x_one=measured,
-                w_bit_sparsity=self._wsp, m=layer_pols[i].m,
-                tdc_arch=layer_pols[i].tdc_arch,
-                techlib=layer_pols[i].techlib) for i in td_idx]
-            for i, p in zip(td_idx, self.resolver(specs)):
-                layer_pols[i] = p
-            solved = (td_policy.NetworkPolicy(
-                          layers=tuple(layer_pols), top=self.pol.top,
-                          attn=self.pol.attn)
-                      if isinstance(self.pol, td_policy.NetworkPolicy)
-                      else layer_pols[0])
-            self._ops = common.td_policy_ops(solved)
-            self.pol = solved
+        wsp = self._measured_wsp()
+        specs = self._td_specs(measured, wsp)
+        if specs:
+            self.pol = common.replace_td_layers(self.pol,
+                                                self.resolver(specs))
+            self._ops = common.td_policy_ops(self.pol)
+            self.swap_log.append({"step": self.steps_run, "kind": "hot",
+                                  "ops": np.asarray(self._ops),
+                                  "vdds": self._td_vdds(self.pol)})
         pol0 = common.pol_at(self.pol, 0)
         if self.meter is not None:
             # quant-mode meters re-price at the measured statistics too
             # (their policy carries no solved operating point of its own)
             self.meter.set_policy(
-                pol0 if td_idx else pol0.replace(p_x_one=measured,
-                                                 w_bit_sparsity=self._wsp),
-                sigma_max=(None if pol0.sigma_max is not None else 2.0))
+                pol0 if specs else pol0.replace(p_x_one=measured,
+                                                w_bit_sparsity=wsp),
+                sigma_max=self._meter_sigma())
         self.drift.rearm(measured)
         self.adaptations += 1
+        self._adapt_gen += 1
+        self._last_measured = (measured, wsp)
+        if specs and self.supply_span:
+            self._launch_staged(measured, wsp)
+
+    # ------------------------------------------------------------------
+    # staged supply swap (phase 2)
+    # ------------------------------------------------------------------
+    def _launch_staged(self, measured: float, wsp: float) -> None:
+        """Start the supply-spanning rebuild off-thread: per-layer Vdd
+        argmin over the grid at the measured statistics, full policy
+        solve, and the meter re-price — everything expensive happens on
+        the worker; the install is a pointer swap at a step boundary.  At
+        most one rebuild is in flight (a newer excursion re-arms the
+        detector and will stage again after this one lands)."""
+        if self._staged is not None:
+            return
+        self._staged_gen = self._adapt_gen
+        base_pol = self.pol
+        resolver = self.supply_resolver
+        specs = self._td_specs(measured, wsp)
+        meter = self.meter
+        sigma = self._meter_sigma()
+
+        def rebuild():
+            solved = common.replace_td_layers(base_pol, resolver(specs))
+            ops = np.asarray(common.td_policy_ops(solved))
+            report = (meter.price(common.pol_at(solved, 0), sigma_max=sigma)
+                      if meter is not None else None)
+            return solved, ops, report
+
+        self._staged = ft.StagedRebuild(
+            rebuild, name=f"supply-rebuild@{self.steps_run}")
+
+    def _poll_staged(self) -> None:
+        """Install a finished staged rebuild (step boundary: the next
+        decode is the first to run at the new operating point).  A worker
+        exception re-raises HERE, once — the `SaveHandle` contract — so a
+        resolver that died inside the thread fails the run loudly instead
+        of silently keeping the stale supply."""
+        if self._staged is None or not self._staged.done:
+            return
+        staged, self._staged = self._staged, None
+        res = staged.poll()        # raises once on worker failure
+        if res is None:
+            return
+        if self._staged_gen != self._adapt_gen:
+            # a NEWER excursion re-priced phase 1 while this rebuild ran:
+            # its statistics are stale — discard and rebuild at the latest
+            # measured operating point instead of installing old physics
+            measured, wsp = self._last_measured
+            self._launch_staged(measured, wsp)
+            return
+        solved, ops, report = res
+        moved = self._td_vdds(solved) != self._td_vdds(self.pol)
+        self.pol = solved
+        self._ops = jnp.asarray(ops, jnp.float32)
+        if self.meter is not None and report is not None:
+            self.meter.install(report)
+        self.swap_log.append({"step": self.steps_run, "kind": "staged",
+                              "ops": np.asarray(ops),
+                              "vdds": self._td_vdds(solved)})
+        self.staged_installs += 1
+        if moved:
+            self.supply_spans += 1
 
     # ------------------------------------------------------------------
     # chaos-schedule consumption
@@ -374,6 +531,13 @@ class ContinuousBatchingEngine:
             self.meter._usage.clear()
         if self.drift is not None:
             self.drift.rearm(self.drift.anchor)
+        if self._staged is not None:      # don't let a warmup-triggered
+            self._staged.wait()           # rebuild land mid-measurement
+            self._staged = None
+        self.swap_log.clear()
+        self.adaptations = 0
+        self.supply_spans = 0
+        self.staged_installs = 0
         self._reset_device_state()
 
     # ------------------------------------------------------------------
@@ -394,7 +558,8 @@ class ContinuousBatchingEngine:
         return len(inflight)
 
     def run(self, requests=None, retry_policy: ft.RetryPolicy | None = None,
-            inject=None, schedule: "ft.FaultSchedule | None" = None) -> dict:
+            inject=None, schedule: "ft.FaultSchedule | None" = None,
+            trace: "ft.TrafficTrace | None" = None) -> dict:
         """Drive the loop to completion under retry protection.
 
         `inject(step_index)` (tests/bench) may raise `ft.Preemption` to
@@ -402,10 +567,15 @@ class ContinuousBatchingEngine:
         is a deterministic `ft.FaultSchedule` consumed fire-once per step:
         preemptions drain-and-retry, stalls sleep (the watchdog flags
         them), drift events scale the measured activity, explorer outages
-        toggle `explorer_up`/`on_outage`.
+        toggle `explorer_up`/`on_outage`.  `trace` is a deterministic
+        `ft.TrafficTrace` replayed against the step counter: per-segment
+        activity scales the measured bit density, sparsity overrides the
+        re-resolve statistic, load throttles admissions.
         """
         if requests is not None:
             self.submit_all(requests)
+        if trace is not None:
+            self.trace = trace
         t0 = self.clock()
 
         def body():
@@ -419,6 +589,12 @@ class ContinuousBatchingEngine:
 
         ft.run_with_retries(body, policy=retry_policy,
                             on_restart=lambda n, e: self.drain())
+        while self._staged is not None:
+            # a rebuild still in flight when the queue drained: land it (or
+            # surface its error) so the summary reflects the final policy;
+            # a stale result relaunches once at the latest statistics
+            self._staged.wait()
+            self._poll_staged()
         return self.summary(self.clock() - t0)
 
     # ------------------------------------------------------------------
@@ -465,9 +641,20 @@ class ContinuousBatchingEngine:
         if self.drift is not None:
             out["p_x_one_measured"] = self.drift.value
             out["drift_excursions"] = self.drift.excursions
+            out["supply_spans"] = self.supply_spans
+            out["staged_installs"] = self.staged_installs
+            out["swap_log"] = [{"step": e["step"], "kind": e["kind"],
+                                "vdds": list(e["vdds"])}
+                               for e in self.swap_log]
+        if self.trace is not None:
+            out["trace"] = {"seed": self.trace.seed,
+                            "segments": len(self.trace.segments),
+                            "total_steps": self.trace.total_steps}
         if self.meter is not None:
             out["energy_j_total"] = self.meter.run_total_energy()
             out["j_per_token"] = (out["energy_j_total"] /
                                   max(1, self.meter.run_total_tokens()))
             out["meter_policy_swaps"] = self.meter.policy_swaps
+            out["rate_epochs"] = self.meter.rate_epochs()
+            out["static_worst_energy_j"] = self.meter.static_worst_energy()
         return out

@@ -109,8 +109,24 @@ def synthetic_requests(n: int, prompt_len: int, gen: int,
     return reqs
 
 
+def parse_trace(spec: str):
+    """``--trace`` value -> `ft.TrafficTrace`: ``@file.json`` loads a
+    saved trace; ``SEED:STEPS[:SEGMENTS]`` generates a seeded one."""
+    from repro import ft
+    if spec.startswith("@"):
+        return ft.TrafficTrace.load(spec[1:])
+    parts = spec.split(":")
+    if len(parts) not in (2, 3):
+        raise ValueError("--trace wants @file.json or SEED:STEPS[:SEGMENTS]"
+                         f", got {spec!r}")
+    seed, steps = int(parts[0]), int(parts[1])
+    n_seg = int(parts[2]) if len(parts) == 3 else 6
+    return ft.TrafficTrace.generate(seed, steps, n_segments=n_seg)
+
+
 def run_scheduler(arch, streams: int, prompt_len: int, gen: int,
-                  capacity: int, seed: int = 0, adapt: bool = False):
+                  capacity: int, seed: int = 0, adapt: bool = False,
+                  trace=None):
     """Continuous-batching serve: ragged streams through the scheduler."""
     # independent key streams: the engine consumes the params seed, the
     # prompt sampler its own fold — mirrors run()'s per-consumer split
@@ -122,7 +138,7 @@ def run_scheduler(arch, streams: int, prompt_len: int, gen: int,
     t_arrival = time.monotonic()
     for r in reqs:
         r.arrival_s = t_arrival
-    out = eng.run(reqs)
+    out = eng.run(reqs, trace=trace)
     print(f"[serve/sched] {out['requests']} requests, "
           f"{out['new_tokens']} tokens in {out['wall_s']:.2f} s "
           f"({out['tokens_per_s']:.1f} tok/s, {out['steps']} steps, "
@@ -138,7 +154,12 @@ def run_scheduler(arch, streams: int, prompt_len: int, gen: int,
     if adapt:
         print(f"[serve/sched] drift: p_x_one={out['p_x_one_measured']:.3f} "
               f"(policy anchor {common.pol_at(eng.pol, 0).p_x_one:.3f}), "
-              f"{out['adaptations']} adaptation(s)")
+              f"{out['adaptations']} adaptation(s), "
+              f"{out['supply_spans']} supply span(s)")
+    if trace is not None:
+        print(f"[serve/sched] trace: seed={trace.seed} "
+              f"{len(trace.segments)} segment(s) / {trace.total_steps} "
+              f"steps; swaps={[e['step'] for e in out['swap_log']]}")
     return out
 
 
@@ -164,6 +185,11 @@ def main():
                     help="scheduler mode: measure activation activity in "
                     "the decode step and hot-swap the TD operating point "
                     "(policy + energy rate) when it drifts")
+    ap.add_argument("--trace", default=None,
+                    help="scheduler mode: replay a deterministic traffic "
+                    "trace through the drift loop — @file.json or "
+                    "SEED:STEPS[:SEGMENTS] for a seeded one (implies the "
+                    "activity/sparsity/load excursions of its segments)")
     ap.add_argument("--td", default=None,
                     choices=[None, "precise", "quant", "td"])
     ap.add_argument("--td-per-layer", default=None,
@@ -179,7 +205,10 @@ def main():
                                 td_attn=args.td_attn)
     if args.scheduler:
         run_scheduler(arch, args.streams, args.prompt_len, args.gen,
-                      args.capacity, seed=args.seed, adapt=args.adapt)
+                      args.capacity, seed=args.seed,
+                      adapt=args.adapt or args.trace is not None,
+                      trace=(parse_trace(args.trace)
+                             if args.trace else None))
     else:
         run(arch, args.batch, args.prompt_len, args.gen, seed=args.seed)
 

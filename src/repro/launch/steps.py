@@ -109,7 +109,11 @@ def build_adaptive_serve_step(arch: ArchConfig, shape: ShapeCfg):
     (`common.runtime_td_policy` — hot-swappable with zero recompiles) and
     (b) a fused running estimate of the activation bit density
     (`ft.drift.measure_p_x_one` over this step's token embeddings), the
-    operating-point statistic the drift detector watches.  Returns
+    operating-point statistic the drift detector watches.  ``active`` is
+    the (B,) occupancy mask of the continuous batch: free slots carry a
+    stale last token, and letting it into the measurement would bias the
+    statistic toward dead traffic.  Another runtime operand — any fill mix
+    reuses the one compiled program.  Returns
     ``(next_tok, new_state, p_x_one)``."""
     from repro.ft import drift as ft_drift
 
@@ -119,14 +123,14 @@ def build_adaptive_serve_step(arch: ArchConfig, shape: ShapeCfg):
     compute_dt = DTYPES[arch.train.compute_dtype]
     bits_a = common.pol_at(pol, 0).bits_a
 
-    def serve_step(params, tok, state, ops):
+    def serve_step(params, tok, state, ops, active):
         p_c = common.cast_tree(params, compute_dt)
         pol_rt = common.runtime_td_policy(pol, ops)
         logits, new_state = api["decode_step"](p_c, tok, state, cfg, pol_rt)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         px = ft_drift.measure_p_x_one(
             common.embed(params["embed"], tok[:, 0]).astype(jnp.float32),
-            bits_a)
+            bits_a, mask=active)
         return next_tok, new_state, px
 
     return serve_step

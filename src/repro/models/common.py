@@ -149,6 +149,35 @@ def td_policy_ops(pol) -> jnp.ndarray:
     return jnp.asarray([pol.sigma_chain, pol.tdc_q], jnp.float32)
 
 
+def td_layer_indices(pol) -> list[int]:
+    """Indices of the "td"-mode layer policies of ``pol`` (all the layers
+    the drift loop re-resolves; a plain TDPolicy is layer 0 or nothing)."""
+    if isinstance(pol, td_policy.NetworkPolicy):
+        return [i for i, p in enumerate(pol.layers) if p.mode == "td"]
+    return [0] if pol.mode == "td" else []
+
+
+def replace_td_layers(pol, solved):
+    """Rebuild ``pol`` with its "td"-mode layers replaced by ``solved``
+    (one new TDPolicy per `td_layer_indices` entry, in order); `top`/
+    `attn` and non-td layers pass through untouched.  The drift loop's
+    policy-set rebuild — used by both the synchronous (sigma, q) hot-swap
+    and the staged supply swap."""
+    idx = td_layer_indices(pol)
+    solved = list(solved)
+    if len(solved) != len(idx):
+        raise ValueError(f"need {len(idx)} solved td layers, "
+                         f"got {len(solved)}")
+    if not idx:
+        return pol
+    if isinstance(pol, td_policy.NetworkPolicy):
+        layers = list(pol.layers)
+        for i, p in zip(idx, solved):
+            layers[i] = p
+        return dataclasses.replace(pol, layers=tuple(layers))
+    return solved[0]
+
+
 # ---------------------------------------------------------------------------
 # Sharding constraints (no-ops outside a mesh context)
 # ---------------------------------------------------------------------------

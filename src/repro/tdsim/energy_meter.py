@@ -136,7 +136,14 @@ class RequestMeter:
 
     `set_policy` re-prices the meter for a drift-adapted operating point:
     energy already banked stays priced at the rate in force when it was
-    spent; only tokens processed AFTER the swap run at the new rate.
+    spent; only tokens processed AFTER the swap run at the new rate.  For
+    the staged (off-thread) rebuild path the re-price splits in two:
+    `price(pol)` runs the expensive `account` WITHOUT touching meter
+    state (safe on a worker thread), and `install(report)` adopts the
+    result atomically at a step boundary.  ``tokens_at_rate[i]`` tallies
+    the tokens banked while ``rate_history[i]`` was in force -- the
+    per-epoch curve the drift benches integrate against the static
+    worst-case rate.
     """
 
     def __init__(self, shapes: list[MatmulShape], pol: TDPolicy,
@@ -146,33 +153,49 @@ class RequestMeter:
         self._usage: dict = {}
         self.policy_swaps = 0
         self.rate_history: list[float] = []
+        self.tokens_at_rate: list[int] = []
         self.set_policy(pol, sigma_max)
         self.policy_swaps = 0       # the initial pricing is not a swap
+
+    def price(self, pol: TDPolicy,
+              sigma_max: float | None = None) -> EnergyReport:
+        """Pure pricing of `pol` (no meter state touched): the expensive
+        half of a re-price, safe to run on a staged-rebuild thread."""
+        return account(self._shapes, pol, self.domain, sigma_max)
+
+    def install(self, report: EnergyReport) -> float:
+        """Adopt a priced report as the rate in force (the cheap, atomic
+        half -- call between decode steps).  Returns the new J/token."""
+        self.per_token_report = report
+        self.e_token = report.total_energy_per_token
+        self.macs_token = report.total_macs_per_token
+        self.policy_swaps += 1
+        self.rate_history.append(self.e_token)
+        self.tokens_at_rate.append(0)
+        return self.e_token
 
     def set_policy(self, pol: TDPolicy,
                    sigma_max: float | None = None) -> float:
         """Re-price future tokens at `pol`'s operating point (drift
         adaptation hot-swap).  Returns the new J/token rate."""
-        self.per_token_report = account(self._shapes, pol, self.domain,
-                                        sigma_max)
-        self.e_token = self.per_token_report.total_energy_per_token
-        self.macs_token = self.per_token_report.total_macs_per_token
-        self.policy_swaps += 1
-        self.rate_history.append(self.e_token)
-        return self.e_token
+        return self.install(self.price(pol, sigma_max))
 
     def _u(self, rid) -> RequestUsage:
         return self._usage.setdefault(rid, RequestUsage())
 
+    def _bank(self, u: RequestUsage, n: int) -> None:
+        u.energy_j += n * self.e_token
+        self.tokens_at_rate[-1] += n
+
     def on_prefill(self, rid, n_tokens: int) -> None:
         u = self._u(rid)
         u.prefill_tokens += int(n_tokens)
-        u.energy_j += int(n_tokens) * self.e_token
+        self._bank(u, int(n_tokens))
 
     def on_decode(self, rid, n_tokens: int = 1) -> None:
         u = self._u(rid)
         u.decode_tokens += int(n_tokens)
-        u.energy_j += int(n_tokens) * self.e_token
+        self._bank(u, int(n_tokens))
 
     def request_energy(self, rid) -> float:
         """Joules attributed to a request so far (prefill + decode)."""
@@ -199,3 +222,18 @@ class RequestMeter:
 
     def run_total_energy(self) -> float:
         return sum(u.energy_j for u in self._usage.values())
+
+    def rate_epochs(self) -> list[dict]:
+        """One row per pricing epoch: the J/token rate in force and the
+        tokens banked at it (the adaptive energy curve, exact by
+        construction: sum(rate*tokens) == run_total_energy())."""
+        return [{"epoch": i, "j_per_token": r, "tokens": t,
+                 "energy_j": r * t}
+                for i, (r, t) in enumerate(zip(self.rate_history,
+                                               self.tokens_at_rate))]
+
+    def static_worst_energy(self) -> float:
+        """What the whole run WOULD have cost priced end-to-end at the
+        most expensive rate ever in force (the no-adaptation margin a
+        static deployment must carry)."""
+        return max(self.rate_history) * self.run_total_tokens()

@@ -137,6 +137,42 @@ def solve_td_policies(specs: Sequence[TDLayerSpec]) -> list[TDPolicy]:
     return out  # type: ignore[return-value]
 
 
+def solve_td_policies_over_vdd(specs: Sequence[TDLayerSpec],
+                               vdds: Sequence[float] | None = None
+                               ) -> list[TDPolicy]:
+    """Supply-spanning batch solve: pick each layer's energy-minimizing
+    Vdd from the grid at ITS OWN input statistics, then solve
+    (R, q, sigma_chain) at the chosen supply.
+
+    This is the drift loop's full re-resolve: where `solve_td_policies`
+    keeps each spec's declared ``vdd`` fixed (the (sigma, q) hot-swap),
+    this routine first runs the scenario grid's Vdd argmin
+    (`optimal_td_vdds`, memoized in the explorer service) at the spec's
+    measured (p_x_one, w_bit_sparsity), so a confirmed traffic excursion
+    moves the SUPPLY too.  ``vdds`` defaults to the paper's supply grid.
+    """
+    specs = list(specs)
+    grid = tuple(scenario_mod.PAPER_VDD_GRID if vdds is None else
+                 (float(v) for v in vdds))
+    order: dict[tuple, list[int]] = {}
+    for i, sp in enumerate(specs):
+        order.setdefault((sp.bits_w, sp.m, sp.tdc_arch, sp.techlib,
+                          round(float(sp.p_x_one), 9),
+                          round(float(sp.w_bit_sparsity), 9)),
+                         []).append(i)
+    resolved: list[TDLayerSpec | None] = [None] * len(specs)
+    for (bits_w, m, tdc_arch, lib, p1, wsp), idxs in order.items():
+        sig = [chain_mod.sigma_max_exact() if specs[i].sigma_max is None
+               else float(specs[i].sigma_max) for i in idxs]
+        v = explorer_mod.service().optimal_td_vdds(
+            [specs[i].n_chain for i in idxs], sig,
+            bits=bits_w, vdds=grid, m=m, tdc_arch=tdc_arch,
+            p_x_one=p1, w_bit_sparsity=wsp, lib=lib)
+        for k, i in enumerate(idxs):
+            resolved[i] = dataclasses.replace(specs[i], vdd=float(v[k]))
+    return solve_td_policies(resolved)  # type: ignore[arg-type]
+
+
 def apply_scenario(specs: Sequence[TDLayerSpec],
                    scenario, corner=None,
                    minimize_vdd: bool = True) -> list[TDLayerSpec]:
